@@ -1,0 +1,50 @@
+//! Mapping-strategy exploration (the paper's second use-case,
+//! Sec. VII-C): spatial mapping vs. weight duplication across 16-macro
+//! organizations (Fig. 11) and the rearrangement study (Fig. 12).
+//!
+//! ```sh
+//! cargo run --release --example mapping_explorer
+//! ```
+
+use ciminus::explore::mapping_study::{run_fig11, run_fig12};
+use ciminus::hw::units::UnitKind;
+use ciminus::report;
+use ciminus::workload::zoo;
+
+fn main() -> anyhow::Result<()> {
+    let r50 = zoo::resnet50(32, 100);
+    let v16 = zoo::vgg16(32, 100);
+
+    println!("Fig. 11: 16 macros, orgs 8x2 / 4x4 / 2x8, hybrid Intra(2,1)+Full(2,16)@0.8\n");
+    let pts = run_fig11(&[&r50, &v16], 0)?;
+    println!("{}", report::mapping_table(&pts).render());
+
+    // the paper's observations, checked live:
+    let best = pts
+        .iter()
+        .filter(|p| p.model.starts_with("resnet50"))
+        .min_by(|a, b| a.energy_pj.partial_cmp(&b.energy_pj).unwrap())
+        .unwrap();
+    println!(
+        "lowest-energy resnet50 config: {} / {} (paper: 4x4 + duplication)\n",
+        best.org, best.strategy
+    );
+
+    println!("Fig. 12: rearrangement on/off, 4x4 org\n");
+    let pts12 = run_fig12(&r50, 0)?;
+    println!("{}", report::rearrange_table(&pts12).render());
+    for p in &pts12 {
+        let bufs = p.report.energy.of(UnitKind::WeightBuf)
+            + p.report.energy.of(UnitKind::GlobalInBuf)
+            + p.report.energy.of(UnitKind::GlobalOutBuf);
+        println!(
+            "  {} rearranged={}: buffer energy {:.3} uJ of {:.3} uJ total",
+            p.strategy,
+            p.rearranged,
+            bufs / 1e6,
+            p.energy_pj / 1e6
+        );
+    }
+    println!("\nFinding 2: utilization rises with rearrangement, but buffer overhead can negate the gain.");
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Quickstart: describe a workload + architecture + sparsity, simulate,
+//! and read the cost report. Run with:
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use ciminus::hw::presets;
+use ciminus::sim::engine::simulate_network_default;
+use ciminus::sparsity::flexblock::FlexBlock;
+use ciminus::workload::zoo;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A workload from the zoo (or build your own via Network's
+    //    builder / JSON import — see workload::import).
+    let net = zoo::resnet18(32, 100);
+    println!("{}", net.describe());
+
+    // 2. An architecture: the paper's 4-macro use-case config
+    //    (1024x32 macros, 32x32 sub-arrays, 2x2 organization).
+    let arch = presets::usecase_arch(4, (2, 2));
+    println!("{}\n", arch.describe());
+
+    // 3. A FlexBlock sparsity description: 80% row-block sparsity.
+    let fb = FlexBlock::row_block(16, 0.8);
+    println!("sparsity: {} = {}\n", fb.name, fb.representation());
+
+    // 4. Simulate sparse vs. the dense baseline (no sparsity hardware).
+    let dense_arch = presets::usecase_dense_baseline(4, (2, 2));
+    let dense = simulate_network_default(&dense_arch, &net, None)?;
+    let sparse = simulate_network_default(&arch, &net, Some(&fb))?;
+
+    println!("{}", dense.summary());
+    println!("{}", sparse.summary());
+    println!(
+        "speedup {:.2}x   energy saving {:.2}x",
+        sparse.speedup_vs(&dense),
+        sparse.energy_saving_vs(&dense)
+    );
+    println!("\nenergy breakdown (sparse):\n{}", sparse.energy_table().render());
+    Ok(())
+}

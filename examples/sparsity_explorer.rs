@@ -1,0 +1,52 @@
+//! Sparsity-pattern exploration (the paper's first use-case, Sec. VII-B):
+//! sweeps the Table II patterns across ratios on ResNet50 dims and prints
+//! the Fig. 8 series. Accuracy columns come from the mini-model artifacts
+//! when available (substitution documented in DESIGN.md §3).
+//!
+//! ```sh
+//! cargo run --release --example sparsity_explorer [-- <model>]
+//! ```
+
+use ciminus::explore::sparsity_study::{fig8_patterns, run_fig8, run_fig9a, RATIOS};
+use ciminus::pruning::workflow::PruningWorkflow;
+use ciminus::report;
+use ciminus::runtime::{Artifacts, ModelSession, Runtime};
+use ciminus::workload::zoo;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "resnet50".into());
+    let net = zoo::by_name(&model, 32, 100)?;
+    println!("sweeping {} patterns x {} ratios on {}...", fig8_patterns(0.8).len(), RATIOS.len(), net.name);
+    let mut pts = run_fig8(&net, &RATIOS, 0)?;
+
+    // attach accuracy from the mini counterpart if artifacts exist
+    let dir = Artifacts::default_dir();
+    if Artifacts::available(&dir) {
+        let mini_name = match model.as_str() {
+            "resnet50" | "resnet18" | "resnet_mini" => "resnet_mini",
+            "vgg16" | "vgg_mini" => "vgg_mini",
+            _ => "mobilenet_mini",
+        };
+        println!("accuracy axis: {mini_name} on SynthCIFAR via PJRT (see DESIGN.md §3)");
+        let arts = Artifacts::load(&dir)?;
+        let rt = Runtime::cpu()?;
+        let session = ModelSession::new(&rt, &arts, mini_name)?;
+        let mini = zoo::by_name(mini_name, 32, 100)?;
+        let wf = PruningWorkflow::default();
+        for p in pts.iter_mut() {
+            let fb = fig8_patterns(p.ratio)
+                .into_iter()
+                .find(|f| f.name == p.pattern)
+                .expect("pattern roundtrip");
+            p.accuracy = Some(session.prune_and_eval(&mini, &fb, &wf)?.accuracy);
+        }
+    } else {
+        println!("(artifacts missing — accuracy column omitted; run `make artifacts`)");
+    }
+
+    println!("{}", report::sparsity_table(&format!("Fig. 8: {}", net.name), &pts).render());
+
+    let pts9 = run_fig9a(&net, 0)?;
+    println!("{}", report::sparsity_table("Fig. 9(a): block sizes @80%", &pts9).render());
+    Ok(())
+}

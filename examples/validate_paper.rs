@@ -1,0 +1,29 @@
+//! Validation against published CIM designs (Sec. VI, Fig. 6): runs the
+//! MARS and SDP scenarios of Table I and compares CIMinus estimates with
+//! the transcribed published results.
+//!
+//! ```sh
+//! cargo run --release --example validate_paper
+//! ```
+
+use ciminus::report;
+use ciminus::validate::{correlation, error_stats, run_validation, sdp_power_breakdown};
+
+fn main() -> anyhow::Result<()> {
+    println!("{}", report::tab1().render());
+    println!("{}", report::tab2().render());
+
+    println!("running MARS + SDP validation scenarios (4 workloads x dense/sparse)...\n");
+    let points = run_validation()?;
+    println!("{}", report::fig6_table(&points).render());
+    let (mean, max) = error_stats(&points);
+    let r = correlation(&points);
+    println!(
+        "Fig. 6(a): pearson r = {r:.3}; margin: mean {mean:.2}%, max {max:.2}% \
+         (paper reports all points within 5.27%)\n"
+    );
+
+    let bd = sdp_power_breakdown()?;
+    println!("{}", report::fig6c_table(&bd).render());
+    Ok(())
+}

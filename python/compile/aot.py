@@ -1,0 +1,248 @@
+"""AOT artifact builder (the entire Python lifetime of the system).
+
+`python -m compile.aot --out ../artifacts` trains the three mini models
+on SynthCIFAR, then writes everything the rust runtime needs:
+
+- weights_<model>.bin      flat f32 LE blobs in param_spec order (w then b
+                           per MVM op) — the reshaped 2-D matrices rust
+                           prunes directly
+- model_<model>_fwd.hlo.txt   fwd(params..., x[B,16,16,3]) -> (logits,)
+                              with the Pallas FlexBlock matmul on the FC
+                              path (interpret-lowered to plain HLO)
+- model_<model>_acts.hlo.txt  fwd returning per-MVM-op input activations
+                              (input-sparsity profiling taps)
+- graph_<model>.json       workload-DAG interchange (ONNX substitute)
+- eval_images.bin / eval_labels.bin / calib_images.bin  SynthCIFAR splits
+- kernel_smoke.hlo.txt     standalone Pallas kernel for runtime checks
+- manifest.json            shapes, offsets, op names, accuracies, hashes
+
+HLO *text* is the interchange format (not serialized protos): jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, models, train
+from .kernels.flexblock_matmul import flexblock_matmul
+
+FWD_BATCH = 256
+ACTS_BATCH = 64
+TRAIN_STEPS = {"resnet_mini": 400, "vgg_mini": 400, "mobilenet_mini": 500}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flat_args(model: str, params) -> list[jnp.ndarray]:
+    """Parameters flattened in the manifest contract order."""
+    out = []
+    for name, _r, _c, _g in models.param_spec(model):
+        out.append(params[name]["w"])
+        out.append(params[name]["b"])
+    return out
+
+
+def unflatten(model: str, args) -> dict:
+    params = {}
+    it = iter(args)
+    for name, _r, _c, _g in models.param_spec(model):
+        params[name] = {"w": next(it), "b": next(it)}
+    return params
+
+
+def lower_fwd(model: str, batch: int) -> str:
+    spec = models.param_spec(model)
+
+    def fn(*args):
+        params = unflatten(model, args[:-1])
+        x = args[-1]
+        return (models.forward(model, params, x, use_pallas=True),)
+
+    arg_specs = []
+    for _name, r, c, _g in spec:
+        arg_specs.append(jax.ShapeDtypeStruct((r, c), jnp.float32))
+        arg_specs.append(jax.ShapeDtypeStruct((c,), jnp.float32))
+    arg_specs.append(jax.ShapeDtypeStruct((batch, data.IMG, data.IMG, 3), jnp.float32))
+    lowered = jax.jit(fn).lower(*arg_specs)
+    return to_hlo_text(lowered)
+
+
+def lower_acts(model: str, batch: int) -> tuple[str, list[str]]:
+    spec = models.param_spec(model)
+    tap_order = [name for name, _r, _c, _g in spec]
+
+    def fn(*args):
+        params = unflatten(model, args[:-1])
+        x = args[-1]
+        logits, taps = models.forward(
+            model, params, x, use_pallas=False, collect_taps=True
+        )
+        # logits first (keeps every parameter live — XLA would otherwise
+        # prune the classifier weights and change the argument arity),
+        # then each tap flattened to 1-D so the rust side reads vectors
+        return (logits,) + tuple(taps[name].reshape(-1) for name in tap_order)
+
+    arg_specs = []
+    for _name, r, c, _g in spec:
+        arg_specs.append(jax.ShapeDtypeStruct((r, c), jnp.float32))
+        arg_specs.append(jax.ShapeDtypeStruct((c,), jnp.float32))
+    arg_specs.append(jax.ShapeDtypeStruct((batch, data.IMG, data.IMG, 3), jnp.float32))
+    lowered = jax.jit(fn).lower(*arg_specs)
+    return to_hlo_text(lowered), tap_order
+
+
+def lower_kernel_smoke() -> str:
+    def fn(x, w, m):
+        return (flexblock_matmul(x, w, m, interpret=True),)
+
+    s = jax.ShapeDtypeStruct
+    lowered = jax.jit(fn).lower(
+        s((8, 64), jnp.float32), s((64, 32), jnp.float32), s((64, 32), jnp.float32)
+    )
+    return to_hlo_text(lowered)
+
+
+def write_bin(path: str, arr: np.ndarray) -> str:
+    b = np.ascontiguousarray(arr).tobytes()
+    with open(path, "wb") as f:
+        f.write(b)
+    return hashlib.sha256(b).hexdigest()[:16]
+
+
+def load_params_from_blob(model: str, path: str):
+    """Rebuild a params dict from an existing weights blob (lets
+    `--reuse-weights` re-lower HLO without retraining)."""
+    blob = np.fromfile(path, dtype=np.float32)
+    params = {}
+    offset = 0
+    for name, r, c, _g in models.param_spec(model):
+        w = blob[offset : offset + r * c].reshape(r, c)
+        b = blob[offset + r * c : offset + r * c + c]
+        params[name] = {"w": jnp.asarray(w), "b": jnp.asarray(b)}
+        offset += r * c + c
+    assert offset == blob.size, f"{model}: blob size mismatch"
+    return params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=0, help="override train steps (0=default)")
+    ap.add_argument(
+        "--reuse-weights",
+        action="store_true",
+        help="skip training when weights_<model>.bin already exists",
+    )
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    manifest: dict = {
+        "format_version": 1,
+        "img": data.IMG,
+        "classes": data.NUM_CLASSES,
+        "fwd_batch": FWD_BATCH,
+        "acts_batch": ACTS_BATCH,
+        "eval_n": data.EVAL_N,
+        "models": {},
+    }
+
+    # ---- dataset ----
+    ex, ey = data.eval_split()
+    tx, _ty = data.train_split()
+    manifest["eval_images_sha"] = write_bin(os.path.join(out, "eval_images.bin"), ex)
+    manifest["eval_labels_sha"] = write_bin(os.path.join(out, "eval_labels.bin"), ey)
+    manifest["calib_images_sha"] = write_bin(
+        os.path.join(out, "calib_images.bin"), tx[:ACTS_BATCH]
+    )
+
+    # ---- kernel smoke ----
+    with open(os.path.join(out, "kernel_smoke.hlo.txt"), "w") as f:
+        f.write(lower_kernel_smoke())
+
+    # ---- models ----
+    for model in models.MODEL_NAMES:
+        weights_path = os.path.join(out, f"weights_{model}.bin")
+        if args.reuse_weights and os.path.exists(weights_path):
+            print(f"== {model}: reusing existing weights ==")
+            params = load_params_from_blob(model, weights_path)
+            ex_j, ey_j = jnp.asarray(ex), jnp.asarray(ey)
+            eval_acc = models.accuracy(model, params, ex_j, ey_j)
+            train_acc = eval_acc
+        else:
+            steps = args.steps or TRAIN_STEPS[model]
+            print(f"== {model}: training {steps} steps ==")
+            params, train_acc, eval_acc = train.train_model(model, steps=steps)
+
+        # weights blob + layout
+        spec = models.param_spec(model)
+        chunks = []
+        layout = []
+        offset = 0
+        for name, r, c, g in spec:
+            w = np.asarray(params[name]["w"], dtype=np.float32)
+            b = np.asarray(params[name]["b"], dtype=np.float32)
+            assert w.shape == (r, c), f"{model}/{name}: {w.shape} != {(r, c)}"
+            layout.append(
+                {
+                    "name": name,
+                    "rows": r,
+                    "cols": c,
+                    "groups": g,
+                    "w_offset": offset,
+                    "b_offset": offset + r * c,
+                }
+            )
+            offset += r * c + c
+            chunks.append(w.reshape(-1))
+            chunks.append(b)
+        blob = np.concatenate(chunks)
+        sha = write_bin(os.path.join(out, f"weights_{model}.bin"), blob)
+
+        print(f"== {model}: lowering fwd/acts to HLO text ==")
+        fwd_hlo = lower_fwd(model, FWD_BATCH)
+        with open(os.path.join(out, f"model_{model}_fwd.hlo.txt"), "w") as f:
+            f.write(fwd_hlo)
+        acts_hlo, tap_order = lower_acts(model, ACTS_BATCH)
+        with open(os.path.join(out, f"model_{model}_acts.hlo.txt"), "w") as f:
+            f.write(acts_hlo)
+        with open(os.path.join(out, f"graph_{model}.json"), "w") as f:
+            json.dump(models.export_graph(model), f, indent=1)
+
+        manifest["models"][model] = {
+            "params": layout,
+            "total_floats": int(offset),
+            "weights_sha": sha,
+            "dense_train_acc": float(train_acc),
+            "dense_eval_acc": float(eval_acc),
+            "taps": tap_order,
+            "fwd_hlo": f"model_{model}_fwd.hlo.txt",
+            "acts_hlo": f"model_{model}_acts.hlo.txt",
+            "weights_bin": f"weights_{model}.bin",
+            "graph_json": f"graph_{model}.json",
+        }
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote artifacts to {out}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,60 @@
+"""SynthCIFAR: a deterministic synthetic image-classification dataset.
+
+Stands in for CIFAR-100/ImageNet (unavailable offline — DESIGN.md §3).
+Ten classes, 16x16 RGB. Each class is a distinct oriented sinusoidal
+grating with a class-specific color balance; samples add Gaussian noise
+and random phase so the task is learnable but not trivial. Everything is
+seeded: the same arrays are regenerated bit-for-bit at every build.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 16
+CHANNELS = 3
+NUM_CLASSES = 10
+TRAIN_N = 4096
+EVAL_N = 1024
+SEED = 0xC1A05
+
+
+def _class_template(cls: int, phase: float) -> np.ndarray:
+    """Oriented grating + color signature for one class."""
+    yy, xx = np.mgrid[0:IMG, 0:IMG].astype(np.float32) / IMG
+    angle = np.pi * cls / NUM_CLASSES
+    freq = 2.0 + (cls % 3)
+    wave = np.sin(2 * np.pi * freq * (np.cos(angle) * xx + np.sin(angle) * yy) + phase)
+    color = np.array(
+        [
+            0.6 + 0.4 * np.cos(2 * np.pi * cls / NUM_CLASSES),
+            0.6 + 0.4 * np.cos(2 * np.pi * cls / NUM_CLASSES + 2.1),
+            0.6 + 0.4 * np.cos(2 * np.pi * cls / NUM_CLASSES + 4.2),
+        ],
+        dtype=np.float32,
+    )
+    return wave[:, :, None] * color[None, None, :]
+
+
+def make_split(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate `n` (image, label) pairs. Images are NHWC float32 in
+    roughly [-1.5, 1.5]; labels int32."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, NUM_CLASSES, size=n).astype(np.int32)
+    images = np.empty((n, IMG, IMG, CHANNELS), dtype=np.float32)
+    for i, cls in enumerate(labels):
+        phase = rng.uniform(0, 2 * np.pi)
+        img = _class_template(int(cls), phase)
+        # heavy noise keeps dense accuracy off the ceiling so the
+        # pruning-accuracy trade-off curves (Fig. 8/9) have dynamic range
+        img = 0.6 * img + rng.normal(0, 0.85, size=img.shape).astype(np.float32)
+        images[i] = img
+    return images, labels
+
+
+def train_split() -> tuple[np.ndarray, np.ndarray]:
+    return make_split(TRAIN_N, SEED)
+
+
+def eval_split() -> tuple[np.ndarray, np.ndarray]:
+    return make_split(EVAL_N, SEED + 1)

@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: activation bit-plane OR profiling.
+
+Computes, for each broadcast group of quantized activations, which bit
+planes contain any set bit — exactly the OR-gate zero-detection network
+the pre-processing units implement (Sec. III-B). The rust simulator's
+input-sparsity model consumes the resulting per-plane activity rates.
+
+Groups map to BlockSpec rows: one grid step loads a (BG, L) tile of
+groups into VMEM and reduces each group's bit planes. interpret=True for
+CPU-PJRT execution (see flexblock_matmul.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BG = 8  # groups per tile
+
+
+def _kernel(q_ref, o_ref, *, bits: int):
+    q = q_ref[...]  # [BG, L] uint32
+    planes = []
+    for b in range(bits):
+        plane = ((q >> jnp.uint32(b)) & jnp.uint32(1)).astype(jnp.float32)
+        planes.append(jnp.max(plane, axis=1))
+    o_ref[...] = jnp.stack(planes, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def bitplane_or(q: jnp.ndarray, bits: int = 8, interpret: bool = True) -> jnp.ndarray:
+    """q: uint32 [G, L] -> float32 [G, bits] OR-activity per bit plane."""
+    g, l = q.shape
+    gp = -(-g // BG) * BG
+    qp = jnp.pad(q, ((0, gp - g), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits),
+        grid=(gp // BG,),
+        in_specs=[pl.BlockSpec((BG, l), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BG, bits), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, bits), jnp.float32),
+        interpret=interpret,
+    )(qp)
+    return out[:g]

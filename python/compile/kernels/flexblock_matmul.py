@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: FlexBlock masked matmul — the CIM-array compute
+hot-spot of a pruned layer.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the CIM sub-array
+(32x32) becomes the BlockSpec tile resident in VMEM; the bit-serial
+input broadcast becomes the K-loop; the adder-tree accumulation becomes
+the MXU contraction. The mask rides along the weight tile so pruned
+cells contribute exactly zero, mirroring weights that are simply absent
+from the array.
+
+Lowered with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is compiled to plain HLO for both pytest and
+the rust runtime. Real-TPU tiling estimates live in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: sub-array-shaped. K tile chosen so one (BV, BK) x (BK, BN)
+# step's operands fit comfortably in VMEM (see DESIGN.md §Perf).
+BV = 32  # vectors per tile (output rows)
+BK = 32  # contraction tile (array rows)
+BN = 32  # output channels per tile (array cols)
+
+
+def _kernel(x_ref, w_ref, m_ref, o_ref, *, n_k: int):
+    """One (v, n) output tile; iterates the K grid axis accumulating into
+    o_ref (revisiting grid semantics: K is the innermost grid axis)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = w_ref[...] * m_ref[...]
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def _pad_to(a: jnp.ndarray, r: int, c: int) -> jnp.ndarray:
+    return jnp.pad(a, ((0, r - a.shape[0]), (0, c - a.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flexblock_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    mask: jnp.ndarray,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """x[V,K] @ (w*mask)[K,N] -> [V,N] via the Pallas tile kernel.
+
+    Shapes need not be tile-multiples; inputs are zero-padded to the
+    grid and the result is sliced back.
+    """
+    v, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert mask.shape == w.shape, "mask must match weights"
+    vp = -(-v // BV) * BV
+    kp = -(-k // BK) * BK
+    np_ = -(-n // BN) * BN
+    xp = _pad_to(x.astype(jnp.float32), vp, kp)
+    wp = _pad_to(w.astype(jnp.float32), kp, np_)
+    mp = _pad_to(mask.astype(jnp.float32), kp, np_)
+    n_k = kp // BK
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(vp // BV, np_ // BN, n_k),
+        in_specs=[
+            pl.BlockSpec((BV, BK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((BK, BN), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((BK, BN), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((BV, BN), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((vp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, mp)
+    return out[:v, :n]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth
+checked by pytest before anything is lowered)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flexblock_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked (FlexBlock-pruned) matmul: x[V,K] @ (w*mask)[K,N] -> [V,N].
+
+    The mask is the FlexBlock sparsity mask over the reshaped weight
+    matrix; in the CIM array the pruned weights simply are not stored, so
+    the arithmetic reference is elementwise masking.
+    """
+    return x @ (w * mask)
+
+
+def bitplane_or_ref(q: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-group OR of each bit plane.
+
+    q: uint32 [G, L] -- quantized activations, G broadcast groups of L
+    values (the inputs sharing one sub-array's rows).
+    Returns float32 [G, bits]: 1.0 where any value in the group has that
+    bit set (the bit-serial cycle must execute), else 0.0.
+    """
+    planes = []
+    for b in range(bits):
+        plane = (q >> b) & 1  # [G, L]
+        planes.append(jnp.max(plane, axis=1))
+    return jnp.stack(planes, axis=1).astype(jnp.float32)
+
+
+def quantize_ref(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Max-abs ReLU quantization to `bits` (matches the rust
+    ActivationProfile::from_values convention)."""
+    maxv = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = (2**bits - 1) / maxv
+    return jnp.round(jnp.maximum(x, 0.0) * scale).astype(jnp.uint32)

@@ -1,0 +1,305 @@
+"""L2 JAX mini models (resnet_mini / vgg_mini / mobilenet_mini).
+
+These must mirror `rust/src/workload/zoo/mini.rs` op-for-op: the rust
+side prunes the exported weight matrices against the same graph, so op
+names, parameter order and reshaped-matrix layout are a contract
+(checked by integration_runtime.rs against the artifact manifest).
+
+Parameter layout: every MVM op stores its weights as the *reshaped 2-D
+matrix* the paper maps onto CIM arrays — rows = in_ch·kh·kw in
+channel-major (c, kh, kw) order, cols = out_ch (depthwise: rows = kh·kw,
+cols = channels, groups recorded in the manifest). Rust therefore
+consumes the blobs directly as `WeightMatrix` without any re-indexing;
+the forward pass reshapes to HWIO internally.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels.flexblock_matmul import flexblock_matmul
+
+MODEL_NAMES = ("resnet_mini", "vgg_mini", "mobilenet_mini")
+NUM_CLASSES = 10
+
+
+# --------------------------------------------------------------------------
+# parameter specs: (name, rows, cols, groups) in rust-zoo topological order
+# --------------------------------------------------------------------------
+
+def param_spec(model: str) -> list[tuple[str, int, int, int]]:
+    if model == "resnet_mini":
+        spec = [("stem", 3 * 9, 16, 1)]
+        for blk, (ic, oc, stride) in {
+            "layer1.0": (16, 16, 1),
+            "layer1.1": (16, 16, 1),
+            "layer2.0": (16, 32, 2),
+            "layer2.1": (32, 32, 1),
+        }.items():
+            spec.append((f"{blk}.conv1", ic * 9, oc, 1))
+            spec.append((f"{blk}.conv2", oc * 9, oc, 1))
+            if ic != oc or stride != 1:
+                spec.append((f"{blk}.down", ic * 1, oc, 1))
+        spec.append(("fc", 32, NUM_CLASSES, 1))
+        return spec
+    if model == "vgg_mini":
+        return [
+            ("conv1_1", 3 * 9, 16, 1),
+            ("conv1_2", 16 * 9, 16, 1),
+            ("conv2_1", 16 * 9, 32, 1),
+            ("conv2_2", 32 * 9, 32, 1),
+            ("fc1", 512, 128, 1),
+            ("fc2", 128, NUM_CLASSES, 1),
+        ]
+    if model == "mobilenet_mini":
+        return [
+            ("stem", 3 * 9, 16, 1),
+            ("block1.expand", 16, 32, 1),
+            ("block1.dw", 9, 32, 32),
+            ("block1.project", 32, 16, 1),
+            ("block2.expand", 16, 32, 1),
+            ("block2.dw", 9, 32, 32),
+            ("block2.project", 32, 32, 1),
+            ("head", 32, 64, 1),
+            ("classifier", 64, NUM_CLASSES, 1),
+        ]
+    raise ValueError(f"unknown model {model!r}")
+
+
+def init_params(model: str, seed: int = 7) -> dict[str, dict[str, jnp.ndarray]]:
+    """He-init parameters in the 2-D matrix layout."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, rows, cols, _groups in param_spec(model):
+        std = float(np.sqrt(2.0 / rows))
+        params[name] = {
+            "w": jnp.asarray(rng.normal(0, std, size=(rows, cols)).astype(np.float32)),
+            "b": jnp.zeros((cols,), jnp.float32),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# layers
+# --------------------------------------------------------------------------
+
+def _conv(p, x, in_ch: int, k: int, stride: int, pad: int, groups: int = 1):
+    """NHWC conv from the 2-D weight layout."""
+    w2d, b = p["w"], p["b"]
+    out_ch = w2d.shape[1]
+    if groups == 1:
+        w = w2d.reshape(in_ch, k, k, out_ch).transpose(1, 2, 0, 3)  # HWIO
+    else:
+        # depthwise: (k*k, ch) -> (k, k, 1, ch)
+        w = w2d.reshape(k, k, 1, out_ch)
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    return y + b
+
+
+def _fc(p, x, use_pallas: bool):
+    w, b = p["w"], p["b"]
+    if use_pallas:
+        ones = jnp.ones_like(w)
+        y = flexblock_matmul(x, w, ones, interpret=True)
+    else:
+        y = x @ w
+    return y + b
+
+
+def _maxpool(x, k: int, s: int):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, k, k, 1), (1, s, s, 1), "VALID"
+    )
+
+
+# --------------------------------------------------------------------------
+# forwards (tap = input activations of each MVM op, for input-sparsity
+# profiling; taps are post-ReLU feature maps exactly as broadcast to rows)
+# --------------------------------------------------------------------------
+
+def forward(
+    model: str,
+    params,
+    x: jnp.ndarray,
+    use_pallas: bool = False,
+    collect_taps: bool = False,
+):
+    taps: dict[str, jnp.ndarray] = {}
+
+    def tap(name, t):
+        if collect_taps:
+            taps[name] = t
+
+    if model == "resnet_mini":
+        tap("stem", x)
+        h = jax.nn.relu(_conv(params["stem"], x, 3, 3, 1, 1))
+        for blk, (ic, oc, stride) in {
+            "layer1.0": (16, 16, 1),
+            "layer1.1": (16, 16, 1),
+            "layer2.0": (16, 32, 2),
+            "layer2.1": (32, 32, 1),
+        }.items():
+            tap(f"{blk}.conv1", h)
+            c1 = jax.nn.relu(_conv(params[f"{blk}.conv1"], h, ic, 3, stride, 1))
+            tap(f"{blk}.conv2", c1)
+            c2 = _conv(params[f"{blk}.conv2"], c1, oc, 3, 1, 1)
+            if ic != oc or stride != 1:
+                tap(f"{blk}.down", h)
+                short = _conv(params[f"{blk}.down"], h, ic, 1, stride, 0)
+            else:
+                short = h
+            h = jax.nn.relu(c2 + short)
+        g = jnp.mean(h, axis=(1, 2))
+        tap("fc", g)
+        logits = _fc(params["fc"], g, use_pallas)
+    elif model == "vgg_mini":
+        tap("conv1_1", x)
+        h = jax.nn.relu(_conv(params["conv1_1"], x, 3, 3, 1, 1))
+        tap("conv1_2", h)
+        h = jax.nn.relu(_conv(params["conv1_2"], h, 16, 3, 1, 1))
+        h = _maxpool(h, 2, 2)
+        tap("conv2_1", h)
+        h = jax.nn.relu(_conv(params["conv2_1"], h, 16, 3, 1, 1))
+        tap("conv2_2", h)
+        h = jax.nn.relu(_conv(params["conv2_2"], h, 32, 3, 1, 1))
+        h = _maxpool(h, 2, 2)
+        flat = h.reshape(h.shape[0], -1)
+        tap("fc1", flat)
+        h = jax.nn.relu(_fc(params["fc1"], flat, use_pallas))
+        tap("fc2", h)
+        logits = _fc(params["fc2"], h, use_pallas)
+    elif model == "mobilenet_mini":
+        tap("stem", x)
+        h = jax.nn.relu(_conv(params["stem"], x, 3, 3, 1, 1))
+        # block1 (residual)
+        tap("block1.expand", h)
+        e = jax.nn.relu(_conv(params["block1.expand"], h, 16, 1, 1, 0))
+        tap("block1.dw", e)
+        d = jax.nn.relu(_conv(params["block1.dw"], e, 32, 3, 1, 1, groups=32))
+        tap("block1.project", d)
+        p1 = _conv(params["block1.project"], d, 32, 1, 1, 0)
+        h = p1 + h
+        # block2 (stride 2, no residual)
+        tap("block2.expand", h)
+        e = jax.nn.relu(_conv(params["block2.expand"], h, 16, 1, 1, 0))
+        tap("block2.dw", e)
+        d = jax.nn.relu(_conv(params["block2.dw"], e, 32, 3, 2, 1, groups=32))
+        tap("block2.project", d)
+        h = _conv(params["block2.project"], d, 32, 1, 1, 0)
+        tap("head", h)
+        h = jax.nn.relu(_conv(params["head"], h, 32, 1, 1, 0))
+        g = jnp.mean(h, axis=(1, 2))
+        tap("classifier", g)
+        logits = _fc(params["classifier"], g, use_pallas)
+    else:
+        raise ValueError(f"unknown model {model!r}")
+
+    if collect_taps:
+        return logits, taps
+    return logits
+
+
+def loss_fn(model: str, params, x, y):
+    logits = forward(model, params, x, use_pallas=False)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def accuracy(model: str, params, x, y, use_pallas: bool = False) -> float:
+    logits = forward(model, params, x, use_pallas=use_pallas)
+    return float(jnp.mean(jnp.argmax(logits, axis=1) == y))
+
+
+# --------------------------------------------------------------------------
+# graph export (the ONNX-substitute JSON interchange; DESIGN.md §3)
+# --------------------------------------------------------------------------
+
+def export_graph(model: str) -> dict:
+    """Emit the workload-DAG JSON mirroring rust's zoo builders.
+
+    Only used for cross-checking the import path; rust has native
+    builders for these graphs.
+    """
+    ops: list[dict] = []
+
+    def add(name, kind, inputs=None, **kw):
+        o = {"name": name, "kind": kind}
+        if inputs is not None:
+            o["inputs"] = inputs
+        o.update(kw)
+        ops.append(o)
+        return len(ops) - 1
+
+    def conv(name, src, ic, oc, k, s, p, groups=1):
+        return add(name, "conv2d", [src], in_ch=ic, out_ch=oc, kh=k, kw=k,
+                   stride=s, pad=p, groups=groups)
+
+    x = add("input", "input", shape=[3, 16, 16])
+    if model == "resnet_mini":
+        c0 = conv("stem", x, 3, 16, 3, 1, 1)
+        h = add("stem_relu", "relu", [c0])
+        for blk, (ic, oc, stride) in {
+            "layer1.0": (16, 16, 1),
+            "layer1.1": (16, 16, 1),
+            "layer2.0": (16, 32, 2),
+            "layer2.1": (32, 32, 1),
+        }.items():
+            c1 = conv(f"{blk}.conv1", h, ic, oc, 3, stride, 1)
+            r1 = add(f"{blk}.relu1", "relu", [c1])
+            c2 = conv(f"{blk}.conv2", r1, oc, oc, 3, 1, 1)
+            short = h
+            if ic != oc or stride != 1:
+                short = conv(f"{blk}.down", h, ic, oc, 1, stride, 0)
+            a = add(f"{blk}.add", "add", [c2, short])
+            h = add(f"{blk}.relu2", "relu", [a])
+        g = add("gap", "gap", [h])
+        add("fc", "fc", [g], in_features=32, out_features=NUM_CLASSES)
+    elif model == "vgg_mini":
+        c = conv("conv1_1", x, 3, 16, 3, 1, 1)
+        r = add("relu1_1", "relu", [c])
+        c = conv("conv1_2", r, 16, 16, 3, 1, 1)
+        r = add("relu1_2", "relu", [c])
+        p = add("pool1", "pool", [r], pool="max", k=2, stride=2)
+        c = conv("conv2_1", p, 16, 32, 3, 1, 1)
+        r = add("relu2_1", "relu", [c])
+        c = conv("conv2_2", r, 32, 32, 3, 1, 1)
+        r = add("relu2_2", "relu", [c])
+        p = add("pool2", "pool", [r], pool="max", k=2, stride=2)
+        f = add("flatten", "flatten", [p])
+        f1 = add("fc1", "fc", [f], in_features=512, out_features=128)
+        rf = add("relu_fc1", "relu", [f1])
+        add("fc2", "fc", [rf], in_features=128, out_features=NUM_CLASSES)
+    elif model == "mobilenet_mini":
+        c0 = conv("stem", x, 3, 16, 3, 1, 1)
+        h = add("stem_relu", "relu", [c0])
+        e = conv("block1.expand", h, 16, 32, 1, 1, 0)
+        re = add("block1.expand_relu", "relu", [e])
+        d = conv("block1.dw", re, 32, 32, 3, 1, 1, groups=32)
+        rd = add("block1.dw_relu", "relu", [d])
+        p1 = conv("block1.project", rd, 32, 16, 1, 1, 0)
+        h = add("block1.add", "add", [p1, h])
+        e = conv("block2.expand", h, 16, 32, 1, 1, 0)
+        re = add("block2.expand_relu", "relu", [e])
+        d = conv("block2.dw", re, 32, 32, 3, 2, 1, groups=32)
+        rd = add("block2.dw_relu", "relu", [d])
+        h = conv("block2.project", rd, 32, 32, 1, 1, 0)
+        ch = conv("head", h, 32, 64, 1, 1, 0)
+        rh = add("head_relu", "relu", [ch])
+        g = add("gap", "gap", [rh])
+        add("classifier", "fc", [g], in_features=64, out_features=NUM_CLASSES)
+    else:
+        raise ValueError(model)
+    return {"name": model, "ops": ops}

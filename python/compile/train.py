@@ -1,0 +1,77 @@
+"""Build-time training for the mini models on SynthCIFAR.
+
+Hand-rolled Adam (no optax offline). Training runs through the pure-jnp
+path (the Pallas kernel has no VJP registered); the pallas path is used
+for the exported inference graphs and is asserted numerically equal by
+pytest.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, models
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train_model(
+    model: str,
+    steps: int = 400,
+    batch: int = 256,
+    lr: float = 2e-3,
+    seed: int = 7,
+    verbose: bool = True,
+):
+    """Train one mini model; returns (params, train_acc, eval_acc)."""
+    xs, ys = data.train_split()
+    params = models.init_params(model, seed=seed)
+    state = adam_init(params)
+
+    @jax.jit
+    def step(params, state, bx, by):
+        loss, grads = jax.value_and_grad(
+            lambda p: models.loss_fn(model, p, bx, by)
+        )(params)
+        params, state = adam_update(params, grads, state, lr=lr)
+        return params, state, loss
+
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    loss = jnp.inf
+    for i in range(steps):
+        idx = rng.integers(0, xs.shape[0], size=batch)
+        params, state, loss = step(params, state, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]))
+        if verbose and (i + 1) % 100 == 0:
+            print(f"  [{model}] step {i + 1}/{steps} loss={float(loss):.4f}")
+    ex, ey = data.eval_split()
+    train_acc = models.accuracy(model, params, jnp.asarray(xs[:1024]), jnp.asarray(ys[:1024]))
+    eval_acc = models.accuracy(model, params, jnp.asarray(ex), jnp.asarray(ey))
+    if verbose:
+        print(
+            f"  [{model}] trained {steps} steps in {time.time() - t0:.1f}s: "
+            f"train_acc={train_acc:.3f} eval_acc={eval_acc:.3f}"
+        )
+    return params, train_acc, eval_acc

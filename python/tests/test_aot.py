@@ -1,0 +1,102 @@
+"""AOT path: HLO-text lowering round-trips through the XLA client and
+the artifact layout contract holds."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, models
+
+
+class TestLowering:
+    def test_kernel_smoke_hlo_parses(self):
+        text = aot.lower_kernel_smoke()
+        assert "ENTRY" in text
+        # pallas interpret mode must lower to plain HLO (no mosaic custom-calls)
+        assert "custom_call_target=\"Mosaic\"" not in text
+
+    def test_fwd_hlo_small_batch(self):
+        # tiny batch keeps this test fast; full batch exercised by `make artifacts`
+        text = aot.lower_fwd("vgg_mini", batch=4)
+        assert "ENTRY" in text
+        n_params = 2 * len(models.param_spec("vgg_mini"))
+        # entry parameter count: weights + biases + input (fusion bodies
+        # also contain parameter() lines, so count the entry block only)
+        entry = text[text.index("ENTRY"):]
+        entry_block = entry[: entry.index("\n}")]
+        assert entry_block.count(" parameter(") == n_params + 1
+
+    def test_acts_hlo_returns_all_taps(self):
+        text, taps = aot.lower_acts("mobilenet_mini", batch=2)
+        assert "ENTRY" in text
+        assert taps == [s[0] for s in models.param_spec("mobilenet_mini")]
+        # every parameter stays live (logits are returned alongside taps)
+        entry = text[text.index("ENTRY"):]
+        entry_block = entry[: entry.index("\n}")]
+        n_params = 2 * len(models.param_spec("mobilenet_mini"))
+        assert entry_block.count(" parameter(") == n_params + 1
+
+    def test_hlo_text_format(self):
+        """The interchange format the rust runtime consumes: HLO text
+        starting with HloModule (real PJRT execution is covered by
+        rust/tests/integration_runtime.rs)."""
+
+        def fn(a, b):
+            return (a @ b + 1.0,)
+
+        s = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+        lowered = jax.jit(fn).lower(s, s)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+
+class TestArtifacts:
+    """Checks against built artifacts; skipped until `make artifacts`."""
+
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            return json.load(f), os.path.dirname(path)
+
+    def test_manifest_covers_all_models(self, manifest):
+        m, _d = manifest
+        assert set(m["models"].keys()) == set(models.MODEL_NAMES)
+
+    def test_weight_blob_sizes(self, manifest):
+        m, d = manifest
+        for name, info in m["models"].items():
+            blob = np.fromfile(os.path.join(d, info["weights_bin"]), dtype=np.float32)
+            assert blob.size == info["total_floats"], name
+            # layout offsets are monotone and in-bounds
+            for p in info["params"]:
+                assert p["w_offset"] + p["rows"] * p["cols"] <= blob.size
+                assert p["b_offset"] + p["cols"] <= blob.size
+
+    def test_param_layout_matches_spec(self, manifest):
+        m, _d = manifest
+        for name, info in m["models"].items():
+            spec = models.param_spec(name)
+            assert [p["name"] for p in info["params"]] == [s[0] for s in spec]
+            for p, (_n, r, c, g) in zip(info["params"], spec):
+                assert (p["rows"], p["cols"], p["groups"]) == (r, c, g)
+
+    def test_trained_accuracy_beats_chance(self, manifest):
+        m, _d = manifest
+        for name, info in m["models"].items():
+            assert info["dense_eval_acc"] > 0.5, f"{name}: {info['dense_eval_acc']}"
+
+    def test_hlo_files_exist(self, manifest):
+        m, d = manifest
+        for info in m["models"].values():
+            for key in ("fwd_hlo", "acts_hlo", "graph_json"):
+                assert os.path.exists(os.path.join(d, info[key]))
+        assert os.path.exists(os.path.join(d, "kernel_smoke.hlo.txt"))

@@ -1,0 +1,98 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles, with
+hypothesis sweeping shapes and sparsity configurations."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bitplane import bitplane_or
+from compile.kernels.flexblock_matmul import flexblock_matmul
+from compile.kernels.ref import bitplane_or_ref, flexblock_matmul_ref, quantize_ref
+
+
+def rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+class TestFlexblockMatmul:
+    def test_exact_small(self):
+        x = jnp.array([[1.0, 2.0], [3.0, 4.0]])
+        w = jnp.array([[1.0, 0.0], [0.0, 1.0]])
+        m = jnp.ones((2, 2))
+        out = flexblock_matmul(x, w, m)
+        np.testing.assert_allclose(out, x, rtol=1e-6)
+
+    def test_mask_zeroes_contributions(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rand(rng, 16, 32))
+        w = jnp.asarray(rand(rng, 32, 8))
+        m = jnp.zeros((32, 8))
+        out = flexblock_matmul(x, w, m)
+        np.testing.assert_allclose(out, np.zeros((16, 8)), atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        v=st.integers(1, 70),
+        k=st.integers(1, 90),
+        n=st.integers(1, 70),
+        density=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, v, k, n, density, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rand(rng, v, k))
+        w = jnp.asarray(rand(rng, k, n))
+        m = jnp.asarray((rng.random((k, n)) < density).astype(np.float32))
+        got = flexblock_matmul(x, w, m)
+        want = flexblock_matmul_ref(x, w, m)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_tile_multiples_fast_path(self):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rand(rng, 64, 96))
+        w = jnp.asarray(rand(rng, 96, 64))
+        m = jnp.ones((96, 64))
+        got = flexblock_matmul(x, w, m)
+        np.testing.assert_allclose(got, x @ w, rtol=2e-4, atol=2e-4)
+
+    def test_shape_mismatch_raises(self):
+        x = jnp.zeros((4, 8))
+        w = jnp.zeros((9, 4))
+        with pytest.raises(AssertionError):
+            flexblock_matmul(x, w, jnp.ones_like(w))
+
+
+class TestBitplane:
+    def test_all_zero_input(self):
+        q = jnp.zeros((4, 16), jnp.uint32)
+        out = bitplane_or(q, 8)
+        np.testing.assert_allclose(out, np.zeros((4, 8)))
+
+    def test_single_bits(self):
+        # one value per group with a single bit set
+        q = jnp.asarray(np.diag([1, 2, 4, 8]).astype(np.uint32))
+        out = np.asarray(bitplane_or(q, 4))
+        np.testing.assert_allclose(out, np.eye(4))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        g=st.integers(1, 40),
+        l=st.integers(1, 64),
+        bits=st.sampled_from([4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, g, l, bits, seed):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.integers(0, 2**bits, size=(g, l)).astype(np.uint32))
+        got = bitplane_or(q, bits)
+        want = bitplane_or_ref(q, bits)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_quantize_roundtrip_properties(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rand(rng, 1000))
+        q = np.asarray(quantize_ref(x, 8))
+        assert q.max() <= 255
+        # negatives are ReLU'd to zero
+        assert (q[np.asarray(x) < 0] == 0).all()

@@ -1,0 +1,78 @@
+"""L2 model correctness: shapes, pallas/jnp path equality, graph export
+consistency, trainability."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, models, train
+
+
+@pytest.fixture(scope="module")
+def batch():
+    xs, ys = data.make_split(16, 123)
+    return jnp.asarray(xs), jnp.asarray(ys)
+
+
+@pytest.mark.parametrize("model", models.MODEL_NAMES)
+class TestForward:
+    def test_output_shape(self, model, batch):
+        x, _ = batch
+        p = models.init_params(model)
+        logits = models.forward(model, p, x)
+        assert logits.shape == (16, models.NUM_CLASSES)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_pallas_path_matches_jnp(self, model, batch):
+        x, _ = batch
+        p = models.init_params(model)
+        a = models.forward(model, p, x, use_pallas=False)
+        b = models.forward(model, p, x, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+    def test_taps_cover_every_mvm_op(self, model, batch):
+        x, _ = batch
+        p = models.init_params(model)
+        _logits, taps = models.forward(model, p, x, collect_taps=True)
+        spec_names = {s[0] for s in models.param_spec(model)}
+        assert set(taps.keys()) == spec_names
+
+    def test_param_spec_matches_params(self, model, batch):
+        p = models.init_params(model)
+        for name, r, c, _g in models.param_spec(model):
+            assert p[name]["w"].shape == (r, c)
+            assert p[name]["b"].shape == (c,)
+
+    def test_graph_export_schema(self, model, batch):
+        g = models.export_graph(model)
+        assert g["name"] == model
+        kinds = [o["kind"] for o in g["ops"]]
+        assert kinds[0] == "input"
+        # every MVM param has a graph node of matching name
+        names = {o["name"] for o in g["ops"]}
+        for s in models.param_spec(model):
+            assert s[0] in names, f"{s[0]} missing from exported graph"
+
+
+class TestTraining:
+    def test_short_training_reduces_loss(self):
+        xs, ys = data.train_split()
+        x, y = jnp.asarray(xs[:256]), jnp.asarray(ys[:256])
+        p0 = models.init_params("vgg_mini")
+        loss0 = float(models.loss_fn("vgg_mini", p0, x, y))
+        p, _ta, _ea = train.train_model("vgg_mini", steps=30, verbose=False)
+        loss1 = float(models.loss_fn("vgg_mini", p, x, y))
+        assert loss1 < loss0, f"{loss1} !< {loss0}"
+
+    def test_dataset_determinism(self):
+        a_x, a_y = data.make_split(32, 99)
+        b_x, b_y = data.make_split(32, 99)
+        np.testing.assert_array_equal(a_x, b_x)
+        np.testing.assert_array_equal(a_y, b_y)
+        c_x, _c_y = data.make_split(32, 100)
+        assert not np.array_equal(a_x, c_x)
+
+    def test_dataset_class_balance(self):
+        _x, y = data.make_split(1000, 5)
+        counts = np.bincount(y, minlength=10)
+        assert (counts > 50).all(), counts

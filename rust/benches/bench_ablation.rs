@@ -1,0 +1,27 @@
+//! Ablation benches (DESIGN.md §6): modeling-choice sensitivity.
+use ciminus::explore::ablation_study::{pipeline_overlap, policy_comparison, subarray_granularity};
+use ciminus::util::bench::bench_header;
+use ciminus::util::table::Table;
+use ciminus::workload::zoo;
+
+fn print_points(title: &str, pts: &[ciminus::explore::ablation_study::AblationPoint]) {
+    let mut t = Table::new(&["config", "cycles", "energy(uJ)", "skip%"]).with_title(title);
+    for p in pts {
+        t.row(vec![
+            p.label.clone(),
+            p.cycles.to_string(),
+            format!("{:.3}", p.energy_pj / 1e6),
+            format!("{:.1}", p.skip_ratio * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn main() {
+    bench_header("ablations");
+    let net = zoo::resnet50(32, 100);
+    print_points("ablation 1: zero-detect granularity (sub-array rows)", &subarray_granularity(&net).unwrap());
+    print_points("ablation 2: double buffering (Eq. 3 overlap)", &pipeline_overlap(&net).unwrap());
+    print_points("ablation 3: mapping policy @ hybrid 0.8, 16 macros", &policy_comparison(&net).unwrap());
+    print_points("ablation 4: activation bit width", &ciminus::explore::ablation_study::bit_width(&net).unwrap());
+}

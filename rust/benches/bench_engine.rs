@@ -1,0 +1,67 @@
+//! Engine micro-benchmarks (the §Perf profiling targets): mask
+//! generation, compression, mapping, simulation on the largest layers.
+use ciminus::hw::presets;
+use ciminus::mapping::duplication::Strategy;
+use ciminus::mapping::planner::{plan, MappingOptions};
+use ciminus::mapping::tiling::tile_op;
+use ciminus::pruning::workflow::PruningWorkflow;
+use ciminus::sim::engine::{simulate, SimOptions};
+use ciminus::sim::input_sparsity::InputProfiles;
+use ciminus::sparsity::compress::{compress, CompressedLayout};
+use ciminus::sparsity::flexblock::FlexBlock;
+use ciminus::sparsity::mask::{random_mask, LayerCtx};
+use ciminus::util::bench::{bench_header, black_box, Bencher};
+use ciminus::util::rng::Pcg32;
+use ciminus::workload::zoo;
+
+fn main() {
+    bench_header("engine micro-benchmarks");
+    let b = Bencher::quick();
+    let ctx = LayerCtx { per_channel: 9 };
+    let fb = FlexBlock::hybrid(2, 16, 0.8);
+
+    // L3 hot path 1: mask generation on the largest resnet50 layer (4608x512)
+    let s = b.run("mask_gen_4608x512_hybrid", || {
+        let mut rng = Pcg32::new(7);
+        random_mask(&fb, 4608, 512, ctx, &mut rng)
+    });
+    println!("{}", s.report_line());
+
+    // hot path 2: compression analysis
+    let mut rng = Pcg32::new(7);
+    let mask = random_mask(&fb, 4608, 512, ctx, &mut rng);
+    let s = b.run("compress_4608x512_hybrid", || compress(&fb, &mask, ctx));
+    println!("{}", s.report_line());
+
+    // hot path 3: tiling of a big compressed layout
+    let arch = presets::usecase_arch(16, (4, 4));
+    let layout = compress(&fb, &mask, ctx);
+    let dims = ciminus::workload::op::MvmDims { rows: 4608, cols: 512, n_vectors: 1024, groups: 1 };
+    let s = b.run("tile_op_16macros", || {
+        tile_op(&arch, &dims, &layout, Strategy::Duplicate).rounds.len()
+    });
+    println!("{}", s.report_line());
+
+    // hot path 4: whole-network plan+simulate (the Fig. 7 unit)
+    let net = zoo::resnet50(32, 100);
+    let wf = PruningWorkflow::default();
+    let prune = wf.run_uniform(&net, &fb, None).unwrap();
+    let profiles = InputProfiles::synthetic(&net, 8, 0.55, 1);
+    let s = b.run("plan_resnet50", || {
+        plan(&arch, &net, Some(&prune), MappingOptions::default()).unwrap().ops.len()
+    });
+    println!("{}", s.report_line());
+    let mapping = plan(&arch, &net, Some(&prune), MappingOptions::default()).unwrap();
+    let s = b.run("simulate_resnet50", || {
+        simulate(&arch, &net, &mapping, Some(&profiles), SimOptions::default())
+            .unwrap()
+            .total_cycles
+    });
+    println!("{}", s.report_line());
+
+    // baseline: dense layout sanity
+    let s = b.run("dense_layout_alloc", || {
+        black_box(CompressedLayout::dense(4608, 512)).comp_rows
+    });
+    println!("{}", s.report_line());
+}

@@ -1,0 +1,24 @@
+//! Fig. 10: input-sparsity exploitation across models, weight patterns
+//! and ratios (with/without skip support).
+use ciminus::explore::input_study::{run_dense_models, run_ratio_sweep, run_weight_patterns};
+use ciminus::report;
+use ciminus::util::bench::{bench_header, Bencher};
+use ciminus::workload::zoo;
+
+fn main() {
+    bench_header("Fig. 10 — input sparsity");
+    let r50 = zoo::resnet50(32, 100);
+    let v16 = zoo::vgg16(32, 100);
+    let mb = zoo::mobilenetv2(32, 100);
+    let dense = run_dense_models(&[&r50, &v16, &mb], 0.55, 0).expect("dense");
+    println!("{}", report::input_sparsity_table("dense models", &dense).render());
+    let pats = run_weight_patterns(&r50, 0).expect("patterns");
+    println!("{}", report::input_sparsity_table("weight patterns @80% (resnet50)", &pats).render());
+    let ratios = run_ratio_sweep(&r50, &[0.5, 0.6, 0.7, 0.8, 0.9], 0).expect("ratios");
+    println!("{}", report::input_sparsity_table("row-wise ratio sweep", &ratios).render());
+    let b = Bencher::quick();
+    let s = b.run("fig10_dense_models", || {
+        run_dense_models(&[&r50], 0.55, 0).unwrap().len()
+    });
+    println!("{}", s.report_line());
+}

@@ -1,0 +1,17 @@
+//! Fig. 11: spatial mapping vs weight duplication across 16-macro
+//! organizations for ResNet50 and VGG16.
+use ciminus::explore::mapping_study::run_fig11;
+use ciminus::report;
+use ciminus::util::bench::{bench_header, Bencher};
+use ciminus::workload::zoo;
+
+fn main() {
+    bench_header("Fig. 11 — mapping strategies");
+    let r50 = zoo::resnet50(32, 100);
+    let v16 = zoo::vgg16(32, 100);
+    let pts = run_fig11(&[&r50, &v16], 0).expect("fig11");
+    println!("{}", report::mapping_table(&pts).render());
+    let b = Bencher::quick();
+    let s = b.run("fig11_grid", || run_fig11(&[&r50], 0).unwrap().len());
+    println!("{}", s.report_line());
+}

@@ -1,0 +1,31 @@
+//! Fig. 12: weight-data rearrangement on/off — energy breakdown,
+//! latency and utilization on the 4x4 organization.
+use ciminus::explore::mapping_study::run_fig12;
+use ciminus::hw::units::UnitKind;
+use ciminus::report;
+use ciminus::util::bench::{bench_header, Bencher};
+use ciminus::workload::zoo;
+
+fn main() {
+    bench_header("Fig. 12 — rearrangement");
+    let r50 = zoo::resnet50(32, 100);
+    let pts = run_fig12(&r50, 0).expect("fig12");
+    println!("{}", report::rearrange_table(&pts).render());
+    println!("normalized energy breakdown:");
+    for p in &pts {
+        let e = &p.report.energy;
+        let buf = e.of(UnitKind::WeightBuf) + e.of(UnitKind::GlobalInBuf) + e.of(UnitKind::GlobalOutBuf);
+        let array = e.of(UnitKind::CimArray) + e.of(UnitKind::AdderTree) + e.of(UnitKind::ShiftAdd);
+        println!(
+            "  {:<10} R={} array {:>5.1}%  buffers {:>5.1}%  other {:>5.1}%",
+            p.strategy,
+            p.rearranged,
+            array / e.total_pj * 100.0,
+            buf / e.total_pj * 100.0,
+            (e.total_pj - array - buf) / e.total_pj * 100.0
+        );
+    }
+    let b = Bencher::quick();
+    let s = b.run("fig12_four_configs", || run_fig12(&r50, 0).unwrap().len());
+    println!("{}", s.report_line());
+}

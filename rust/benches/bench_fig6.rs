@@ -1,0 +1,18 @@
+//! Fig. 6: validation against MARS and SDP — reported vs estimated
+//! speedups/energy savings, SDP power breakdown, and the error margin.
+use ciminus::report;
+use ciminus::util::bench::{bench_header, Bencher};
+use ciminus::validate::{error_stats, run_validation, sdp_power_breakdown};
+
+fn main() {
+    bench_header("Fig. 6 — validation vs MARS/SDP");
+    let points = run_validation().expect("validation runs");
+    println!("{}", report::fig6_table(&points).render());
+    let (mean, max) = error_stats(&points);
+    println!("margin: mean {mean:.2}% max {max:.2}% (paper: all within 5.27%)\n");
+    let bd = sdp_power_breakdown().expect("breakdown");
+    println!("{}", report::fig6c_table(&bd).render());
+    let b = Bencher::quick();
+    let s = b.run("full_validation_suite", || run_validation().unwrap().len());
+    println!("{}", s.report_line());
+}

@@ -1,0 +1,58 @@
+//! Fig. 7: framework runtime & scalability — how long CIMinus itself
+//! takes across models, sparsity patterns, ratios and macro counts.
+//! (The paper reports <100 s per configuration; see EXPERIMENTS.md.)
+use ciminus::hw::presets;
+use ciminus::sim::engine::simulate_network_default;
+use ciminus::sparsity::flexblock::FlexBlock;
+use ciminus::util::bench::{bench_header, Bencher};
+use ciminus::workload::zoo;
+
+fn main() {
+    bench_header("Fig. 7 — framework runtime & scalability");
+    let b = Bencher::quick();
+    let hybrid = FlexBlock::hybrid(2, 16, 0.8);
+
+    // across models (4-macro, 80% hybrid + input sparsity)
+    for model in ["mobilenetv2", "resnet18", "resnet50", "vgg16"] {
+        let net = zoo::by_name(model, 32, 100).unwrap();
+        let arch = presets::usecase_arch(4, (2, 2));
+        let s = b.run(&format!("simulate_{model}_4m_hybrid0.8"), || {
+            simulate_network_default(&arch, &net, Some(&hybrid)).unwrap().total_cycles
+        });
+        println!("{}", s.report_line());
+    }
+
+    // across sparsity patterns on resnet50
+    let net = zoo::resnet50(32, 100);
+    for fb in [
+        FlexBlock::row_wise(0.8),
+        FlexBlock::row_block(16, 0.8),
+        FlexBlock::column_block(16, 0.8),
+        FlexBlock::hybrid(2, 16, 0.8),
+    ] {
+        let arch = presets::usecase_arch(4, (2, 2));
+        let s = b.run(&format!("simulate_resnet50_{}", fb.name), || {
+            simulate_network_default(&arch, &net, Some(&fb)).unwrap().total_cycles
+        });
+        println!("{}", s.report_line());
+    }
+
+    // across sparsity ratios
+    for r in [0.5, 0.7, 0.9] {
+        let fb = FlexBlock::hybrid(2, 16, r);
+        let arch = presets::usecase_arch(4, (2, 2));
+        let s = b.run(&format!("simulate_resnet50_ratio{r}"), || {
+            simulate_network_default(&arch, &net, Some(&fb)).unwrap().total_cycles
+        });
+        println!("{}", s.report_line());
+    }
+
+    // across macro counts (scalability: runtime tracks workload, not hw)
+    for (n, org) in [(4, (2, 2)), (16, (4, 4)), (64, (8, 8))] {
+        let arch = presets::usecase_arch(n, org);
+        let s = b.run(&format!("simulate_resnet50_{n}macros"), || {
+            simulate_network_default(&arch, &net, Some(&hybrid)).unwrap().total_cycles
+        });
+        println!("{}", s.report_line());
+    }
+}

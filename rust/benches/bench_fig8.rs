@@ -1,0 +1,18 @@
+//! Fig. 8: speedup / energy saving / (accuracy) across the Table II
+//! sparsity patterns and ratios 0.5–0.9 on ResNet50.
+use ciminus::explore::sparsity_study::{run_fig8, RATIOS};
+use ciminus::report;
+use ciminus::util::bench::{bench_header, Bencher};
+use ciminus::workload::zoo;
+
+fn main() {
+    bench_header("Fig. 8 — sparsity exploitation on ResNet50");
+    let net = zoo::resnet50(32, 100);
+    let pts = run_fig8(&net, &RATIOS, 0).expect("sweep");
+    println!("{}", report::sparsity_table("Fig. 8 (accuracy via e2e_pipeline/sparsity_explorer)", &pts).render());
+    let b = Bencher::quick();
+    let s = b.run("fig8_full_sweep_resnet50", || {
+        run_fig8(&net, &RATIOS, 0).unwrap().len()
+    });
+    println!("{}", s.report_line());
+}

@@ -1,0 +1,28 @@
+//! Fig. 9: block-size sweep @80% (a) and cross-model comparison (b).
+use ciminus::explore::sparsity_study::{run_fig9a, run_fig9b};
+use ciminus::report;
+use ciminus::util::bench::{bench_header, Bencher};
+use ciminus::workload::zoo;
+
+fn main() {
+    bench_header("Fig. 9 — block sizes and architectures @80%");
+    let r50 = zoo::resnet50(32, 100);
+    let pts = run_fig9a(&r50, 0).expect("fig9a");
+    println!("{}", report::sparsity_table("Fig. 9(a): block sizes", &pts).render());
+
+    let v16 = zoo::vgg16(32, 100);
+    let mb = zoo::mobilenetv2(32, 100);
+    let pts_b = run_fig9b(&[&r50, &v16, &mb], 0).expect("fig9b");
+    let flat: Vec<_> = pts_b
+        .into_iter()
+        .map(|(m, mut p)| {
+            p.pattern = format!("{m}/{}", p.pattern);
+            p
+        })
+        .collect();
+    println!("{}", report::sparsity_table("Fig. 9(b): models", &flat).render());
+
+    let b = Bencher::quick();
+    let s = b.run("fig9a_sweep", || run_fig9a(&r50, 0).unwrap().len());
+    println!("{}", s.report_line());
+}

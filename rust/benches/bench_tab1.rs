@@ -1,0 +1,13 @@
+//! Table I: validation-architecture summary + preset construction cost.
+use ciminus::report;
+use ciminus::util::bench::{bench_header, Bencher};
+
+fn main() {
+    bench_header("Table I — validation architectures");
+    println!("{}", report::tab1().render());
+    let b = Bencher::quick();
+    let s = b.run("arch_preset_construction", || {
+        (ciminus::hw::presets::mars(), ciminus::hw::presets::sdp())
+    });
+    println!("{}", s.report_line());
+}

@@ -1,0 +1,24 @@
+//! Table II: FlexBlock representations of the named sparsity patterns,
+//! plus mask-generation throughput per pattern.
+use ciminus::report;
+use ciminus::sparsity::mask::{random_mask, LayerCtx};
+use ciminus::util::bench::{bench_header, Bencher};
+use ciminus::util::rng::Pcg32;
+
+fn main() {
+    bench_header("Table II — FlexBlock representations");
+    println!("{}", report::tab2().render());
+    let b = Bencher::quick();
+    for fb in [
+        ciminus::sparsity::flexblock::FlexBlock::row_wise(0.8),
+        ciminus::sparsity::flexblock::FlexBlock::row_block(16, 0.8),
+        ciminus::sparsity::flexblock::FlexBlock::column_block(16, 0.8),
+        ciminus::sparsity::flexblock::FlexBlock::hybrid(2, 16, 0.8),
+    ] {
+        let s = b.run(&format!("mask_4608x512_{}", fb.name), || {
+            let mut rng = Pcg32::new(1);
+            random_mask(&fb, 4608, 512, LayerCtx { per_channel: 9 }, &mut rng)
+        });
+        println!("{}", s.report_line());
+    }
+}

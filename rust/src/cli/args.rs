@@ -1,0 +1,106 @@
+//! Minimal argument parser (no clap offline): `--key value` / `--flag`
+//! pairs plus positional arguments, with typed accessors and helpful
+//! errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(key.to_string(), v);
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn mixed_args() {
+        let a = parse(&["simulate", "--arch", "mars", "--ratio", "0.8", "--rearrange"]);
+        assert_eq!(a.positional, vec!["simulate"]);
+        assert_eq!(a.str_or("arch", "x"), "mars");
+        assert_eq!(a.f64_or("ratio", 0.0).unwrap(), 0.8);
+        assert!(a.bool("rearrange"));
+        assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--threads=4", "--name=my model"]);
+        assert_eq!(a.usize_or("threads", 0).unwrap(), 4);
+        assert_eq!(a.str_or("name", ""), "my model");
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["--ratio", "abc"]);
+        assert!(a.f64_or("ratio", 0.0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--verbose"]);
+        assert!(a.bool("verbose"));
+    }
+}

@@ -1,0 +1,439 @@
+//! The `ciminus` command-line interface: simulate | validate | explore |
+//! prune | profile | zoo | report.
+
+pub mod args;
+pub mod pattern;
+
+use crate::explore::{input_study, mapping_study, sparsity_study};
+use crate::hw::arch::Architecture;
+use crate::hw::presets;
+use crate::mapping::duplication::{Strategy, StrategyPolicy};
+use crate::mapping::planner::{plan, MappingOptions};
+use crate::pruning::workflow::PruningWorkflow;
+use crate::runtime::{Artifacts, ModelSession, Runtime};
+use crate::sim::engine::{simulate, SimOptions};
+use crate::sim::input_sparsity::InputProfiles;
+use crate::util::json::Json;
+use crate::workload::{graph::Network, import, zoo};
+use anyhow::Result;
+use args::Args;
+use pattern::parse_pattern;
+
+pub const USAGE: &str = "\
+ciminus — cost modeling for sparse DNN workloads on SRAM-based digital CIM
+usage: ciminus <command> [options]
+
+commands:
+  zoo [model]                      list/describe built-in workloads
+  simulate  --arch <preset|file> --model <zoo|file.json>
+            [--pattern P --ratio R] [--strategy auto|sp|dp] [--rearrange]
+            [--no-input-sparsity] [--detail]
+  validate                         Fig. 6 validation vs MARS/SDP
+  explore   --study fig8|fig9|fig10|fig11|fig12 [--model M] [--threads N]
+  prune     --model <mini> --pattern P --ratio R [--artifacts DIR]
+                                   PJRT accuracy eval of pruned artifacts
+  profile   --model <mini> [--artifacts DIR]
+                                   PJRT activation bit-plane profiling
+  report    --all [--out DIR]      regenerate all tables (ASCII + CSV)
+  search    --model M [--macros N] [--max-sparsity S] [--min-util U]
+                                   Pareto design-space search
+  trace     --model M [--arch A] [--pattern P --ratio R] [--limit N]
+                                   per-round schedule + bound analysis
+
+patterns: row_wise | row_block[:w] | column_wise | channel_wise |
+          column_block[:h] | intra:m | hybrid:m[:w] | hybrid_row_wise:m |
+          full:MxN | dense
+";
+
+fn load_arch(spec: &str) -> Result<Architecture> {
+    if spec.ends_with(".json") {
+        Architecture::from_json(&Json::parse_file(std::path::Path::new(spec))?)
+    } else {
+        presets::by_name(spec)
+    }
+}
+
+fn load_net(spec: &str) -> Result<Network> {
+    if spec.ends_with(".json") {
+        import::network_from_file(std::path::Path::new(spec))
+    } else {
+        zoo::by_name(spec, 32, 100)
+    }
+}
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn run<I: IntoIterator<Item = String>>(raw: I) -> Result<i32> {
+    let a = Args::parse(raw);
+    let cmd = a.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        "zoo" => cmd_zoo(&a),
+        "simulate" => cmd_simulate(&a),
+        "validate" => cmd_validate(&a),
+        "explore" => cmd_explore(&a),
+        "prune" => cmd_prune(&a),
+        "profile" => cmd_profile(&a),
+        "report" => cmd_report(&a),
+        "search" => cmd_search(&a),
+        "trace" => cmd_trace(&a),
+        other => {
+            eprintln!("unknown command `{other}`\n{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+fn cmd_zoo(a: &Args) -> Result<i32> {
+    if let Some(model) = a.positional.get(1) {
+        let net = load_net(model)?;
+        println!("{}", net.describe());
+        let s = net.stats();
+        println!(
+            "params: {:.2} M   MACs: {:.3} G   conv {} / dwconv {} / fc {}",
+            s.params as f64 / 1e6,
+            s.macs as f64 / 1e9,
+            s.n_conv,
+            s.n_dwconv,
+            s.n_fc
+        );
+    } else {
+        println!("available workloads: {}", zoo::ZOO_NAMES.join(", "));
+        println!("architecture presets: mars, sdp, usecase4, usecase16");
+    }
+    Ok(0)
+}
+
+fn cmd_simulate(a: &Args) -> Result<i32> {
+    let arch_spec = a.str_or("arch", "usecase4");
+    let mut arch = load_arch(arch_spec)?;
+    let net = load_net(a.str_or("model", "resnet50"))?;
+    let ratio = a.f64_or("ratio", 0.8)?;
+    let fb = parse_pattern(a.str_or("pattern", "dense"), ratio)?;
+    if a.bool("no-input-sparsity") {
+        arch.sparsity.input_skipping = false;
+    }
+    let policy = match a.str_or("strategy", "auto") {
+        "auto" => StrategyPolicy::Auto,
+        s => StrategyPolicy::Fixed(Strategy::parse(s)?),
+    };
+    let opts = MappingOptions {
+        policy,
+        rearrange: a.bool("rearrange"),
+        rearrange_slice: a.usize_or("rearrange-slice", 16)?,
+        ..Default::default()
+    };
+    let prune = if fb.is_dense() {
+        None
+    } else {
+        Some(PruningWorkflow::default().run_uniform(&net, &fb, None)?)
+    };
+    let mapping = plan(&arch, &net, prune.as_ref(), opts)?;
+    let profiles = InputProfiles::synthetic(&net, arch.input_bits, 0.55, 0xC1A0);
+    let rep = simulate(&arch, &net, &mapping, Some(&profiles), SimOptions::default())?;
+    println!("{}", arch.describe());
+    println!("{}", rep.summary());
+    if a.bool("detail") {
+        println!("{}", rep.op_table().render());
+        println!("{}", rep.energy_table().render());
+    }
+    Ok(0)
+}
+
+fn cmd_validate(_a: &Args) -> Result<i32> {
+    println!("{}", crate::report::tab1().render());
+    let points = crate::validate::run_validation()?;
+    println!("{}", crate::report::fig6_table(&points).render());
+    let (mean, max) = crate::validate::error_stats(&points);
+    let r = crate::validate::harness::correlation(&points);
+    println!("error margin: mean {mean:.2}%  max {max:.2}%  pearson r = {r:.3}");
+    let bd = crate::validate::sdp_power_breakdown()?;
+    println!("{}", crate::report::fig6c_table(&bd).render());
+    Ok(0)
+}
+
+fn cmd_explore(a: &Args) -> Result<i32> {
+    let threads = a.usize_or("threads", 0)?;
+    let study = a.str_or("study", "fig8");
+    match study {
+        "fig8" => {
+            let net = load_net(a.str_or("model", "resnet50"))?;
+            let pts = sparsity_study::run_fig8(&net, &sparsity_study::RATIOS, threads)?;
+            println!(
+                "{}",
+                crate::report::sparsity_table(
+                    &format!("Fig. 8: sparsity patterns on {}", net.name),
+                    &pts
+                )
+                .render()
+            );
+        }
+        "fig9" => {
+            let net = load_net(a.str_or("model", "resnet50"))?;
+            let pts = sparsity_study::run_fig9a(&net, threads)?;
+            println!(
+                "{}",
+                crate::report::sparsity_table("Fig. 9(a): block sizes @80%", &pts).render()
+            );
+            let r50 = zoo::resnet50(32, 100);
+            let v16 = zoo::vgg16(32, 100);
+            let mb = zoo::mobilenetv2(32, 100);
+            let pts_b = sparsity_study::run_fig9b(&[&r50, &v16, &mb], threads)?;
+            let flat: Vec<_> = pts_b
+                .into_iter()
+                .map(|(m, mut p)| {
+                    p.pattern = format!("{m}/{}", p.pattern);
+                    p
+                })
+                .collect();
+            println!(
+                "{}",
+                crate::report::sparsity_table("Fig. 9(b): models @80%", &flat).render()
+            );
+        }
+        "fig10" => {
+            let r50 = zoo::resnet50(32, 100);
+            let v16 = zoo::vgg16(32, 100);
+            let mb = zoo::mobilenetv2(32, 100);
+            let dense = input_study::run_dense_models(&[&r50, &v16, &mb], 0.55, threads)?;
+            println!(
+                "{}",
+                crate::report::input_sparsity_table("Fig. 10: dense models", &dense).render()
+            );
+            let pats = input_study::run_weight_patterns(&r50, threads)?;
+            println!(
+                "{}",
+                crate::report::input_sparsity_table("Fig. 10: weight patterns @80%", &pats)
+                    .render()
+            );
+            let ratios = input_study::run_ratio_sweep(&r50, &[0.5, 0.6, 0.7, 0.8, 0.9], threads)?;
+            println!(
+                "{}",
+                crate::report::input_sparsity_table("Fig. 10: ratio sweep (row-wise)", &ratios)
+                    .render()
+            );
+        }
+        "fig11" => {
+            let r50 = zoo::resnet50(32, 100);
+            let v16 = zoo::vgg16(32, 100);
+            let pts = mapping_study::run_fig11(&[&r50, &v16], threads)?;
+            println!("{}", crate::report::mapping_table(&pts).render());
+        }
+        "fig12" => {
+            let net = load_net(a.str_or("model", "resnet50"))?;
+            let pts = mapping_study::run_fig12(&net, threads)?;
+            println!("{}", crate::report::rearrange_table(&pts).render());
+        }
+        other => anyhow::bail!("unknown study `{other}`"),
+    }
+    Ok(0)
+}
+
+fn artifacts_from(a: &Args) -> Result<Artifacts> {
+    let dir = a
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Artifacts::default_dir);
+    anyhow::ensure!(
+        Artifacts::available(&dir),
+        "artifacts not found in {} — run `make artifacts`",
+        dir.display()
+    );
+    Artifacts::load(&dir)
+}
+
+fn cmd_prune(a: &Args) -> Result<i32> {
+    let arts = artifacts_from(a)?;
+    let model = a.str_or("model", "resnet_mini");
+    let ratio = a.f64_or("ratio", 0.8)?;
+    let fb = parse_pattern(a.str_or("pattern", "row_wise"), ratio)?;
+    let rt = Runtime::cpu()?;
+    let session = ModelSession::new(&rt, &arts, model)?;
+    let net = zoo::by_name(model, 32, 100)?;
+    let wf = PruningWorkflow::default();
+    let ev = session.prune_and_eval(&net, &fb, &wf)?;
+    println!(
+        "{model} + {}: accuracy {:.2}% (dense {:.2}%), weight sparsity {:.1}%",
+        fb.name,
+        ev.accuracy * 100.0,
+        ev.dense_accuracy * 100.0,
+        ev.weight_sparsity * 100.0
+    );
+    Ok(0)
+}
+
+fn cmd_profile(a: &Args) -> Result<i32> {
+    let arts = artifacts_from(a)?;
+    let model = a.str_or("model", "resnet_mini");
+    let rt = Runtime::cpu()?;
+    let session = ModelSession::new(&rt, &arts, model)?;
+    let ma = arts.model(model)?;
+    let profiles = session.profile_activations(&ma.blob, 8)?;
+    println!("activation bit-plane profiles for {model} (8-bit, calib batch):");
+    for (name, p) in &profiles {
+        println!(
+            "  {name:<20} skip@G=1 {:>5.1}%  G=2 {:>5.1}%  G=32 {:>5.1}%",
+            p.skip_ratio(1) * 100.0,
+            p.skip_ratio(2) * 100.0,
+            p.skip_ratio(32) * 100.0
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_report(a: &Args) -> Result<i32> {
+    let out_dir = std::path::PathBuf::from(a.str_or("out", "report_out"));
+    std::fs::create_dir_all(&out_dir)?;
+    let threads = a.usize_or("threads", 0)?;
+    let t1 = crate::report::tab1();
+    let t2 = crate::report::tab2();
+    println!("{}", t1.render());
+    println!("{}", t2.render());
+    t1.write_csv(&out_dir.join("tab1.csv"))?;
+    t2.write_csv(&out_dir.join("tab2.csv"))?;
+    if a.bool("all") {
+        let points = crate::validate::run_validation()?;
+        let f6 = crate::report::fig6_table(&points);
+        println!("{}", f6.render());
+        f6.write_csv(&out_dir.join("fig6.csv"))?;
+        let net = zoo::resnet50(32, 100);
+        let pts = sparsity_study::run_fig8(&net, &sparsity_study::RATIOS, threads)?;
+        let f8 = crate::report::sparsity_table("Fig. 8", &pts);
+        f8.write_csv(&out_dir.join("fig8.csv"))?;
+        println!("{}", f8.render());
+        let v16 = zoo::vgg16(32, 100);
+        let f11 = crate::report::mapping_table(&mapping_study::run_fig11(&[&net, &v16], threads)?);
+        f11.write_csv(&out_dir.join("fig11.csv"))?;
+        println!("{}", f11.render());
+        let f12 = crate::report::rearrange_table(&mapping_study::run_fig12(&net, threads)?);
+        f12.write_csv(&out_dir.join("fig12.csv"))?;
+        println!("{}", f12.render());
+    }
+    println!("CSV written to {}", out_dir.display());
+    Ok(0)
+}
+
+fn cmd_search(a: &Args) -> Result<i32> {
+    use crate::explore::search::{search, Constraints};
+    let net = load_net(a.str_or("model", "resnet50"))?;
+    let n_macros = a.usize_or("macros", 16)?;
+    let cons = Constraints {
+        max_sparsity: a.get("max-sparsity").map(|v| v.parse()).transpose()?,
+        min_utilization: a.get("min-util").map(|v| v.parse()).transpose()?,
+    };
+    let ratios = [0.5, 0.7, 0.8, 0.9];
+    println!(
+        "searching {} candidates on {} macros...",
+        crate::explore::search::candidates(n_macros, &ratios).len(),
+        n_macros
+    );
+    let (all, pareto) = search(&net, n_macros, &ratios, cons, a.usize_or("threads", 0)?)?;
+    println!("{} feasible points, {} Pareto-optimal:\n", all.len(), pareto.len());
+    let mut t = crate::util::table::Table::new(&[
+        "pattern", "sparsity", "org", "strategy", "cycles", "energy(uJ)", "util%",
+    ])
+    .with_title("Pareto frontier (latency vs energy)");
+    let mut sorted = pareto.clone();
+    sorted.sort_by_key(|p| p.cycles);
+    for p in &sorted {
+        t.row(vec![
+            p.pattern.clone(),
+            format!("{:.2}", p.ratio),
+            format!("{}x{}", p.org.0, p.org.1),
+            p.strategy.to_string(),
+            p.cycles.to_string(),
+            format!("{:.3}", p.energy_pj / 1e6),
+            format!("{:.1}", p.utilization * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(0)
+}
+
+fn cmd_trace(a: &Args) -> Result<i32> {
+    let arch = load_arch(a.str_or("arch", "usecase4"))?;
+    let net = load_net(a.str_or("model", "resnet_mini"))?;
+    let ratio = a.f64_or("ratio", 0.8)?;
+    let fb = parse_pattern(a.str_or("pattern", "dense"), ratio)?;
+    let prune = if fb.is_dense() {
+        None
+    } else {
+        Some(PruningWorkflow::default().run_uniform(&net, &fb, None)?)
+    };
+    let mapping = plan(&arch, &net, prune.as_ref(), MappingOptions::default())?;
+    let t = crate::sim::trace::trace_mapping(&arch, &net, &mapping, arch.input_bits as f64);
+    println!("{}", t.render(a.usize_or("limit", 40)?));
+    println!("bound histogram:");
+    for (b, f) in t.bound_histogram() {
+        println!("  {:<10} {:>5.1}%", b.label(), f * 100.0);
+    }
+    println!("\nhotspots:");
+    for (op, cyc) in t.hotspots(8) {
+        println!("  {op:<26} {cyc}");
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn search_and_trace_commands_run() {
+        assert_eq!(
+            run(["search", "--model", "resnet_mini", "--macros", "4"]
+                .iter()
+                .map(|s| s.to_string()))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run(["trace", "--model", "resnet_mini", "--pattern", "row_wise", "--limit", "5"]
+                .iter()
+                .map(|s| s.to_string()))
+            .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn load_arch_presets_and_errors() {
+        assert!(load_arch("mars").is_ok());
+        assert!(load_arch("nope").is_err());
+    }
+
+    #[test]
+    fn help_runs() {
+        assert_eq!(run(vec!["help".to_string()]).unwrap(), 0);
+    }
+
+    #[test]
+    fn unknown_command_exit_code() {
+        assert_eq!(run(vec!["frobnicate".to_string()]).unwrap(), 2);
+    }
+
+    #[test]
+    fn zoo_lists() {
+        assert_eq!(run(vec!["zoo".to_string()]).unwrap(), 0);
+        assert_eq!(
+            run(vec!["zoo".to_string(), "vgg_mini".to_string()]).unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn simulate_small_model() {
+        let args = vec![
+            "simulate".to_string(),
+            "--model".to_string(),
+            "resnet_mini".to_string(),
+            "--pattern".to_string(),
+            "row_wise".to_string(),
+            "--ratio".to_string(),
+            "0.8".to_string(),
+        ];
+        assert_eq!(run(args).unwrap(), 0);
+    }
+}

@@ -1,0 +1,80 @@
+//! CLI sparsity-pattern mini-language:
+//!
+//! `row_wise` | `row_block[:w]` | `column_wise` | `channel_wise` |
+//! `column_block[:h]` | `intra:m` | `hybrid:m[:w]` | `hybrid_row_wise:m`
+//! | `full:MxN` | `dense`
+//!
+//! combined with a `--ratio` value (overall sparsity).
+
+use crate::sparsity::flexblock::FlexBlock;
+
+pub fn parse_pattern(spec: &str, ratio: f64) -> anyhow::Result<FlexBlock> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    let usize_at = |i: usize, default: usize| -> anyhow::Result<usize> {
+        match parts.get(i) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad size `{v}` in pattern `{spec}`")),
+        }
+    };
+    let fb = match parts[0] {
+        "dense" => FlexBlock::dense(),
+        "row_wise" | "rw" => FlexBlock::row_wise(ratio),
+        "row_block" | "rb" => FlexBlock::row_block(usize_at(1, 16)?, ratio),
+        "column_wise" | "cw" | "filter_wise" => FlexBlock::column_wise(ratio),
+        "channel_wise" | "ch" => FlexBlock::channel_wise(ratio),
+        "column_block" | "cb" => FlexBlock::column_block(usize_at(1, 16)?, ratio),
+        "intra" => FlexBlock::intra(usize_at(1, 2)?, ratio),
+        "hybrid" => FlexBlock::hybrid(usize_at(1, 2)?, usize_at(2, 16)?, ratio),
+        "hybrid_row_wise" | "hrw" => FlexBlock::hybrid_row_wise(usize_at(1, 2)?, ratio),
+        "full" => {
+            let dims = parts
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("full pattern needs MxN, e.g. full:2x8"))?;
+            let (m, n) = dims
+                .split_once('x')
+                .ok_or_else(|| anyhow::anyhow!("bad dims `{dims}`"))?;
+            FlexBlock::full_block(m.parse()?, n.parse()?, ratio)
+        }
+        other => anyhow::bail!(
+            "unknown pattern `{other}` (row_wise|row_block[:w]|column_wise|channel_wise|\
+             column_block[:h]|intra:m|hybrid:m[:w]|hybrid_row_wise:m|full:MxN|dense)"
+        ),
+    };
+    fb.validate()?;
+    Ok(fb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_forms() {
+        for (spec, name) in [
+            ("row_wise", "Row-wise"),
+            ("rb:8", "Row-block(8)"),
+            ("column_wise", "Column-wise"),
+            ("channel_wise", "Channel-wise"),
+            ("cb:32", "Column-block(32)"),
+            ("intra:4", "Intra(4,1)"),
+            ("hybrid:2:16", "1:2+Row-block(16)"),
+            ("hrw:2", "1:2+Row-wise"),
+            ("full:2x8", "FullBlock(2,8)"),
+        ] {
+            let fb = parse_pattern(spec, 0.8).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(fb.name, name, "{spec}");
+        }
+        assert!(parse_pattern("dense", 0.8).unwrap().is_dense());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_pattern("wat", 0.8).is_err());
+        assert!(parse_pattern("full:2", 0.8).is_err());
+        assert!(parse_pattern("rb:x", 0.8).is_err());
+        // invalid ratio caught by validate
+        assert!(parse_pattern("row_wise", 1.5).is_err());
+    }
+}

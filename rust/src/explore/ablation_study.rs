@@ -1,0 +1,155 @@
+//! Ablations of CIMinus's own modeling choices (DESIGN.md §6): which
+//! parts of the architecture/model drive the headline numbers.
+//!
+//! 1. zero-detect granularity: sub-array height sets the OR-group size —
+//!    the knob separating MARS-like (64-row) from SDP-like (1-row)
+//!    input-sparsity behavior;
+//! 2. buffer double-buffering: the Eq. 3 overlap terms on/off;
+//! 3. mapping policy: Auto vs forced spatial vs forced duplication.
+
+use crate::hw::presets;
+use crate::mapping::duplication::{Strategy, StrategyPolicy};
+use crate::mapping::planner::{plan, MappingOptions};
+use crate::pruning::workflow::PruningWorkflow;
+use crate::sim::engine::{simulate, SimOptions};
+use crate::sim::input_sparsity::InputProfiles;
+use crate::sparsity::flexblock::FlexBlock;
+use crate::workload::graph::Network;
+
+#[derive(Debug, Clone)]
+pub struct AblationPoint {
+    pub label: String,
+    pub cycles: u64,
+    pub energy_pj: f64,
+    pub skip_ratio: f64,
+}
+
+/// Ablation 1: sub-array height ∈ {1, 8, 32} at fixed macro geometry.
+pub fn subarray_granularity(net: &Network) -> anyhow::Result<Vec<AblationPoint>> {
+    let mut out = Vec::new();
+    for sub_rows in [1usize, 8, 32] {
+        let mut arch = presets::usecase_arch(4, (2, 2));
+        arch.cim.sub_rows = sub_rows;
+        arch.name = format!("usecase_sub{sub_rows}");
+        let profiles = InputProfiles::synthetic(net, 8, 0.55, 0xAB1);
+        let mapping = plan(&arch, net, None, MappingOptions::default())?;
+        let rep = simulate(&arch, net, &mapping, Some(&profiles), SimOptions::default())?;
+        out.push(AblationPoint {
+            label: format!("sub_rows={sub_rows}"),
+            cycles: rep.total_cycles,
+            energy_pj: rep.energy.total_pj,
+            skip_ratio: rep.mean_skip_ratio,
+        });
+    }
+    Ok(out)
+}
+
+/// Ablation 2: ping-pong buffering on/off (Eq. 3 overlap).
+pub fn pipeline_overlap(net: &Network) -> anyhow::Result<Vec<AblationPoint>> {
+    let mut out = Vec::new();
+    for pp in [true, false] {
+        let mut arch = presets::usecase_arch(4, (2, 2));
+        arch.global_in_buf.ping_pong = pp;
+        arch.global_out_buf.ping_pong = pp;
+        let profiles = InputProfiles::synthetic(net, 8, 0.55, 0xAB2);
+        let mapping = plan(&arch, net, None, MappingOptions::default())?;
+        let rep = simulate(&arch, net, &mapping, Some(&profiles), SimOptions::default())?;
+        out.push(AblationPoint {
+            label: format!("ping_pong={pp}"),
+            cycles: rep.total_cycles,
+            energy_pj: rep.energy.total_pj,
+            skip_ratio: rep.mean_skip_ratio,
+        });
+    }
+    Ok(out)
+}
+
+/// Ablation 3: mapping policy comparison under sparsity.
+pub fn policy_comparison(net: &Network) -> anyhow::Result<Vec<AblationPoint>> {
+    let fb = FlexBlock::hybrid(2, 16, 0.8);
+    let prune = PruningWorkflow::default().run_uniform(net, &fb, None)?;
+    let mut out = Vec::new();
+    for (label, policy) in [
+        ("auto", StrategyPolicy::Auto),
+        ("spatial", StrategyPolicy::Fixed(Strategy::Spatial)),
+        ("duplicate", StrategyPolicy::Fixed(Strategy::Duplicate)),
+    ] {
+        let arch = presets::usecase_arch(16, (4, 4));
+        let profiles = InputProfiles::synthetic(net, 8, 0.55, 0xAB3);
+        let opts = MappingOptions {
+            policy,
+            ..Default::default()
+        };
+        let mapping = plan(&arch, net, Some(&prune), opts)?;
+        let rep = simulate(&arch, net, &mapping, Some(&profiles), SimOptions::default())?;
+        out.push(AblationPoint {
+            label: label.to_string(),
+            cycles: rep.total_cycles,
+            energy_pj: rep.energy.total_pj,
+            skip_ratio: rep.mean_skip_ratio,
+        });
+    }
+    Ok(out)
+}
+
+/// Ablation 4: activation bit width (bit-serial depth) ∈ {4, 8, 12}.
+/// Latency scales ~linearly with bits; the zero-bit skip ratio shifts
+/// because low-precision quantization concentrates values.
+pub fn bit_width(net: &Network) -> anyhow::Result<Vec<AblationPoint>> {
+    let mut out = Vec::new();
+    for bits in [4usize, 8, 12] {
+        let mut arch = presets::usecase_arch(4, (2, 2));
+        arch.input_bits = bits;
+        let profiles = InputProfiles::synthetic(net, bits, 0.55, 0xAB4);
+        let mapping = plan(&arch, net, None, MappingOptions::default())?;
+        let rep = simulate(&arch, net, &mapping, Some(&profiles), SimOptions::default())?;
+        out.push(AblationPoint {
+            label: format!("input_bits={bits}"),
+            cycles: rep.total_cycles,
+            energy_pj: rep.energy.total_pj,
+            skip_ratio: rep.mean_skip_ratio,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn finer_subarrays_skip_more() {
+        let net = zoo::resnet_mini();
+        let pts = subarray_granularity(&net).unwrap();
+        // skip ratio strictly decreases with group size
+        assert!(pts[0].skip_ratio > pts[1].skip_ratio);
+        assert!(pts[1].skip_ratio > pts[2].skip_ratio);
+        // and buys latency
+        assert!(pts[0].cycles < pts[2].cycles);
+    }
+
+    #[test]
+    fn overlap_never_slower() {
+        let net = zoo::resnet_mini();
+        let pts = pipeline_overlap(&net).unwrap();
+        assert!(pts[0].cycles <= pts[1].cycles, "ping-pong helps or ties");
+    }
+
+    #[test]
+    fn more_bits_cost_more_cycles() {
+        let net = zoo::resnet_mini();
+        let pts = bit_width(&net).unwrap();
+        assert!(pts[0].cycles < pts[1].cycles);
+        assert!(pts[1].cycles < pts[2].cycles);
+    }
+
+    #[test]
+    fn auto_policy_at_least_as_good_as_worst_fixed() {
+        let net = zoo::resnet_mini();
+        let pts = policy_comparison(&net).unwrap();
+        let auto = pts[0].cycles;
+        let worst = pts.iter().skip(1).map(|p| p.cycles).max().unwrap();
+        assert!(auto <= worst, "auto {auto} > worst fixed {worst}");
+    }
+}

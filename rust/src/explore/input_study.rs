@@ -1,0 +1,142 @@
+//! Input-sparsity exploitation study (Fig. 10): skippable ratios and the
+//! speedups/energy savings they buy, across models, weight-sparsity
+//! patterns and ratios.
+
+use super::sweep::parallel_map;
+use crate::hw::presets;
+use crate::mapping::planner::{plan, MappingOptions};
+use crate::pruning::workflow::PruningWorkflow;
+use crate::sim::engine::{simulate, SimOptions};
+use crate::sim::input_sparsity::InputProfiles;
+use crate::sparsity::flexblock::FlexBlock;
+use crate::workload::graph::Network;
+
+/// One Fig. 10 measurement: the same configuration with (I) and without
+/// (W) input-sparsity support.
+#[derive(Debug, Clone)]
+pub struct InputSparsityPoint {
+    pub label: String,
+    pub skip_ratio: f64,
+    pub speedup_from_input: f64,
+    pub energy_saving_from_input: f64,
+}
+
+fn run_pair(
+    net: &Network,
+    fb: Option<&FlexBlock>,
+    profiles: &InputProfiles,
+    label: &str,
+) -> anyhow::Result<InputSparsityPoint> {
+    let mut arch = presets::usecase_arch(4, (2, 2));
+    let prune = match fb {
+        Some(fb) => Some(PruningWorkflow::default().run_uniform(net, fb, None)?),
+        None => None,
+    };
+    let mapping = plan(&arch, net, prune.as_ref(), MappingOptions::default())?;
+    arch.sparsity.input_skipping = false;
+    let without = simulate(&arch, net, &mapping, Some(profiles), SimOptions::default())?;
+    arch.sparsity.input_skipping = true;
+    let with = simulate(&arch, net, &mapping, Some(profiles), SimOptions::default())?;
+    Ok(InputSparsityPoint {
+        label: label.to_string(),
+        skip_ratio: with.mean_skip_ratio,
+        speedup_from_input: with.speedup_vs(&without),
+        energy_saving_from_input: with.energy_saving_vs(&without),
+    })
+}
+
+/// Fig. 10 left: input sparsity on dense models.
+pub fn run_dense_models(
+    nets: &[&Network],
+    zero_frac: f64,
+    threads: usize,
+) -> anyhow::Result<Vec<InputSparsityPoint>> {
+    let jobs: Vec<&Network> = nets.to_vec();
+    let results = parallel_map(jobs, threads, |net| {
+        let profiles = InputProfiles::synthetic(net, 8, zero_frac, 0xF16_10);
+        run_pair(net, None, &profiles, &format!("{} (dense)", net.name))
+    });
+    results.into_iter().collect()
+}
+
+/// Fig. 10 middle: interaction with weight-sparsity patterns at 80%.
+/// Sparser weights shift activation distributions toward more zeros
+/// (`zero_frac` raised with weight sparsity, the paper's observation).
+pub fn run_weight_patterns(
+    net: &Network,
+    threads: usize,
+) -> anyhow::Result<Vec<InputSparsityPoint>> {
+    let patterns = vec![
+        FlexBlock::row_wise(0.8),
+        FlexBlock::column_wise(0.8),
+        FlexBlock::channel_wise(0.8),
+        FlexBlock::row_block(16, 0.8),
+        FlexBlock::hybrid(2, 16, 0.8),
+        FlexBlock::intra(2, 0.5),
+    ];
+    let results = parallel_map(patterns, threads, |fb| {
+        let profiles = InputProfiles::synthetic(net, 8, 0.62, 0xF16_10);
+        run_pair(net, Some(&fb), &profiles, &fb.name)
+    });
+    results.into_iter().collect()
+}
+
+/// Fig. 10 right: row-wise pattern across weight-sparsity ratios.
+pub fn run_ratio_sweep(
+    net: &Network,
+    ratios: &[f64],
+    threads: usize,
+) -> anyhow::Result<Vec<InputSparsityPoint>> {
+    let jobs: Vec<f64> = ratios.to_vec();
+    let results = parallel_map(jobs, threads, |r| {
+        // activation zero-fraction grows with weight sparsity
+        let zero_frac = 0.5 + 0.25 * r;
+        let profiles = InputProfiles::synthetic(net, 8, zero_frac, 0xF16_10);
+        let fb = FlexBlock::row_wise(r);
+        run_pair(net, Some(&fb), &profiles, &format!("Row-wise@{r:.1}"))
+    });
+    results.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn dense_models_gain_from_input_sparsity() {
+        let a = zoo::resnet_mini();
+        let b = zoo::vgg_mini();
+        let pts = run_dense_models(&[&a, &b], 0.55, 0).unwrap();
+        for p in &pts {
+            assert!(p.speedup_from_input >= 1.0, "{}: {}", p.label, p.speedup_from_input);
+            assert!(p.skip_ratio > 0.0);
+        }
+    }
+
+    #[test]
+    fn intra_skips_less_than_coarse() {
+        let net = zoo::resnet_mini();
+        let pts = run_weight_patterns(&net, 0).unwrap();
+        let row = pts.iter().find(|p| p.label == "Row-wise").unwrap();
+        let intra = pts.iter().find(|p| p.label.starts_with("Intra")).unwrap();
+        assert!(
+            intra.skip_ratio <= row.skip_ratio + 1e-9,
+            "intra {} vs row {}",
+            intra.skip_ratio,
+            row.skip_ratio
+        );
+    }
+
+    #[test]
+    fn gains_grow_with_weight_sparsity() {
+        let net = zoo::resnet_mini();
+        let pts = run_ratio_sweep(&net, &[0.5, 0.9], 0).unwrap();
+        assert!(
+            pts[1].speedup_from_input >= pts[0].speedup_from_input * 0.98,
+            "sparser model skips more: {} vs {}",
+            pts[1].speedup_from_input,
+            pts[0].speedup_from_input
+        );
+    }
+}

@@ -1,0 +1,168 @@
+//! Mapping-strategy exploration (Sec. VII-C, Fig. 11/12): spatial
+//! mapping vs. weight duplication across 16-macro organizations, and the
+//! effect of ragged-matrix rearrangement.
+
+use super::sweep::parallel_map;
+use crate::hw::presets;
+use crate::mapping::duplication::{Strategy, StrategyPolicy};
+use crate::mapping::planner::{plan, MappingOptions};
+use crate::pruning::workflow::PruningWorkflow;
+use crate::sim::engine::{simulate, SimOptions};
+use crate::sim::input_sparsity::InputProfiles;
+use crate::sim::report::SimReport;
+use crate::sparsity::flexblock::FlexBlock;
+use crate::workload::graph::Network;
+
+/// One Fig. 11 cell: (model, organization, strategy) → cost triple.
+#[derive(Debug, Clone)]
+pub struct MappingPoint {
+    pub model: String,
+    pub org: String,
+    pub strategy: String,
+    pub energy_pj: f64,
+    pub latency_cycles: u64,
+    pub utilization: f64,
+}
+
+/// The Fig. 11 organizations of the 16-macro architecture.
+pub const ORGS: [(usize, usize); 3] = [(8, 2), (4, 4), (2, 8)];
+
+fn run_one(
+    net: &Network,
+    org: (usize, usize),
+    strategy: Strategy,
+    fb: &FlexBlock,
+    rearrange: bool,
+) -> anyhow::Result<SimReport> {
+    let arch = presets::usecase_arch(16, org);
+    let prune = PruningWorkflow::default().run_uniform(net, fb, None)?;
+    let opts = MappingOptions {
+        policy: StrategyPolicy::Fixed(strategy),
+        rearrange,
+        ..Default::default()
+    };
+    let mapping = plan(&arch, net, Some(&prune), opts)?;
+    let profiles = InputProfiles::synthetic(net, arch.input_bits, 0.6, 0xF16_11);
+    simulate(&arch, net, &mapping, Some(&profiles), SimOptions::default())
+}
+
+/// Fig. 11: sweep organizations × strategies for the given networks at
+/// the hybrid 80% pattern.
+pub fn run_fig11(nets: &[&Network], threads: usize) -> anyhow::Result<Vec<MappingPoint>> {
+    let fb = FlexBlock::hybrid(2, 16, 0.8);
+    let mut jobs = Vec::new();
+    for net in nets {
+        for org in ORGS {
+            for strat in [Strategy::Spatial, Strategy::Duplicate] {
+                jobs.push((*net, org, strat));
+            }
+        }
+    }
+    let results = parallel_map(jobs, threads, |(net, org, strat)| {
+        run_one(net, org, strat, &fb, false).map(|rep| MappingPoint {
+            model: net.name.clone(),
+            org: format!("{}x{}", org.0, org.1),
+            strategy: strat.label().to_string(),
+            energy_pj: rep.energy.total_pj,
+            latency_cycles: rep.total_cycles,
+            utilization: rep.mean_utilization,
+        })
+    });
+    results.into_iter().collect()
+}
+
+/// One Fig. 12 row: rearrangement off/on for a strategy.
+#[derive(Debug, Clone)]
+pub struct RearrangePoint {
+    pub strategy: String,
+    pub rearranged: bool,
+    pub energy_pj: f64,
+    pub latency_cycles: u64,
+    pub utilization: f64,
+    pub report: SimReport,
+}
+
+/// Fig. 12: hybrid Intra(2,1)+Full(2,16) on the 4×4 organization, with
+/// and without weight-data rearrangement, for both strategies.
+pub fn run_fig12(net: &Network, threads: usize) -> anyhow::Result<Vec<RearrangePoint>> {
+    let fb = FlexBlock::hybrid(2, 16, 0.8);
+    let mut jobs = Vec::new();
+    for strat in [Strategy::Spatial, Strategy::Duplicate] {
+        for rearr in [false, true] {
+            jobs.push((strat, rearr));
+        }
+    }
+    let results = parallel_map(jobs, threads, |(strat, rearr)| {
+        run_one(net, (4, 4), strat, &fb, rearr).map(|rep| RearrangePoint {
+            strategy: strat.label().to_string(),
+            rearranged: rearr,
+            energy_pj: rep.energy.total_pj,
+            latency_cycles: rep.total_cycles,
+            utilization: rep.mean_utilization,
+            report: rep,
+        })
+    });
+    results.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn fig11_grid_complete() {
+        let net = zoo::resnet_mini();
+        let pts = run_fig11(&[&net], 0).unwrap();
+        assert_eq!(pts.len(), ORGS.len() * 2);
+        for p in &pts {
+            assert!(p.energy_pj > 0.0);
+            assert!(p.latency_cycles > 0);
+        }
+    }
+
+    #[test]
+    fn duplication_raises_utilization_for_conv_models() {
+        let net = zoo::resnet_mini();
+        let pts = run_fig11(&[&net], 0).unwrap();
+        for org in ORGS {
+            let label = format!("{}x{}", org.0, org.1);
+            let sp = pts
+                .iter()
+                .find(|p| p.org == label && p.strategy == "spatial")
+                .unwrap();
+            let dp = pts
+                .iter()
+                .find(|p| p.org == label && p.strategy == "duplicate")
+                .unwrap();
+            assert!(
+                dp.utilization > sp.utilization,
+                "{label}: dup {} <= sp {}",
+                dp.utilization,
+                sp.utilization
+            );
+        }
+    }
+
+    #[test]
+    fn fig12_rearrangement_improves_utilization() {
+        let net = zoo::resnet_mini();
+        let pts = run_fig12(&net, 0).unwrap();
+        for strat in ["spatial", "duplicate"] {
+            let base = pts
+                .iter()
+                .find(|p| p.strategy == strat && !p.rearranged)
+                .unwrap();
+            let rearr = pts
+                .iter()
+                .find(|p| p.strategy == strat && p.rearranged)
+                .unwrap();
+            assert!(
+                rearr.utilization >= base.utilization - 1e-9,
+                "{strat}: {} < {}",
+                rearr.utilization,
+                base.utilization
+            );
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Design-space exploration (Sec. VII): the parallel sweep executor and
+//! the study drivers behind Fig. 8–12.
+
+pub mod ablation_study;
+pub mod input_study;
+pub mod mapping_study;
+pub mod search;
+pub mod sparsity_study;
+pub mod sweep;
+
+pub use sweep::parallel_map;

@@ -1,0 +1,179 @@
+//! Automated design-space search — the "efficiently navigate the
+//! expansive co-design space" use the paper motivates (Sec. I), packaged
+//! as a first-class feature: enumerate (pattern, ratio, organization,
+//! strategy) candidates, simulate each in parallel, and return the
+//! Pareto frontier over (latency, energy) with optional constraints.
+
+use super::sweep::parallel_map;
+use crate::hw::presets;
+use crate::mapping::duplication::{Strategy, StrategyPolicy};
+use crate::mapping::planner::{plan, MappingOptions};
+use crate::pruning::workflow::PruningWorkflow;
+use crate::sim::engine::{simulate, SimOptions};
+use crate::sim::input_sparsity::InputProfiles;
+use crate::sparsity::flexblock::FlexBlock;
+use crate::workload::graph::Network;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub pattern: String,
+    pub ratio: f64,
+    pub org: (usize, usize),
+    pub strategy: &'static str,
+    pub cycles: u64,
+    pub energy_pj: f64,
+    pub utilization: f64,
+}
+
+impl DesignPoint {
+    /// Pareto dominance on (cycles, energy): true if `self` is at least
+    /// as good on both axes and better on one.
+    pub fn dominates(&self, other: &DesignPoint) -> bool {
+        (self.cycles <= other.cycles && self.energy_pj <= other.energy_pj)
+            && (self.cycles < other.cycles || self.energy_pj < other.energy_pj)
+    }
+}
+
+/// Search constraints.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Constraints {
+    /// Skip candidates whose overall sparsity exceeds this (an accuracy
+    /// budget proxy when no trained model is attached).
+    pub max_sparsity: Option<f64>,
+    /// Require at least this mean array utilization.
+    pub min_utilization: Option<f64>,
+}
+
+/// The candidate space of a search over `n_macros` macros.
+pub fn candidates(n_macros: usize, ratios: &[f64]) -> Vec<(FlexBlock, (usize, usize), Strategy)> {
+    let orgs: Vec<(usize, usize)> = (1..=n_macros)
+        .filter(|d| n_macros % d == 0)
+        .map(|d| (d, n_macros / d))
+        .collect();
+    let mut out = Vec::new();
+    for &r in ratios {
+        for fb in [
+            FlexBlock::row_wise(r),
+            FlexBlock::row_block(16, r),
+            FlexBlock::channel_wise(r),
+            FlexBlock::hybrid(2, 16, r),
+        ] {
+            for &org in &orgs {
+                for strat in [Strategy::Spatial, Strategy::Duplicate] {
+                    out.push((fb.clone(), org, strat));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Evaluate the space and return (all points, pareto frontier).
+pub fn search(
+    net: &Network,
+    n_macros: usize,
+    ratios: &[f64],
+    cons: Constraints,
+    threads: usize,
+) -> anyhow::Result<(Vec<DesignPoint>, Vec<DesignPoint>)> {
+    let cands = candidates(n_macros, ratios);
+    let results = parallel_map(cands, threads, |(fb, org, strat)| -> anyhow::Result<Option<DesignPoint>> {
+        if let Some(maxs) = cons.max_sparsity {
+            if fb.overall_sparsity() > maxs + 1e-9 {
+                return Ok(None);
+            }
+        }
+        let arch = presets::usecase_arch(n_macros, org);
+        let prune = PruningWorkflow::default().run_uniform(net, &fb, None)?;
+        let opts = MappingOptions {
+            policy: StrategyPolicy::Fixed(strat),
+            ..Default::default()
+        };
+        let mapping = plan(&arch, net, Some(&prune), opts)?;
+        let profiles = InputProfiles::synthetic(net, arch.input_bits, 0.55, 0x5EA);
+        let rep = simulate(&arch, net, &mapping, Some(&profiles), SimOptions::default())?;
+        if let Some(minu) = cons.min_utilization {
+            if rep.mean_utilization < minu {
+                return Ok(None);
+            }
+        }
+        Ok(Some(DesignPoint {
+            pattern: fb.name.clone(),
+            ratio: fb.overall_sparsity(),
+            org,
+            strategy: strat.label(),
+            cycles: rep.total_cycles,
+            energy_pj: rep.energy.total_pj,
+            utilization: rep.mean_utilization,
+        }))
+    });
+    let mut all = Vec::new();
+    for r in results {
+        if let Some(p) = r? {
+            all.push(p);
+        }
+    }
+    let pareto = pareto_frontier(&all);
+    Ok((all, pareto))
+}
+
+/// Extract the Pareto-optimal subset.
+pub fn pareto_frontier(points: &[DesignPoint]) -> Vec<DesignPoint> {
+    points
+        .iter()
+        .filter(|p| !points.iter().any(|q| q.dominates(p)))
+        .cloned()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn candidate_space_shape() {
+        let c = candidates(4, &[0.5, 0.8]);
+        // 2 ratios × 4 patterns × 3 orgs (1x4, 2x2, 4x1) × 2 strategies
+        assert_eq!(c.len(), 2 * 4 * 3 * 2);
+    }
+
+    #[test]
+    fn search_returns_nonempty_pareto() {
+        let net = zoo::resnet_mini();
+        let (all, pareto) = search(&net, 4, &[0.8], Constraints::default(), 0).unwrap();
+        assert!(!all.is_empty());
+        assert!(!pareto.is_empty());
+        assert!(pareto.len() <= all.len());
+        // no pareto point dominated by any other point
+        for p in &pareto {
+            assert!(!all.iter().any(|q| q.dominates(p)));
+        }
+    }
+
+    #[test]
+    fn constraints_filter() {
+        let net = zoo::resnet_mini();
+        let cons = Constraints {
+            max_sparsity: Some(0.6),
+            min_utilization: None,
+        };
+        let (all, _) = search(&net, 4, &[0.5, 0.9], cons, 0).unwrap();
+        assert!(all.iter().all(|p| p.ratio <= 0.6 + 0.05), "sparsity cap respected");
+        assert!(!all.is_empty(), "0.5 candidates survive");
+    }
+
+    #[test]
+    fn dominance_logic() {
+        let a = DesignPoint {
+            pattern: "a".into(), ratio: 0.5, org: (2, 2), strategy: "sp",
+            cycles: 100, energy_pj: 100.0, utilization: 0.5,
+        };
+        let mut b = a.clone();
+        b.cycles = 200;
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        assert!(!a.dominates(&a.clone()));
+    }
+}

@@ -1,0 +1,212 @@
+//! Sparsity-exploitation analysis (Sec. VII-B, Fig. 8): speedup, energy
+//! saving and model accuracy across the Table II sparsity patterns and
+//! ratios 0.5–0.9 on the 4-macro use-case architecture.
+
+use super::sweep::parallel_map;
+use crate::hw::arch::Architecture;
+use crate::hw::presets;
+use crate::sim::engine::simulate_network_default;
+use crate::sim::report::SimReport;
+use crate::sparsity::flexblock::FlexBlock;
+use crate::workload::graph::Network;
+
+/// One point of the Fig. 8 sweep.
+#[derive(Debug, Clone)]
+pub struct SparsityPoint {
+    pub pattern: String,
+    pub ratio: f64,
+    pub speedup: f64,
+    pub energy_saving: f64,
+    pub utilization: f64,
+    /// Filled from PJRT accuracy evaluation when artifacts are present.
+    pub accuracy: Option<f64>,
+}
+
+/// The Fig. 8 / Table II pattern set at a given overall ratio.
+pub fn fig8_patterns(ratio: f64) -> Vec<FlexBlock> {
+    vec![
+        FlexBlock::row_wise(ratio),
+        FlexBlock::row_block(16, ratio),
+        FlexBlock::column_wise(ratio),
+        FlexBlock::channel_wise(ratio),
+        FlexBlock::column_block(16, ratio),
+        FlexBlock::hybrid(2, 16, ratio),
+        FlexBlock::hybrid_row_wise(2, ratio),
+        FlexBlock::hybrid(4, 16, ratio),
+    ]
+}
+
+/// The standard ratio axis of the use-cases.
+pub const RATIOS: [f64; 5] = [0.5, 0.6, 0.7, 0.8, 0.9];
+
+/// Run the cost side of Fig. 8 (accuracy is attached separately by the
+/// caller when a PJRT session is available).
+pub fn run_fig8(net: &Network, ratios: &[f64], threads: usize) -> anyhow::Result<Vec<SparsityPoint>> {
+    let dense_arch = presets::usecase_dense_baseline(4, (2, 2));
+    let dense = simulate_network_default(&dense_arch, net, None)?;
+    let arch = presets::usecase_arch(4, (2, 2));
+    let mut jobs: Vec<(FlexBlock, f64)> = Vec::new();
+    for &r in ratios {
+        for fb in fig8_patterns(r) {
+            jobs.push((fb, r));
+        }
+    }
+    let results = parallel_map(jobs, threads, |(fb, r)| {
+        let rep = simulate_network_default(&arch, net, Some(&fb));
+        (fb, r, rep)
+    });
+    let mut out = Vec::new();
+    for (fb, ratio, rep) in results {
+        let rep: SimReport = rep?;
+        out.push(SparsityPoint {
+            pattern: fb.name.clone(),
+            ratio,
+            speedup: rep.speedup_vs(&dense),
+            energy_saving: rep.energy_saving_vs(&dense),
+            utilization: rep.mean_utilization,
+            accuracy: None,
+        });
+    }
+    Ok(out)
+}
+
+/// Fig. 9(a): block-size sweep at fixed 80% sparsity. Sizes chosen to
+/// align (16 along broadcast rows, 32 along accumulation columns) or
+/// misalign (8, 24, 48) with the array dimensions.
+pub fn fig9a_patterns() -> Vec<FlexBlock> {
+    let r = 0.8;
+    let mut v = Vec::new();
+    for w in [8usize, 16, 24, 32, 48] {
+        v.push(FlexBlock::row_block(w, r));
+    }
+    for h in [8usize, 16, 24, 32, 48] {
+        v.push(FlexBlock::column_block(h, r));
+    }
+    for m in [2usize, 4, 8] {
+        v.push(FlexBlock::hybrid(m, 16, r));
+    }
+    v
+}
+
+pub fn run_fig9a(net: &Network, threads: usize) -> anyhow::Result<Vec<SparsityPoint>> {
+    let dense_arch = presets::usecase_dense_baseline(4, (2, 2));
+    let dense = simulate_network_default(&dense_arch, net, None)?;
+    let arch = presets::usecase_arch(4, (2, 2));
+    let results = parallel_map(fig9a_patterns(), threads, |fb| {
+        let rep = simulate_network_default(&arch, net, Some(&fb));
+        (fb, rep)
+    });
+    let mut out = Vec::new();
+    for (fb, rep) in results {
+        let rep = rep?;
+        out.push(SparsityPoint {
+            pattern: fb.name.clone(),
+            ratio: 0.8,
+            speedup: rep.speedup_vs(&dense),
+            energy_saving: rep.energy_saving_vs(&dense),
+            utilization: rep.mean_utilization,
+            accuracy: None,
+        });
+    }
+    Ok(out)
+}
+
+/// Fig. 9(b): the cross-model comparison at 80% sparsity. Returns
+/// (model, pattern, point) rows; depthwise convs and FC layers keep the
+/// default workflow exclusions (the paper restricts pruning to standard
+/// convs for MobileNetV2/VGG16 after observing accuracy collapse).
+pub fn run_fig9b(
+    nets: &[&Network],
+    threads: usize,
+) -> anyhow::Result<Vec<(String, SparsityPoint)>> {
+    let mut out = Vec::new();
+    for net in nets {
+        let dense_arch = presets::usecase_dense_baseline(4, (2, 2));
+        let dense = simulate_network_default(&dense_arch, net, None)?;
+        let arch = presets::usecase_arch(4, (2, 2));
+        let patterns = vec![
+            FlexBlock::row_block(16, 0.8),
+            FlexBlock::column_block(16, 0.8),
+            FlexBlock::hybrid(2, 16, 0.8),
+        ];
+        let results = parallel_map(patterns, threads, |fb| {
+            let rep = simulate_network_default(&arch, net, Some(&fb));
+            (fb, rep)
+        });
+        for (fb, rep) in results {
+            let rep = rep?;
+            out.push((
+                net.name.clone(),
+                SparsityPoint {
+                    pattern: fb.name.clone(),
+                    ratio: 0.8,
+                    speedup: rep.speedup_vs(&dense),
+                    energy_saving: rep.energy_saving_vs(&dense),
+                    utilization: rep.mean_utilization,
+                    accuracy: None,
+                },
+            ));
+        }
+    }
+    Ok(out)
+}
+
+/// Convenience: the use-case architectures of Sec. VII-A.
+pub fn usecase_archs() -> (Architecture, Architecture) {
+    (
+        presets::usecase_arch(4, (2, 2)),
+        presets::usecase_dense_baseline(4, (2, 2)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn fig8_sweep_small() {
+        let net = zoo::resnet_mini();
+        let pts = run_fig8(&net, &[0.5, 0.9], 0).unwrap();
+        assert_eq!(pts.len(), 2 * fig8_patterns(0.5).len());
+        for p in &pts {
+            assert!(p.speedup > 0.0, "{}: {}", p.pattern, p.speedup);
+            assert!(p.energy_saving > 0.0);
+        }
+        // coarse row-wise at 0.9 beats hybrid at 0.5 in speedup
+        let rw9 = pts
+            .iter()
+            .find(|p| p.pattern == "Row-wise" && p.ratio == 0.9)
+            .unwrap();
+        let hy5 = pts
+            .iter()
+            .find(|p| p.pattern.starts_with("1:2+Row-block") && p.ratio == 0.5)
+            .unwrap();
+        assert!(rw9.speedup > hy5.speedup);
+    }
+
+    #[test]
+    fn fig8_speedup_monotone_in_ratio_for_row_wise() {
+        let net = zoo::resnet_mini();
+        let pts = run_fig8(&net, &RATIOS, 0).unwrap();
+        let mut row_wise: Vec<(f64, f64)> = pts
+            .iter()
+            .filter(|p| p.pattern == "Row-wise")
+            .map(|p| (p.ratio, p.speedup))
+            .collect();
+        row_wise.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in row_wise.windows(2) {
+            assert!(
+                w[1].1 >= w[0].1 * 0.95,
+                "speedup roughly monotone: {row_wise:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig9a_runs() {
+        let net = zoo::resnet_mini();
+        let pts = run_fig9a(&net, 0).unwrap();
+        assert_eq!(pts.len(), fig9a_patterns().len());
+    }
+}

@@ -1,0 +1,249 @@
+//! The full architecture description (Sec. IV-C ②): macro geometry +
+//! organization + buffers + sparsity-support units + energy table.
+
+use super::buffer::Buffer;
+use super::cim_macro::CimMacro;
+use super::energy::EnergyTable;
+use super::org::MacroOrg;
+use crate::util::json::Json;
+
+/// Sparsity-support hardware configuration (Sec. IV-C ② ③).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SparsitySupport {
+    /// Block-index memories + compressed-weight handling.
+    pub weight_indexing: bool,
+    /// Mux-based input routing for IntraBlock / vertical packing.
+    pub weight_routing: bool,
+    /// Zero-bit detection + skip logic in pre-processing units.
+    pub input_skipping: bool,
+}
+
+impl SparsitySupport {
+    pub fn none() -> Self {
+        Self {
+            weight_indexing: false,
+            weight_routing: false,
+            input_skipping: false,
+        }
+    }
+
+    pub fn full() -> Self {
+        Self {
+            weight_indexing: true,
+            weight_routing: true,
+            input_skipping: true,
+        }
+    }
+
+    pub fn weight_only() -> Self {
+        Self {
+            weight_indexing: true,
+            weight_routing: true,
+            input_skipping: false,
+        }
+    }
+}
+
+/// A complete CIM accelerator description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Architecture {
+    pub name: String,
+    /// Clock frequency in GHz (cycle time = 1/clock ns).
+    pub clock_ghz: f64,
+    /// Input (activation) bit width for bit-serial processing.
+    pub input_bits: usize,
+    /// Weight bit width.
+    pub weight_bits: usize,
+    pub cim: CimMacro,
+    pub org: MacroOrg,
+    /// Input-feature global buffer.
+    pub global_in_buf: Buffer,
+    /// Output-feature global buffer.
+    pub global_out_buf: Buffer,
+    /// Weight global buffer (may be the same physical buffer in some
+    /// designs; modeled separately with combined capacity if so).
+    pub weight_buf: Buffer,
+    /// Per-macro local buffer.
+    pub local_buf: Buffer,
+    /// Index memory for sparsity support.
+    pub index_mem: Buffer,
+    pub energy: EnergyTable,
+    pub sparsity: SparsitySupport,
+}
+
+impl Architecture {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.cim.validate()?;
+        self.org.validate()?;
+        if self.clock_ghz <= 0.0 {
+            anyhow::bail!("clock must be positive");
+        }
+        if !(1..=16).contains(&self.input_bits) || !(1..=16).contains(&self.weight_bits) {
+            anyhow::bail!(
+                "bit widths must be in 1..=16 (input {}, weight {})",
+                self.input_bits,
+                self.weight_bits
+            );
+        }
+        for b in [
+            &self.global_in_buf,
+            &self.global_out_buf,
+            &self.weight_buf,
+            &self.local_buf,
+            &self.index_mem,
+        ] {
+            if b.size_bytes == 0 || b.bandwidth_bytes_cycle <= 0.0 {
+                anyhow::bail!("buffer `{}` must have positive size and bandwidth", b.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Total weight words storable across all macros.
+    pub fn total_weight_capacity_words(&self) -> usize {
+        self.org.n_macros() * self.cim.capacity_words()
+    }
+
+    /// Cycle time in nanoseconds.
+    pub fn cycle_ns(&self) -> f64 {
+        1.0 / self.clock_ghz
+    }
+
+    /// One-paragraph description for reports (Table I style).
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: macro {}x{} (sub {}x{}), org {} ({} macros), in-buf {} KB{}, out-buf {} KB, w-buf {} KB, {}b/{}b, {} GHz",
+            self.name,
+            self.cim.rows,
+            self.cim.cols,
+            self.cim.sub_rows,
+            self.cim.sub_cols,
+            self.org.label(),
+            self.org.n_macros(),
+            self.global_in_buf.size_bytes / 1024,
+            if self.global_in_buf.ping_pong { " (ping-pong)" } else { "" },
+            self.global_out_buf.size_bytes / 1024,
+            self.weight_buf.size_bytes / 1024,
+            self.input_bits,
+            self.weight_bits,
+            self.clock_ghz,
+        )
+    }
+
+    /// Parse an architecture from a JSON config (the user-facing hardware
+    /// description interface). Missing fields default to the 4-macro
+    /// use-case architecture's values.
+    pub fn from_json(j: &Json) -> anyhow::Result<Architecture> {
+        let base = super::presets::usecase_arch(4, (2, 2));
+        let mut a = base;
+        if let Some(name) = j.get("name").and_then(|v| v.as_str()) {
+            a.name = name.to_string();
+        }
+        a.clock_ghz = j.opt_f64("clock_ghz", a.clock_ghz);
+        a.input_bits = j.opt_usize("input_bits", a.input_bits);
+        a.weight_bits = j.opt_usize("weight_bits", a.weight_bits);
+        if let Some(m) = j.get("macro") {
+            a.cim = CimMacro::new(
+                m.opt_usize("rows", a.cim.rows),
+                m.opt_usize("cols", a.cim.cols),
+                m.opt_usize("sub_rows", a.cim.sub_rows),
+                m.opt_usize("sub_cols", a.cim.sub_cols),
+            );
+        }
+        if let Some(o) = j.get("org").and_then(|v| v.as_arr()) {
+            a.org = MacroOrg {
+                dims: o
+                    .iter()
+                    .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad org dim")))
+                    .collect::<anyhow::Result<_>>()?,
+            };
+        }
+        for (key, slot) in [
+            ("global_in_buf", &mut a.global_in_buf),
+            ("global_out_buf", &mut a.global_out_buf),
+            ("weight_buf", &mut a.weight_buf),
+            ("local_buf", &mut a.local_buf),
+            ("index_mem", &mut a.index_mem),
+        ] {
+            if let Some(b) = j.get(key) {
+                let size = b.opt_usize("size_kb", slot.size_bytes / 1024) * 1024;
+                let width = b.opt_usize("width_bits", slot.width_bits);
+                let pp = b.opt_bool("ping_pong", slot.ping_pong);
+                let mut nb = Buffer::new(&slot.name, size, width, pp);
+                nb.bandwidth_bytes_cycle =
+                    b.opt_f64("bandwidth_bytes_cycle", nb.bandwidth_bytes_cycle);
+                nb.read_pj = b.opt_f64("read_pj", nb.read_pj);
+                nb.write_pj = b.opt_f64("write_pj", nb.write_pj);
+                *slot = nb;
+            }
+        }
+        if let Some(e) = j.get("energy") {
+            a.energy = a.energy.from_json_overlay(e)?;
+        }
+        if let Some(s) = j.get("sparsity") {
+            a.sparsity.weight_indexing = s.opt_bool("weight_indexing", a.sparsity.weight_indexing);
+            a.sparsity.weight_routing = s.opt_bool("weight_routing", a.sparsity.weight_routing);
+            a.sparsity.input_skipping = s.opt_bool("input_skipping", a.sparsity.input_skipping);
+        }
+        a.validate()?;
+        Ok(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    #[test]
+    fn presets_validate() {
+        presets::mars().validate().unwrap();
+        presets::sdp().validate().unwrap();
+        presets::usecase_arch(4, (2, 2)).validate().unwrap();
+        presets::usecase_arch(16, (4, 4)).validate().unwrap();
+    }
+
+    #[test]
+    fn describe_mentions_key_dims() {
+        let a = presets::mars();
+        let d = a.describe();
+        assert!(d.contains("1024x64"));
+        assert!(d.contains("2x4"));
+    }
+
+    #[test]
+    fn json_overrides() {
+        let j = Json::parse(
+            r#"{
+                "name": "custom",
+                "clock_ghz": 0.5,
+                "macro": {"rows": 256, "cols": 32, "sub_rows": 32, "sub_cols": 32},
+                "org": [2, 2],
+                "global_in_buf": {"size_kb": 64, "ping_pong": true},
+                "sparsity": {"input_skipping": false}
+            }"#,
+        )
+        .unwrap();
+        let a = Architecture::from_json(&j).unwrap();
+        assert_eq!(a.name, "custom");
+        assert_eq!(a.clock_ghz, 0.5);
+        assert_eq!(a.cim.rows, 256);
+        assert_eq!(a.global_in_buf.size_bytes, 64 * 1024);
+        assert!(a.global_in_buf.ping_pong);
+        assert!(!a.sparsity.input_skipping);
+        assert_eq!(a.org.n_macros(), 4);
+    }
+
+    #[test]
+    fn json_invalid_rejected() {
+        let j = Json::parse(r#"{"macro": {"rows": 100, "sub_rows": 64}}"#).unwrap();
+        assert!(Architecture::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn capacity_math() {
+        let a = presets::mars();
+        // 8 macros × 1024×64 words
+        assert_eq!(a.total_weight_capacity_words(), 8 * 1024 * 64);
+    }
+}

@@ -1,0 +1,104 @@
+//! Memory-unit descriptions (Sec. IV-C ②): global/local buffers and
+//! index memories, with capacity, port width, bandwidth and per-access
+//! energies (defaulted from the analytical SRAM model, overridable).
+
+use super::energy::{sram_access_pj, sram_static_pj_cycle};
+
+/// One buffer / memory structure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Buffer {
+    pub name: String,
+    pub size_bytes: usize,
+    /// Port width in bits (one access moves this many bits).
+    pub width_bits: usize,
+    /// Sustained bandwidth, bytes per cycle (ports × width).
+    pub bandwidth_bytes_cycle: f64,
+    /// Double-buffered (ping-pong): loads overlap compute (Sec. IV-C ②).
+    pub ping_pong: bool,
+    pub read_pj: f64,
+    pub write_pj: f64,
+    pub static_pj_cycle: f64,
+}
+
+impl Buffer {
+    /// Build with energies from the analytical SRAM model.
+    pub fn new(name: &str, size_bytes: usize, width_bits: usize, ping_pong: bool) -> Self {
+        let acc = sram_access_pj(size_bytes, width_bits);
+        Self {
+            name: name.to_string(),
+            size_bytes,
+            width_bits,
+            bandwidth_bytes_cycle: width_bits as f64 / 8.0,
+            ping_pong,
+            read_pj: acc,
+            write_pj: acc * 1.1, // writes slightly costlier
+            static_pj_cycle: sram_static_pj_cycle(size_bytes),
+        }
+    }
+
+    pub fn with_bandwidth(mut self, bytes_per_cycle: f64) -> Self {
+        self.bandwidth_bytes_cycle = bytes_per_cycle;
+        self
+    }
+
+    /// Cycles to move `bytes` through this buffer's port.
+    pub fn transfer_cycles(&self, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        (bytes as f64 / self.bandwidth_bytes_cycle).ceil() as u64
+    }
+
+    /// Number of port accesses to move `bytes`.
+    pub fn accesses_for(&self, bytes: u64) -> u64 {
+        (bytes * 8).div_ceil(self.width_bits as u64)
+    }
+
+    /// Effective capacity available to one pipeline stage: half for
+    /// ping-pong buffers (the other half is being filled).
+    pub fn stage_capacity(&self) -> usize {
+        if self.ping_pong {
+            self.size_bytes / 2
+        } else {
+            self.size_bytes
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_and_access_counts() {
+        let b = Buffer::new("gbuf", 128 * 1024, 64, false);
+        assert_eq!(b.bandwidth_bytes_cycle, 8.0);
+        assert_eq!(b.transfer_cycles(64), 8);
+        assert_eq!(b.transfer_cycles(0), 0);
+        assert_eq!(b.accesses_for(64), 8);
+        assert_eq!(b.accesses_for(1), 1); // partial word still one access
+    }
+
+    #[test]
+    fn ping_pong_halves_capacity() {
+        let pp = Buffer::new("pp", 128 * 1024, 64, true);
+        assert_eq!(pp.stage_capacity(), 64 * 1024);
+        let flat = Buffer::new("f", 128 * 1024, 64, false);
+        assert_eq!(flat.stage_capacity(), 128 * 1024);
+    }
+
+    #[test]
+    fn energy_scales_with_size() {
+        let small = Buffer::new("s", 4 * 1024, 64, false);
+        let big = Buffer::new("b", 256 * 1024, 64, false);
+        assert!(big.read_pj > small.read_pj);
+        assert!(big.static_pj_cycle > small.static_pj_cycle);
+        assert!(small.write_pj > small.read_pj);
+    }
+
+    #[test]
+    fn custom_bandwidth() {
+        let b = Buffer::new("x", 1024, 64, false).with_bandwidth(32.0);
+        assert_eq!(b.transfer_cycles(64), 2);
+    }
+}

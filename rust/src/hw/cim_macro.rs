@@ -1,0 +1,101 @@
+//! CIM macro geometry (Sec. II-A, Fig. 1(a)): a digital macro is an
+//! array of SRAM weight cells partitioned into sub-arrays, each with its
+//! own adder tree; shift-add units weight the bit-serial partial sums and
+//! accumulators fold across sub-arrays and temporal rounds.
+//!
+//! Digital CIM activates *all rows simultaneously* — the property that
+//! both enables full parallelism and imposes the paper's structural
+//! constraints on sparsity (Sec. III-A).
+
+/// Geometry of one CIM macro. Dimensions count 8-bit weight *words*
+/// (each word is `weight_bits` physical bitcells along the column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CimMacro {
+    /// Array rows (weight-matrix rows mapped here; inputs broadcast).
+    pub rows: usize,
+    /// Array columns (output channels; partial sums accumulate here).
+    pub cols: usize,
+    /// Sub-array rows (zero-skip / adder-tree granularity).
+    pub sub_rows: usize,
+    /// Sub-array columns.
+    pub sub_cols: usize,
+}
+
+impl CimMacro {
+    pub fn new(rows: usize, cols: usize, sub_rows: usize, sub_cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            sub_rows,
+            sub_cols,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.rows == 0 || self.cols == 0 || self.sub_rows == 0 || self.sub_cols == 0 {
+            anyhow::bail!("macro dims must be positive: {self:?}");
+        }
+        if self.rows % self.sub_rows != 0 || self.cols % self.sub_cols != 0 {
+            anyhow::bail!(
+                "sub-array {}x{} must tile macro {}x{}",
+                self.sub_rows,
+                self.sub_cols,
+                self.rows,
+                self.cols
+            );
+        }
+        Ok(())
+    }
+
+    /// Sub-arrays per macro (one adder tree each).
+    pub fn n_subarrays(&self) -> usize {
+        (self.rows / self.sub_rows) * (self.cols / self.sub_cols)
+    }
+
+    /// Sub-array row groups: the granularity at which input-sparsity
+    /// zero-bit skipping applies (all inputs of a group must be zero at a
+    /// bit position to skip its cycle — Sec. III-B).
+    pub fn row_groups(&self) -> usize {
+        self.rows / self.sub_rows
+    }
+
+    /// Weight words stored per macro.
+    pub fn capacity_words(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Weight storage in bytes for `weight_bits`-wide words.
+    pub fn capacity_bytes(&self, weight_bits: usize) -> usize {
+        self.capacity_words() * weight_bits / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mars_macro_geometry() {
+        // MARS: 1024×64 macro, 64×64 sub-arrays (Table I)
+        let m = CimMacro::new(1024, 64, 64, 64);
+        m.validate().unwrap();
+        assert_eq!(m.n_subarrays(), 16);
+        assert_eq!(m.row_groups(), 16);
+        assert_eq!(m.capacity_bytes(8), 64 * 1024);
+    }
+
+    #[test]
+    fn sdp_macro_geometry() {
+        // SDP: 32×64 macro, 1×64 sub-arrays (Table I)
+        let m = CimMacro::new(32, 64, 1, 64);
+        m.validate().unwrap();
+        assert_eq!(m.n_subarrays(), 32);
+        assert_eq!(m.row_groups(), 32);
+    }
+
+    #[test]
+    fn invalid_tiling_rejected() {
+        assert!(CimMacro::new(100, 64, 64, 64).validate().is_err());
+        assert!(CimMacro::new(0, 64, 1, 64).validate().is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Hardware description layer (Sec. IV-C ②): macro geometry,
+//! organization, buffers, energy tables, sparsity-support units, and the
+//! Table I / Sec. VII-A presets.
+
+pub mod arch;
+pub mod buffer;
+pub mod cim_macro;
+pub mod energy;
+pub mod org;
+pub mod presets;
+pub mod units;
+
+pub use arch::{Architecture, SparsitySupport};
+pub use buffer::Buffer;
+pub use cim_macro::CimMacro;
+pub use energy::{EnergyTable, UnitEnergy};
+pub use org::MacroOrg;
+pub use units::{UnitCounts, UnitKind};

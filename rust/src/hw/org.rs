@@ -1,0 +1,93 @@
+//! Macro organization (Sec. IV-C ②, the `organization` parameter): a
+//! variable-length list of dimensions describing how macros are laid
+//! out. Two dimensions in practice — (row-parallel, column-parallel) —
+//! where the row dimension spatially unrolls weight-matrix rows and the
+//! column dimension unrolls columns or duplicates weights (Fig. 11's
+//! 8×2 / 4×4 / 2×8 organizations).
+
+/// Macro grid organization.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MacroOrg {
+    /// Organization dims, outermost first. Length 1 or 2 supported.
+    pub dims: Vec<usize>,
+}
+
+impl MacroOrg {
+    pub fn grid(rows: usize, cols: usize) -> Self {
+        Self {
+            dims: vec![rows, cols],
+        }
+    }
+
+    pub fn linear(n: usize) -> Self {
+        Self { dims: vec![n] }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.dims.is_empty() || self.dims.len() > 2 {
+            anyhow::bail!(
+                "organization must have 1 or 2 dims, got {}",
+                self.dims.len()
+            );
+        }
+        if self.dims.iter().any(|&d| d == 0) {
+            anyhow::bail!("organization dims must be positive: {:?}", self.dims);
+        }
+        Ok(())
+    }
+
+    pub fn n_macros(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Macros along the weight-row unrolling direction.
+    pub fn row_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    /// Macros along the column/duplication direction.
+    pub fn col_dim(&self) -> usize {
+        if self.dims.len() > 1 {
+            self.dims[1]
+        } else {
+            1
+        }
+    }
+
+    pub fn label(&self) -> String {
+        self.dims
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("x")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_orgs() {
+        let o = MacroOrg::grid(4, 4);
+        o.validate().unwrap();
+        assert_eq!(o.n_macros(), 16);
+        assert_eq!((o.row_dim(), o.col_dim()), (4, 4));
+        assert_eq!(o.label(), "4x4");
+    }
+
+    #[test]
+    fn linear_org() {
+        let o = MacroOrg::linear(8);
+        o.validate().unwrap();
+        assert_eq!(o.n_macros(), 8);
+        assert_eq!(o.col_dim(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_dims() {
+        assert!(MacroOrg { dims: vec![] }.validate().is_err());
+        assert!(MacroOrg { dims: vec![1, 2, 3] }.validate().is_err());
+        assert!(MacroOrg { dims: vec![0, 2] }.validate().is_err());
+    }
+}

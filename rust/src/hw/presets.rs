@@ -1,0 +1,159 @@
+//! Built-in architecture presets: the validation targets of Table I
+//! (MARS [19], SDP [20]) and the common use-case architecture of
+//! Sec. VII-A.
+
+use super::arch::{Architecture, SparsitySupport};
+use super::buffer::Buffer;
+use super::cim_macro::CimMacro;
+use super::energy::EnergyTable;
+use super::org::MacroOrg;
+
+/// MARS (Table I): 1024×64 macros with 64×64 sub-arrays, 8 macros in a
+/// 2×4 organization, 128 KB ping-pong global buffer, FullBlock(1,16)
+/// sparsity, Conv layers only.
+pub fn mars() -> Architecture {
+    Architecture {
+        name: "MARS".into(),
+        clock_ghz: 0.5,
+        input_bits: 8,
+        weight_bits: 8,
+        cim: CimMacro::new(1024, 64, 64, 64),
+        org: MacroOrg::grid(2, 4),
+        global_in_buf: Buffer::new("global_buf_in", 64 * 1024, 128, true),
+        global_out_buf: Buffer::new("global_buf_out", 64 * 1024, 128, true),
+        weight_buf: Buffer::new("weight_buf", 256 * 1024, 256, false),
+        local_buf: Buffer::new("local_buf", 4 * 1024, 64, false),
+        index_mem: Buffer::new("index_mem", 8 * 1024, 32, false),
+        energy: EnergyTable::preset_28nm(),
+        sparsity: SparsitySupport {
+            // MARS's "index-aware optimizations" route inputs to packed
+            // groups — routing support is present
+            weight_routing: true,
+            weight_indexing: true,
+            input_skipping: true,
+        },
+    }
+}
+
+/// SDP (Table I): 32×64 macros with 1×64 sub-arrays (row-granular adder
+/// trees), 512 macros in a 16×32 organization, 256 KB input / 128 KB
+/// output buffers, Intra(2,1)+Full(2,8) sparsity, whole-network scope.
+pub fn sdp() -> Architecture {
+    Architecture {
+        name: "SDP".into(),
+        clock_ghz: 0.5,
+        input_bits: 8,
+        weight_bits: 8,
+        cim: CimMacro::new(32, 64, 1, 64),
+        org: MacroOrg::grid(16, 32),
+        global_in_buf: Buffer::new("global_buf_in", 256 * 1024, 256, false),
+        global_out_buf: Buffer::new("global_buf_out", 128 * 1024, 256, false),
+        // 512 tiny macros need a highly banked weight/index distribution
+        // network (bandwidths are the undisclosed-parameter calibration
+        // the paper mentions in Sec. VI-A)
+        weight_buf: Buffer::new("weight_buf", 512 * 1024, 256, false).with_bandwidth(512.0),
+        local_buf: Buffer::new("local_buf", 2 * 1024, 64, false),
+        index_mem: Buffer::new("index_mem", 16 * 1024, 32, false).with_bandwidth(128.0),
+        energy: EnergyTable::preset_28nm(),
+        sparsity: SparsitySupport::full(),
+    }
+}
+
+/// Common use-case architecture (Sec. VII-A): 8-bit precision, macros of
+/// 1024×32 with 32×32 sub-arrays, weight-stationary; `n_macros` macros in
+/// the given organization, all sharing broadcast inputs from one input
+/// buffer.
+pub fn usecase_arch(n_macros: usize, org: (usize, usize)) -> Architecture {
+    assert_eq!(
+        org.0 * org.1,
+        n_macros,
+        "organization {}x{} != {n_macros} macros",
+        org.0,
+        org.1
+    );
+    Architecture {
+        name: format!("usecase_{n_macros}m_{}x{}", org.0, org.1),
+        clock_ghz: 0.5,
+        input_bits: 8,
+        weight_bits: 8,
+        cim: CimMacro::new(1024, 32, 32, 32),
+        org: MacroOrg::grid(org.0, org.1),
+        global_in_buf: Buffer::new("global_buf_in", 128 * 1024, 128, true),
+        global_out_buf: Buffer::new("global_buf_out", 128 * 1024, 128, true),
+        weight_buf: Buffer::new("weight_buf", 512 * 1024, 256, false),
+        local_buf: Buffer::new("local_buf", 4 * 1024, 64, false),
+        index_mem: Buffer::new("index_mem", 16 * 1024, 32, false),
+        energy: EnergyTable::preset_28nm(),
+        sparsity: SparsitySupport::full(),
+    }
+}
+
+/// The dense baseline of Sec. VII-A: same geometry, no sparsity-support
+/// hardware at all.
+pub fn usecase_dense_baseline(n_macros: usize, org: (usize, usize)) -> Architecture {
+    let mut a = usecase_arch(n_macros, org);
+    a.name = format!("{}_dense", a.name);
+    a.sparsity = SparsitySupport::none();
+    a
+}
+
+/// Preset lookup by name for the CLI.
+pub fn by_name(name: &str) -> anyhow::Result<Architecture> {
+    Ok(match name {
+        "mars" => mars(),
+        "sdp" => sdp(),
+        "usecase4" => usecase_arch(4, (2, 2)),
+        "usecase16" => usecase_arch(16, (4, 4)),
+        other => anyhow::bail!("unknown architecture preset `{other}` (mars|sdp|usecase4|usecase16)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_parameters() {
+        let m = mars();
+        assert_eq!((m.cim.rows, m.cim.cols), (1024, 64));
+        assert_eq!((m.cim.sub_rows, m.cim.sub_cols), (64, 64));
+        assert_eq!(m.org.n_macros(), 8);
+        assert!(m.global_in_buf.ping_pong);
+        let s = sdp();
+        assert_eq!((s.cim.rows, s.cim.cols), (32, 64));
+        assert_eq!((s.cim.sub_rows, s.cim.sub_cols), (1, 64));
+        assert_eq!(s.org.n_macros(), 512);
+        assert_eq!(s.global_in_buf.size_bytes, 256 * 1024);
+        assert_eq!(s.global_out_buf.size_bytes, 128 * 1024);
+    }
+
+    #[test]
+    fn usecase_orgs() {
+        for org in [(8, 2), (4, 4), (2, 8)] {
+            let a = usecase_arch(16, org);
+            a.validate().unwrap();
+            assert_eq!(a.org.n_macros(), 16);
+            assert_eq!((a.cim.rows, a.cim.cols), (1024, 32));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn usecase_org_mismatch_panics() {
+        usecase_arch(4, (4, 4));
+    }
+
+    #[test]
+    fn dense_baseline_has_no_support() {
+        let a = usecase_dense_baseline(4, (2, 2));
+        assert!(!a.sparsity.weight_indexing);
+        assert!(!a.sparsity.input_skipping);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("mars").is_ok());
+        assert!(by_name("sdp").is_ok());
+        assert!(by_name("nope").is_err());
+    }
+}

@@ -1,0 +1,137 @@
+//! Compute/memory unit inventory and automatic unit-count inference
+//! (Sec. IV-C ②: "CIMinus automatically infers the number of units
+//! required based on the CIM array size, unit size, and the organization
+//! parameter"). Static energy is charged per instantiated unit.
+
+use super::arch::Architecture;
+
+/// Unit classes tracked by the simulator's access counters and energy
+/// breakdown (Fig. 6(c)-style component split).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum UnitKind {
+    CimArray,
+    AdderTree,
+    ShiftAdd,
+    Accumulator,
+    PreProc,
+    ZeroDetect,
+    Mux,
+    PostProc,
+    IndexMem,
+    GlobalInBuf,
+    GlobalOutBuf,
+    WeightBuf,
+    LocalBuf,
+}
+
+impl UnitKind {
+    pub const ALL: [UnitKind; 13] = [
+        UnitKind::CimArray,
+        UnitKind::AdderTree,
+        UnitKind::ShiftAdd,
+        UnitKind::Accumulator,
+        UnitKind::PreProc,
+        UnitKind::ZeroDetect,
+        UnitKind::Mux,
+        UnitKind::PostProc,
+        UnitKind::IndexMem,
+        UnitKind::GlobalInBuf,
+        UnitKind::GlobalOutBuf,
+        UnitKind::WeightBuf,
+        UnitKind::LocalBuf,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            UnitKind::CimArray => "cim_array",
+            UnitKind::AdderTree => "adder_tree",
+            UnitKind::ShiftAdd => "shift_add",
+            UnitKind::Accumulator => "accumulator",
+            UnitKind::PreProc => "preproc",
+            UnitKind::ZeroDetect => "zero_detect",
+            UnitKind::Mux => "mux",
+            UnitKind::PostProc => "postproc",
+            UnitKind::IndexMem => "index_mem",
+            UnitKind::GlobalInBuf => "global_in_buf",
+            UnitKind::GlobalOutBuf => "global_out_buf",
+            UnitKind::WeightBuf => "weight_buf",
+            UnitKind::LocalBuf => "local_buf",
+        }
+    }
+}
+
+/// Instantiated-unit counts inferred from the architecture description.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnitCounts {
+    pub macros: usize,
+    pub subarrays: usize,
+    pub adder_trees: usize,
+    pub shift_adds: usize,
+    pub accumulators: usize,
+    pub preproc_lanes: usize,
+    pub mux_lanes: usize,
+    pub postproc_lanes: usize,
+}
+
+impl UnitCounts {
+    pub fn infer(arch: &Architecture) -> Self {
+        let macros = arch.org.n_macros();
+        let per_macro_subs = arch.cim.n_subarrays();
+        Self {
+            macros,
+            subarrays: macros * per_macro_subs,
+            // one adder tree per sub-array
+            adder_trees: macros * per_macro_subs,
+            // one shift-add per macro column
+            shift_adds: macros * arch.cim.cols,
+            // one output accumulator per macro column (plus reuse for
+            // misaligned partial sums; extras are modeled as accesses)
+            accumulators: macros * arch.cim.cols,
+            // one pre-processing lane per macro row-group feeding inputs
+            preproc_lanes: macros * arch.cim.row_groups() * arch.cim.sub_rows,
+            // mux-based indexing lanes sit between preproc and rows,
+            // instantiated only when weight-sparsity routing is enabled
+            mux_lanes: if arch.sparsity.weight_routing {
+                macros * arch.cim.rows
+            } else {
+                0
+            },
+            postproc_lanes: macros, // one post-processing unit per macro
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    #[test]
+    fn counts_scale_with_org() {
+        let a4 = presets::usecase_arch(4, (2, 2));
+        let a16 = presets::usecase_arch(16, (4, 4));
+        let c4 = UnitCounts::infer(&a4);
+        let c16 = UnitCounts::infer(&a16);
+        assert_eq!(c4.macros, 4);
+        assert_eq!(c16.macros, 16);
+        assert_eq!(c16.adder_trees, 4 * c4.adder_trees);
+        assert_eq!(c16.shift_adds, 4 * c4.shift_adds);
+    }
+
+    #[test]
+    fn mux_lanes_only_with_routing() {
+        let mut a = presets::usecase_arch(4, (2, 2));
+        a.sparsity.weight_routing = false;
+        assert_eq!(UnitCounts::infer(&a).mux_lanes, 0);
+        a.sparsity.weight_routing = true;
+        assert!(UnitCounts::infer(&a).mux_lanes > 0);
+    }
+
+    #[test]
+    fn labels_unique() {
+        let mut labels: Vec<&str> = UnitKind::ALL.iter().map(|k| k.label()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), UnitKind::ALL.len());
+    }
+}

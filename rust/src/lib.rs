@@ -1,0 +1,58 @@
+//! # CIMinus
+//!
+//! A cost-modeling and design-space-exploration framework for **sparse DNN
+//! workloads on SRAM-based digital compute-in-memory (CIM) architectures**,
+//! reproducing *CIMinus: Empowering Sparse DNN Workloads Modeling and
+//! Exploration on SRAM-based CIM Architectures* (IEEE TC 2025).
+//!
+//! The crate is the L3 coordinator of a three-layer stack:
+//!
+//! - **L3 (this crate)** — workload DAGs, the FlexBlock sparsity
+//!   abstraction, the pruning workflow, hardware and mapping descriptions,
+//!   a cycle-level simulation engine with per-unit energy accounting, and
+//!   exploration/validation harnesses.
+//! - **L2 (python/compile)** — JAX models trained at build time and lowered
+//!   to HLO text artifacts.
+//! - **L1 (python/compile/kernels)** — Pallas kernels (FlexBlock masked
+//!   matmul, activation bit-plane profiling) embedded in the L2 graphs.
+//!
+//! Python never runs at evaluation time: the [`runtime`] module loads the
+//! AOT artifacts through the PJRT C API (`xla` crate) for the
+//! pre-simulation analyses (pruned-model accuracy, input-sparsity
+//! profiling) that the paper describes in Sec. IV-B.
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use ciminus::prelude::*;
+//! let arch = ciminus::hw::presets::usecase_arch(4, (2, 2));
+//! let net = ciminus::workload::zoo::resnet18(32, 100);
+//! let sparsity = FlexBlock::full_block(1, 16, 0.8);
+//! let report = ciminus::sim::simulate_network_default(&arch, &net, Some(&sparsity)).unwrap();
+//! println!("{}", report.summary());
+//! ```
+
+pub mod cli;
+pub mod explore;
+pub mod hw;
+pub mod mapping;
+pub mod pruning;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod sparsity;
+pub mod util;
+pub mod validate;
+pub mod workload;
+
+/// Convenience re-exports for the common API surface.
+pub mod prelude {
+    pub use crate::hw::arch::Architecture;
+    pub use crate::mapping::planner::MappingPlan;
+    pub use crate::pruning::workflow::PruningWorkflow;
+    pub use crate::sim::report::SimReport;
+    pub use crate::sparsity::flexblock::FlexBlock;
+    pub use crate::sparsity::pattern::{BlockPattern, PatternKind};
+    pub use crate::workload::graph::Network;
+    pub use crate::workload::op::{Op, OpKind};
+}

@@ -1,0 +1,13 @@
+//! `ciminus` binary entry point. All logic lives in the library
+//! (`ciminus::cli`) so integration tests and examples share it.
+
+fn main() {
+    let code = match ciminus::cli::run(std::env::args().skip(1)) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}

@@ -1,0 +1,112 @@
+//! Mapping strategies (Sec. VII-C): spatial mapping vs. weight
+//! duplication across the organization's second dimension, plus the
+//! auto-selection heuristic the mapping-strategy exploration evaluates.
+
+use crate::workload::op::MvmDims;
+
+/// How the organization's column dimension is used.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Unroll weight column tiles spatially (more of the matrix resident).
+    Spatial,
+    /// Duplicate weight tiles and split input vectors among copies
+    /// (higher utilization for compressed Conv layers, Fig. 11).
+    Duplicate,
+}
+
+impl Strategy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Strategy::Spatial => "spatial",
+            Strategy::Duplicate => "duplicate",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Strategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "spatial" | "sp" => Ok(Strategy::Spatial),
+            "duplicate" | "dp" | "dup" => Ok(Strategy::Duplicate),
+            other => anyhow::bail!("unknown mapping strategy `{other}` (spatial|duplicate)"),
+        }
+    }
+}
+
+/// Per-op strategy policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyPolicy {
+    /// Force one strategy for every MVM op.
+    Fixed(Strategy),
+    /// Heuristic: duplicate when the op has many vectors to share and its
+    /// weights underfill the spatially-available arrays (Conv layers);
+    /// spatial otherwise (FC layers — little reuse, duplication wastes
+    /// loads, Fig. 11's VGG finding).
+    Auto,
+}
+
+impl StrategyPolicy {
+    /// Resolve the strategy for an op: `fit` is the fraction of the
+    /// spatial capacity the op's compressed weights occupy (>1 = does not
+    /// fit at once).
+    pub fn resolve(&self, dims: &MvmDims, fit: f64) -> Strategy {
+        match self {
+            StrategyPolicy::Fixed(s) => *s,
+            StrategyPolicy::Auto => {
+                let reuse = dims.n_vectors; // vectors sharing the weights
+                if reuse >= 8 && fit < 0.5 {
+                    Strategy::Duplicate
+                } else {
+                    Strategy::Spatial
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(vecs: usize) -> MvmDims {
+        MvmDims {
+            rows: 512,
+            cols: 32,
+            n_vectors: vecs,
+            groups: 1,
+        }
+    }
+
+    #[test]
+    fn parse_labels() {
+        assert_eq!(Strategy::parse("spatial").unwrap(), Strategy::Spatial);
+        assert_eq!(Strategy::parse("DP").unwrap(), Strategy::Duplicate);
+        assert!(Strategy::parse("x").is_err());
+    }
+
+    #[test]
+    fn auto_duplicates_conv_like_ops() {
+        // many vectors, small footprint → duplicate
+        assert_eq!(
+            StrategyPolicy::Auto.resolve(&d(256), 0.1),
+            Strategy::Duplicate
+        );
+    }
+
+    #[test]
+    fn auto_keeps_fc_spatial() {
+        // FC: one vector → no reuse to split
+        assert_eq!(StrategyPolicy::Auto.resolve(&d(1), 0.1), Strategy::Spatial);
+        // big op that fills the arrays → spatial
+        assert_eq!(
+            StrategyPolicy::Auto.resolve(&d(256), 0.9),
+            Strategy::Spatial
+        );
+    }
+
+    #[test]
+    fn fixed_overrides() {
+        assert_eq!(
+            StrategyPolicy::Fixed(Strategy::Duplicate).resolve(&d(1), 2.0),
+            Strategy::Duplicate
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! Loopnest mapping description (Sec. IV-C Mapping ②): the multi-level
+//! loop representation of an MVM operation's execution, with each loop
+//! bound either temporally (sequential) or spatially (to an organization
+//! dimension of the macro grid).
+
+use crate::hw::org::MacroOrg;
+
+/// The loop axes of a tiled MVM on a multi-macro CIM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LoopAxis {
+    /// Weight-matrix row tiles (input-patch dimension).
+    RowTile,
+    /// Weight-matrix column tiles (output channels).
+    ColTile,
+    /// Input vectors (im2col columns / output pixels).
+    Vector,
+    /// Bit-serial input bits.
+    Bit,
+    /// Independent weight groups (depthwise).
+    Group,
+}
+
+impl LoopAxis {
+    pub fn label(&self) -> &'static str {
+        match self {
+            LoopAxis::RowTile => "row_tile",
+            LoopAxis::ColTile => "col_tile",
+            LoopAxis::Vector => "vector",
+            LoopAxis::Bit => "bit",
+            LoopAxis::Group => "group",
+        }
+    }
+}
+
+/// Binding of one loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Binding {
+    /// Executed sequentially.
+    Temporal,
+    /// Unrolled across organization dimension `dim` (0 or 1). For weight
+    /// axes this loads different tiles per macro; for the Vector axis it
+    /// *duplicates* weights and splits vectors (Sec. IV-C: "duplicates it
+    /// for feature loops").
+    Spatial { dim: usize },
+}
+
+/// One loop level: axis, trip count, binding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Loop {
+    pub axis: LoopAxis,
+    pub trips: usize,
+    pub binding: Binding,
+}
+
+/// An ordered loopnest (outermost first).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Loopnest {
+    pub loops: Vec<Loop>,
+}
+
+impl Loopnest {
+    /// Validate against an organization: each org dim bound at most once,
+    /// spatial trip counts need not divide the org dim (partial use), and
+    /// every axis appears at most once.
+    pub fn validate(&self, org: &MacroOrg) -> anyhow::Result<()> {
+        let mut seen_axes = std::collections::BTreeSet::new();
+        let mut dim_users: Vec<Vec<LoopAxis>> = vec![Vec::new(); 2];
+        for l in &self.loops {
+            if !seen_axes.insert(l.axis) {
+                anyhow::bail!("axis {:?} bound twice", l.axis);
+            }
+            if l.trips == 0 {
+                anyhow::bail!("axis {:?} has zero trip count", l.axis);
+            }
+            if let Binding::Spatial { dim } = l.binding {
+                if dim >= org.dims.len() {
+                    anyhow::bail!(
+                        "axis {:?} bound to org dim {dim}, but organization has {} dims",
+                        l.axis,
+                        org.dims.len()
+                    );
+                }
+                dim_users[dim].push(l.axis);
+            }
+        }
+        for (dim, users) in dim_users.iter().enumerate() {
+            if users.len() > 1 {
+                anyhow::bail!("org dim {dim} bound by multiple axes: {users:?}");
+            }
+        }
+        // bit loop must be temporal (bit-serial by construction)
+        if let Some(l) = self.loops.iter().find(|l| l.axis == LoopAxis::Bit) {
+            if l.binding != Binding::Temporal {
+                anyhow::bail!("bit-serial loop must be temporal");
+            }
+        }
+        Ok(())
+    }
+
+    /// Temporal trip-count product (sequential rounds).
+    pub fn temporal_rounds(&self) -> usize {
+        self.loops
+            .iter()
+            .filter(|l| l.binding == Binding::Temporal && l.axis != LoopAxis::Bit && l.axis != LoopAxis::Vector)
+            .map(|l| l.trips)
+            .product()
+    }
+
+    /// Render like the paper's Fig. 5(c) mapping description.
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        for (depth, l) in self.loops.iter().enumerate() {
+            let b = match l.binding {
+                Binding::Temporal => "temporal".to_string(),
+                Binding::Spatial { dim } => format!("spatial@org[{dim}]"),
+            };
+            out.push_str(&format!(
+                "{}for {} in 0..{} ({b})\n",
+                "  ".repeat(depth),
+                l.axis.label(),
+                l.trips
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn org() -> MacroOrg {
+        MacroOrg::grid(4, 4)
+    }
+
+    fn nest(loops: Vec<Loop>) -> Loopnest {
+        Loopnest { loops }
+    }
+
+    #[test]
+    fn valid_spatial_nest() {
+        let n = nest(vec![
+            Loop { axis: LoopAxis::RowTile, trips: 8, binding: Binding::Spatial { dim: 0 } },
+            Loop { axis: LoopAxis::ColTile, trips: 2, binding: Binding::Spatial { dim: 1 } },
+            Loop { axis: LoopAxis::Vector, trips: 256, binding: Binding::Temporal },
+            Loop { axis: LoopAxis::Bit, trips: 8, binding: Binding::Temporal },
+        ]);
+        n.validate(&org()).unwrap();
+        assert_eq!(n.temporal_rounds(), 1);
+    }
+
+    #[test]
+    fn duplication_nest_binds_vectors_spatially() {
+        let n = nest(vec![
+            Loop { axis: LoopAxis::RowTile, trips: 4, binding: Binding::Spatial { dim: 0 } },
+            Loop { axis: LoopAxis::ColTile, trips: 3, binding: Binding::Temporal },
+            Loop { axis: LoopAxis::Vector, trips: 4, binding: Binding::Spatial { dim: 1 } },
+            Loop { axis: LoopAxis::Bit, trips: 8, binding: Binding::Temporal },
+        ]);
+        n.validate(&org()).unwrap();
+        assert_eq!(n.temporal_rounds(), 3);
+    }
+
+    #[test]
+    fn rejects_double_binding_of_org_dim() {
+        let n = nest(vec![
+            Loop { axis: LoopAxis::RowTile, trips: 4, binding: Binding::Spatial { dim: 0 } },
+            Loop { axis: LoopAxis::ColTile, trips: 4, binding: Binding::Spatial { dim: 0 } },
+        ]);
+        assert!(n.validate(&org()).is_err());
+    }
+
+    #[test]
+    fn rejects_spatial_bit_loop() {
+        let n = nest(vec![Loop {
+            axis: LoopAxis::Bit,
+            trips: 8,
+            binding: Binding::Spatial { dim: 0 },
+        }]);
+        assert!(n.validate(&org()).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_axis_and_bad_dim() {
+        let n = nest(vec![
+            Loop { axis: LoopAxis::Vector, trips: 8, binding: Binding::Temporal },
+            Loop { axis: LoopAxis::Vector, trips: 8, binding: Binding::Temporal },
+        ]);
+        assert!(n.validate(&org()).is_err());
+        let n2 = nest(vec![Loop {
+            axis: LoopAxis::RowTile,
+            trips: 2,
+            binding: Binding::Spatial { dim: 5 },
+        }]);
+        assert!(n2.validate(&org()).is_err());
+    }
+
+    #[test]
+    fn describe_is_indented() {
+        let n = nest(vec![
+            Loop { axis: LoopAxis::RowTile, trips: 2, binding: Binding::Spatial { dim: 0 } },
+            Loop { axis: LoopAxis::Bit, trips: 8, binding: Binding::Temporal },
+        ]);
+        let d = n.describe();
+        assert!(d.contains("for row_tile in 0..2 (spatial@org[0])"));
+        assert!(d.contains("  for bit in 0..8 (temporal)"));
+    }
+}

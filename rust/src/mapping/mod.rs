@@ -1,0 +1,17 @@
+//! Mapping description layer (Sec. IV-C Mapping): data reshaping,
+//! rearrangement, tiling onto the macro grid, loopnest binding, and the
+//! per-network mapping planner with functional verification.
+
+pub mod duplication;
+pub mod loopnest;
+pub mod planner;
+pub mod rearrange;
+pub mod reshape;
+pub mod tiling;
+
+pub use duplication::{Strategy, StrategyPolicy};
+pub use loopnest::{Binding, Loop, LoopAxis, Loopnest};
+pub use planner::{plan, MappingOptions, MappingPlan, OpMapping};
+pub use rearrange::{rearrange, Rearranged};
+pub use reshape::Flattening;
+pub use tiling::{tile_op, MacroTile, OpTiling, Round};

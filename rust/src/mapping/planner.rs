@@ -1,0 +1,353 @@
+//! The mapping planner: binds workload + sparsity + architecture into a
+//! per-op executable mapping (compressed layout → rearrangement → tiling
+//! → loopnest), performing the functional verification of Sec. IV-B
+//! (hardware/workload/mapping consistency) before simulation.
+
+use super::duplication::{Strategy, StrategyPolicy};
+use super::loopnest::{Binding, Loop, LoopAxis, Loopnest};
+use super::rearrange::rearrange;
+use super::reshape::Flattening;
+use super::tiling::{tile_op, OpTiling};
+use crate::hw::arch::Architecture;
+use crate::pruning::workflow::PrunePlan;
+use crate::sparsity::compress::{compress, CompressedLayout};
+use crate::sparsity::flexblock::FlexBlock;
+use crate::sparsity::index::{index_storage, IndexStorage};
+use crate::workload::graph::Network;
+use crate::workload::op::{MvmDims, OpId};
+use std::collections::BTreeMap;
+
+/// User-facing mapping options (the mapping description's knobs).
+#[derive(Debug, Clone, Copy)]
+pub struct MappingOptions {
+    pub policy: StrategyPolicy,
+    pub flattening: Flattening,
+    /// Equalize ragged compressed matrices (Fig. 12).
+    pub rearrange: bool,
+    /// Slice width for rearrangement.
+    pub rearrange_slice: usize,
+}
+
+impl Default for MappingOptions {
+    fn default() -> Self {
+        Self {
+            policy: StrategyPolicy::Auto,
+            flattening: Flattening::ChannelMajor,
+            rearrange: false,
+            rearrange_slice: 16,
+        }
+    }
+}
+
+/// One MVM op's complete mapping.
+#[derive(Debug, Clone)]
+pub struct OpMapping {
+    pub op: OpId,
+    pub name: String,
+    pub dims: MvmDims,
+    pub fb: FlexBlock,
+    pub layout: CompressedLayout,
+    pub tiling: OpTiling,
+    pub strategy: Strategy,
+    pub index: IndexStorage,
+    pub rearrange_moved_bytes: u64,
+    pub loopnest: Loopnest,
+}
+
+/// Whole-network mapping.
+#[derive(Debug, Clone)]
+pub struct MappingPlan {
+    pub arch_name: String,
+    pub ops: BTreeMap<OpId, OpMapping>,
+}
+
+impl MappingPlan {
+    /// Mean array utilization across MVM ops (round-weighted).
+    pub fn mean_utilization(&self) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for m in self.ops.values() {
+            let w = m.tiling.rounds.len().max(1) as f64;
+            num += m.tiling.utilization * w;
+            den += w;
+        }
+        if den == 0.0 {
+            0.0
+        } else {
+            num / den
+        }
+    }
+
+    /// Total index-memory bytes required (sizes the index memories).
+    pub fn total_index_bytes(&self) -> u64 {
+        self.ops.values().map(|m| m.index.total_bytes()).sum()
+    }
+}
+
+/// Build the mapping plan, verifying hardware support for every
+/// sparsity feature the workload needs.
+pub fn plan(
+    arch: &Architecture,
+    net: &Network,
+    prune: Option<&PrunePlan>,
+    opts: MappingOptions,
+) -> anyhow::Result<MappingPlan> {
+    arch.validate()?;
+    let spatial_capacity_cells = (arch.org.n_macros() * arch.cim.capacity_words()) as f64;
+    let mut ops = BTreeMap::new();
+    for id in net.mvm_ops() {
+        let dims = net
+            .mvm_dims(id)
+            .ok_or_else(|| anyhow::anyhow!("op {id} lost its MVM dims"))?;
+        let op_name = net.ops[id].name.clone();
+        let ctx = opts.flattening.layer_ctx(net, id);
+        let lp = prune.and_then(|p| p.mask_for(id));
+        let (fb, mut layout) = match lp {
+            Some(lp) => {
+                let layout = compress(&lp.fb, &lp.mask, ctx);
+                (lp.fb.clone(), layout)
+            }
+            None => (
+                FlexBlock::dense(),
+                CompressedLayout::dense(dims.rows, dims.cols),
+            ),
+        };
+
+        // ---- functional verification (Sec. IV-B) ----
+        if !fb.is_dense() {
+            if !arch.sparsity.weight_indexing {
+                anyhow::bail!(
+                    "op `{op_name}`: FlexBlock `{}` requires weight index support, \
+                     but architecture `{}` has none",
+                    fb.name,
+                    arch.name
+                );
+            }
+            if layout.routed_rows && !arch.sparsity.weight_routing {
+                anyhow::bail!(
+                    "op `{op_name}`: pattern `{}` needs mux-based input routing, \
+                     but architecture `{}` lacks routing units",
+                    fb.name,
+                    arch.name
+                );
+            }
+        }
+
+        // ---- rearrangement ----
+        let mut moved = 0u64;
+        if opts.rearrange && !fb.is_dense() {
+            let r = rearrange(&layout, opts.rearrange_slice, arch.weight_bits);
+            moved = r.moved_bytes;
+            layout = r.layout;
+            if layout.routed_rows && !arch.sparsity.weight_routing {
+                anyhow::bail!(
+                    "op `{op_name}`: rearrangement requires input routing support"
+                );
+            }
+        }
+
+        // ---- strategy + tiling ----
+        let fit = (layout.comp_rows * layout.comp_cols) as f64 * dims.groups as f64
+            / spatial_capacity_cells;
+        let strategy = opts.policy.resolve(&dims, fit);
+        let tiling = tile_op(arch, &dims, &layout, strategy);
+        let index = index_storage(&fb, &layout, ctx);
+
+        // ---- loopnest description ----
+        let mut loops = vec![Loop {
+            axis: LoopAxis::RowTile,
+            trips: tiling.tiles_r,
+            binding: Binding::Spatial { dim: 0 },
+        }];
+        match strategy {
+            Strategy::Spatial => {
+                loops.push(Loop {
+                    axis: LoopAxis::ColTile,
+                    trips: tiling.tiles_c,
+                    binding: Binding::Spatial { dim: 1 },
+                });
+                loops.push(Loop {
+                    axis: LoopAxis::Vector,
+                    trips: dims.n_vectors,
+                    binding: Binding::Temporal,
+                });
+            }
+            Strategy::Duplicate => {
+                loops.push(Loop {
+                    axis: LoopAxis::ColTile,
+                    trips: tiling.tiles_c,
+                    binding: Binding::Temporal,
+                });
+                loops.push(Loop {
+                    axis: LoopAxis::Vector,
+                    trips: arch.org.col_dim(),
+                    binding: Binding::Spatial { dim: 1 },
+                });
+            }
+        }
+        if dims.groups > 1 {
+            loops.push(Loop {
+                axis: LoopAxis::Group,
+                trips: dims.groups.div_ceil(tiling.groups_per_tile),
+                binding: Binding::Temporal,
+            });
+        }
+        loops.push(Loop {
+            axis: LoopAxis::Bit,
+            trips: arch.input_bits,
+            binding: Binding::Temporal,
+        });
+        let loopnest = Loopnest { loops };
+        loopnest.validate(&arch.org)?;
+
+        ops.insert(
+            id,
+            OpMapping {
+                op: id,
+                name: op_name,
+                dims,
+                fb,
+                layout,
+                tiling,
+                strategy,
+                index,
+                rearrange_moved_bytes: moved,
+                loopnest,
+            },
+        );
+    }
+    Ok(MappingPlan {
+        arch_name: arch.name.clone(),
+        ops,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+    use crate::pruning::workflow::PruningWorkflow;
+    use crate::workload::zoo;
+
+    #[test]
+    fn dense_plan_covers_all_mvm_ops() {
+        let arch = presets::usecase_arch(4, (2, 2));
+        let net = zoo::resnet_mini();
+        let p = plan(&arch, &net, None, MappingOptions::default()).unwrap();
+        assert_eq!(p.ops.len(), net.mvm_ops().len());
+        for m in p.ops.values() {
+            assert!(!m.tiling.rounds.is_empty(), "{}", m.name);
+            assert!(m.index.total_bits() == 0);
+        }
+    }
+
+    #[test]
+    fn sparse_plan_requires_support() {
+        let mut arch = presets::usecase_arch(4, (2, 2));
+        let net = zoo::resnet_mini();
+        let wf = PruningWorkflow::default();
+        let pp = wf
+            .run_uniform(&net, &FlexBlock::intra(2, 0.5), None)
+            .unwrap();
+        // full support: ok
+        assert!(plan(&arch, &net, Some(&pp), MappingOptions::default()).is_ok());
+        // no routing: intra patterns must be rejected
+        arch.sparsity.weight_routing = false;
+        assert!(plan(&arch, &net, Some(&pp), MappingOptions::default()).is_err());
+        // no indexing at all: any sparsity rejected
+        arch.sparsity.weight_indexing = false;
+        let pp2 = wf
+            .run_uniform(&net, &FlexBlock::row_wise(0.5), None)
+            .unwrap();
+        assert!(plan(&arch, &net, Some(&pp2), MappingOptions::default()).is_err());
+    }
+
+    #[test]
+    fn sparsity_reduces_rounds_vs_dense() {
+        let arch = presets::usecase_arch(4, (2, 2));
+        let net = zoo::vgg16(32, 100);
+        let wf = PruningWorkflow::default();
+        let pp = wf
+            .run_uniform(&net, &FlexBlock::row_wise(0.8), None)
+            .unwrap();
+        let dense = plan(&arch, &net, None, MappingOptions::default()).unwrap();
+        let sparse = plan(&arch, &net, Some(&pp), MappingOptions::default()).unwrap();
+        let rounds = |p: &MappingPlan| -> usize {
+            p.ops.values().map(|m| m.tiling.rounds.len()).sum()
+        };
+        assert!(
+            rounds(&sparse) < rounds(&dense),
+            "sparse {} vs dense {}",
+            rounds(&sparse),
+            rounds(&dense)
+        );
+    }
+
+    #[test]
+    fn rearrangement_improves_utilization() {
+        let arch = presets::usecase_arch(16, (4, 4));
+        let net = zoo::resnet50(32, 100);
+        let wf = PruningWorkflow::default();
+        let pp = wf
+            .run_uniform(&net, &FlexBlock::hybrid(2, 16, 0.8), None)
+            .unwrap();
+        let base = plan(&arch, &net, Some(&pp), MappingOptions::default()).unwrap();
+        let rearr = plan(
+            &arch,
+            &net,
+            Some(&pp),
+            MappingOptions {
+                rearrange: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            rearr.mean_utilization() > base.mean_utilization(),
+            "rearranged {} <= base {}",
+            rearr.mean_utilization(),
+            base.mean_utilization()
+        );
+        let moved: u64 = rearr.ops.values().map(|m| m.rearrange_moved_bytes).sum();
+        assert!(moved > 0, "rearrangement moved data");
+    }
+
+    #[test]
+    fn duplication_policy_affects_fc_and_conv_differently() {
+        let arch = presets::usecase_arch(16, (4, 4));
+        let net = zoo::vgg_mini();
+        let wf = PruningWorkflow::default();
+        let pp = wf
+            .run_uniform(&net, &FlexBlock::row_wise(0.8), None)
+            .unwrap();
+        let p = plan(&arch, &net, Some(&pp), MappingOptions::default()).unwrap();
+        let mut saw_conv_dup = false;
+        for m in p.ops.values() {
+            if matches!(
+                net.ops[m.op].kind,
+                crate::workload::op::OpKind::Fc { .. }
+            ) {
+                assert_eq!(m.strategy, Strategy::Spatial, "FC stays spatial");
+            } else if m.strategy == Strategy::Duplicate {
+                saw_conv_dup = true;
+            }
+        }
+        assert!(saw_conv_dup, "some conv got duplicated");
+    }
+
+    #[test]
+    fn index_bytes_grow_with_finer_patterns() {
+        let arch = presets::usecase_arch(4, (2, 2));
+        let net = zoo::resnet_mini();
+        let wf = PruningWorkflow::default();
+        let coarse = wf
+            .run_uniform(&net, &FlexBlock::row_wise(0.8), None)
+            .unwrap();
+        let fine = wf
+            .run_uniform(&net, &FlexBlock::hybrid(2, 16, 0.8), None)
+            .unwrap();
+        let pc = plan(&arch, &net, Some(&coarse), MappingOptions::default()).unwrap();
+        let pf = plan(&arch, &net, Some(&fine), MappingOptions::default()).unwrap();
+        assert!(pf.total_index_bytes() > pc.total_index_bytes());
+    }
+}

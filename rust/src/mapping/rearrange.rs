@@ -1,0 +1,179 @@
+//! Weight-data rearrangement (Sec. IV-C ①, Fig. 12): equalizing ragged
+//! compressed matrices to improve spatial utilization.
+//!
+//! After FlexBlock compression, partial-width patterns (path D) leave
+//! each physical row with a different occupied width. Mapping the ragged
+//! matrix directly wastes array columns (the tile must span the longest
+//! row). Rearrangement slices long rows into `slice` -wide chunks and
+//! greedily repacks them into near-uniform rows — at the cost of extra
+//! buffer traffic to shuffle the data (the overhead Fig. 12 exposes).
+
+use crate::sparsity::compress::CompressedLayout;
+
+/// Result of a rearrangement pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rearranged {
+    /// The equalized layout (row_lengths repacked, comp dims updated).
+    pub layout: CompressedLayout,
+    /// Bytes moved through the weight buffer to realize the shuffle
+    /// (read + write once per moved element byte).
+    pub moved_bytes: u64,
+    /// Raggedness before/after: (max−min)/max of row lengths.
+    pub raggedness_before: f64,
+    pub raggedness_after: f64,
+}
+
+fn raggedness(lengths: &[usize]) -> f64 {
+    let max = lengths.iter().copied().max().unwrap_or(0);
+    let min = lengths.iter().copied().min().unwrap_or(0);
+    if max == 0 {
+        0.0
+    } else {
+        (max - min) as f64 / max as f64
+    }
+}
+
+/// Equalize `layout.row_lengths` by slicing rows at `slice` granularity
+/// and repacking greedily (first-fit-decreasing) into rows of the target
+/// width. `weight_bits` sizes the data movement cost.
+pub fn rearrange(layout: &CompressedLayout, slice: usize, weight_bits: usize) -> Rearranged {
+    assert!(slice > 0, "slice size must be positive");
+    let before = raggedness(&layout.row_lengths);
+    let total_occ: usize = layout.row_lengths.iter().sum();
+    if total_occ == 0 || layout.comp_rows == 0 {
+        return Rearranged {
+            layout: layout.clone(),
+            moved_bytes: 0,
+            raggedness_before: before,
+            raggedness_after: before,
+        };
+    }
+    // target width: the smallest multiple of `slice` that fits the mean
+    // occupancy — equalization cannot beat the mean.
+    let mean = total_occ as f64 / layout.comp_rows as f64;
+    let target = (mean / slice as f64).ceil() as usize * slice;
+    let target = target.max(slice);
+
+    // slice every row into `slice`-wide chunks (last chunk partial)
+    let mut chunks: Vec<usize> = Vec::new();
+    let mut moved: u64 = 0;
+    let mut new_rows: Vec<usize> = Vec::new();
+    for &len in &layout.row_lengths {
+        if len == 0 {
+            continue;
+        }
+        if len <= target {
+            // row stays in place; only the overflow rows move
+            new_rows.push(len);
+        } else {
+            // keep `target` in place, slice the remainder for repacking
+            new_rows.push(target);
+            let mut rem = len - target;
+            while rem > 0 {
+                let c = rem.min(slice);
+                chunks.push(c);
+                moved += c as u64 * weight_bits as u64 / 8;
+                rem -= c;
+            }
+        }
+    }
+    // first-fit-decreasing pack of chunks into rows with spare capacity,
+    // then into fresh rows
+    chunks.sort_unstable_by(|a, b| b.cmp(a));
+    for c in chunks {
+        let mut placed = false;
+        for r in new_rows.iter_mut() {
+            if *r + c <= target {
+                *r += c;
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            new_rows.push(c);
+        }
+    }
+    let comp_rows = new_rows.len();
+    let comp_cols = new_rows.iter().copied().max().unwrap_or(0);
+    let after = raggedness(&new_rows);
+    let mut out = layout.clone();
+    out.comp_rows = comp_rows;
+    out.comp_cols = comp_cols;
+    out.row_lengths = new_rows;
+    // rearrangement scrambles block alignment → routing always required
+    out.misaligned_cols = layout.misaligned_cols;
+    out.routed_rows = true;
+    Rearranged {
+        layout: out,
+        moved_bytes: moved,
+        raggedness_before: before,
+        raggedness_after: after,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::compress::compress;
+    use crate::sparsity::flexblock::FlexBlock;
+    use crate::sparsity::mask::{random_mask, LayerCtx};
+    use crate::util::rng::Pcg32;
+
+    fn ragged_layout(seed: u64) -> CompressedLayout {
+        let fb = FlexBlock::row_block(16, 0.6);
+        let ctx = LayerCtx::fc();
+        let mut rng = Pcg32::new(seed);
+        let mask = random_mask(&fb, 128, 128, ctx, &mut rng);
+        compress(&fb, &mask, ctx)
+    }
+
+    #[test]
+    fn rearrange_reduces_raggedness_and_width() {
+        let l = ragged_layout(1);
+        let r = rearrange(&l, 16, 8);
+        assert!(r.raggedness_after <= r.raggedness_before + 1e-12);
+        assert!(r.layout.comp_cols <= l.comp_cols);
+        // occupancy preserved
+        let before: usize = l.row_lengths.iter().sum();
+        let after: usize = r.layout.row_lengths.iter().sum();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn rearrange_costs_buffer_traffic_when_ragged() {
+        let l = ragged_layout(2);
+        let r = rearrange(&l, 16, 8);
+        if r.raggedness_before > 0.2 {
+            assert!(r.moved_bytes > 0, "shuffling ragged rows moves data");
+        }
+    }
+
+    #[test]
+    fn uniform_layout_is_noop() {
+        let l = CompressedLayout::dense(32, 64);
+        let r = rearrange(&l, 16, 8);
+        assert_eq!(r.moved_bytes, 0);
+        assert_eq!(r.layout.comp_rows, 32);
+        assert_eq!(r.layout.comp_cols, 64);
+    }
+
+    #[test]
+    fn packing_utilization_improves() {
+        let l = ragged_layout(3);
+        let r = rearrange(&l, 16, 8);
+        assert!(
+            r.layout.packing_utilization() >= l.packing_utilization() - 1e-9,
+            "after {} < before {}",
+            r.layout.packing_utilization(),
+            l.packing_utilization()
+        );
+    }
+
+    #[test]
+    fn rows_never_exceed_target_plus_slice() {
+        let l = ragged_layout(4);
+        let r = rearrange(&l, 8, 8);
+        let max = r.layout.row_lengths.iter().copied().max().unwrap();
+        assert_eq!(max, r.layout.comp_cols);
+    }
+}

@@ -1,0 +1,99 @@
+//! Data reshaping (Sec. IV-C Mapping ①): flattening sequence for
+//! conv filters → 2-D matrices and the compression orientation.
+//!
+//! The reshaped orientation is fixed by the weight-stationary dataflow
+//! (rows = input-patch dims on array rows, cols = output channels on
+//! bitlines); the *flattening sequence* chooses the row ordering, which
+//! determines which FlexBlock patterns align with contiguous row groups
+//! (channel-major makes channel-wise pruning a contiguous row block).
+
+use crate::sparsity::mask::LayerCtx;
+use crate::workload::graph::Network;
+use crate::workload::op::{OpId, OpKind};
+
+/// Row-ordering of the flattened conv filter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flattening {
+    /// (c, kh, kw): rows of one channel are contiguous (kh·kw rows per
+    /// channel). Default; required for channel-wise FlexBlock binding.
+    ChannelMajor,
+    /// (kh, kw, c): spatial-major; channels interleave.
+    SpatialMajor,
+}
+
+impl Flattening {
+    /// Layer context for FlexBlock symbolic-dim binding under this
+    /// flattening (per-channel contiguous rows or not).
+    pub fn layer_ctx(&self, net: &Network, id: OpId) -> LayerCtx {
+        match (&net.ops[id].kind, self) {
+            (OpKind::Conv2d { kh, kw, .. }, Flattening::ChannelMajor) => LayerCtx {
+                per_channel: kh * kw,
+            },
+            // spatial-major: channel rows are strided; a "channel block"
+            // degenerates to single rows
+            (OpKind::Conv2d { .. }, Flattening::SpatialMajor) => LayerCtx { per_channel: 1 },
+            _ => LayerCtx::fc(),
+        }
+    }
+}
+
+/// Compression orientation (Sec. IV-C ①): which direction zero regions
+/// are squeezed out of the reshaped matrix. Derived automatically from
+/// the FlexBlock pattern by `sparsity::compress`; recorded here for the
+/// mapping description.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressOrientation {
+    RowWise,
+    ColumnWise,
+}
+
+/// Weight bytes of an MVM op at `weight_bits` precision (per group,
+/// all groups).
+pub fn weight_bytes(net: &Network, id: OpId, weight_bits: usize) -> u64 {
+    net.mvm_dims(id)
+        .map(|d| d.params() * weight_bits as u64 / 8)
+        .unwrap_or(0)
+}
+
+/// Input-feature bytes streamed through an MVM op (im2col vectors ×
+/// patch length), at `input_bits` precision.
+pub fn input_bytes(net: &Network, id: OpId, input_bits: usize) -> u64 {
+    net.mvm_dims(id)
+        .map(|d| (d.rows * d.n_vectors * d.groups) as u64 * input_bits as u64 / 8)
+        .unwrap_or(0)
+}
+
+/// Output bytes produced by an MVM op (before post-processing), at
+/// `input_bits` precision (outputs re-quantized to activation width).
+pub fn output_bytes(net: &Network, id: OpId, input_bits: usize) -> u64 {
+    net.mvm_dims(id)
+        .map(|d| (d.cols * d.n_vectors * d.groups) as u64 * input_bits as u64 / 8)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn channel_major_ctx() {
+        let net = zoo::resnet_mini();
+        let conv_id = net.mvm_ops()[1]; // a 3x3 conv
+        let ctx = Flattening::ChannelMajor.layer_ctx(&net, conv_id);
+        assert_eq!(ctx.per_channel, 9);
+        let ctx_s = Flattening::SpatialMajor.layer_ctx(&net, conv_id);
+        assert_eq!(ctx_s.per_channel, 1);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let net = zoo::vgg_mini();
+        let fc_id = *net.mvm_ops().last().unwrap(); // fc2: 128→10
+        assert_eq!(weight_bytes(&net, fc_id, 8), 128 * 10);
+        assert_eq!(input_bytes(&net, fc_id, 8), 128);
+        assert_eq!(output_bytes(&net, fc_id, 8), 10);
+        // 4-bit weights halve storage
+        assert_eq!(weight_bytes(&net, fc_id, 4), 128 * 10 / 2);
+    }
+}

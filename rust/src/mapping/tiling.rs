@@ -1,0 +1,424 @@
+//! Tile partitioning and round construction: how a compressed weight
+//! matrix is cut into array-sized tiles and scheduled onto the macro
+//! grid over temporal rounds (the executable form of the loopnest).
+
+use super::duplication::Strategy;
+use crate::hw::arch::Architecture;
+use crate::sparsity::compress::CompressedLayout;
+use crate::workload::op::MvmDims;
+
+/// One macro's tile occupancy in a round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MacroTile {
+    /// Array rows with at least one occupied cell.
+    pub rows_used: usize,
+    /// Maximum occupied column extent.
+    pub cols_used: usize,
+    /// Total occupied weight cells.
+    pub occupied: u64,
+}
+
+/// One temporal round: a set of macros computing concurrently.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Round {
+    /// Occupied tiles, one entry per *active* macro this round.
+    pub tiles: Vec<MacroTile>,
+    /// Input vectors each active macro processes this round.
+    pub vectors_per_macro: usize,
+    /// Compressed weight bytes pulled from the weight buffer this round.
+    /// Duplicated copies receive the same tile over a broadcast bus, so
+    /// they count once here.
+    pub weight_bytes: u64,
+    /// Final output values leaving the macros this round (after on-chip
+    /// accumulation across row tiles), used for write-back sizing.
+    pub outputs: u64,
+    /// Distinct input rows that must be fetched this round, per vector:
+    /// macros sharing a row tile (spatial column unrolling) share inputs;
+    /// duplicates process different vectors so each copy counts.
+    pub input_rows: u64,
+}
+
+impl Round {
+    pub fn occupied_cells(&self) -> u64 {
+        self.tiles.iter().map(|t| t.occupied).sum()
+    }
+}
+
+/// A fully tiled + scheduled MVM op.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpTiling {
+    pub tiles_r: usize,
+    pub tiles_c: usize,
+    pub rounds: Vec<Round>,
+    /// Mean array utilization across rounds, counting idle macros
+    /// (occupied cells / (n_macros · R · C)).
+    pub utilization: f64,
+    /// groups packed block-diagonally per tile (1 for standard layers).
+    pub groups_per_tile: usize,
+}
+
+/// Build the tiling/schedule for one MVM op.
+///
+/// `layout` is the (possibly rearranged) compressed layout of the
+/// *per-group* weight matrix; `dims` carries groups and vector counts.
+pub fn tile_op(
+    arch: &Architecture,
+    dims: &MvmDims,
+    layout: &CompressedLayout,
+    strategy: Strategy,
+) -> OpTiling {
+    let (r_arr, c_arr) = (arch.cim.rows, arch.cim.cols);
+    let d0 = arch.org.row_dim();
+    let d1 = arch.org.col_dim();
+    let n_macros = arch.org.n_macros();
+
+    if dims.groups > 1 {
+        return tile_grouped(arch, dims, layout, strategy);
+    }
+
+    let tiles_r = layout.comp_rows.div_ceil(r_arr).max(1);
+    let tiles_c = layout.comp_cols.div_ceil(c_arr).max(1);
+
+    // occupancy of tile (tr, tc)
+    let tile_at = |tr: usize, tc: usize| -> MacroTile {
+        let r0 = tr * r_arr;
+        let r1 = ((tr + 1) * r_arr).min(layout.comp_rows);
+        let c0 = tc * c_arr;
+        let mut rows_used = 0usize;
+        let mut cols_used = 0usize;
+        let mut occupied = 0u64;
+        for r in r0..r1 {
+            let len = layout.row_lengths.get(r).copied().unwrap_or(0);
+            let active = len.saturating_sub(c0).min(c_arr);
+            if active > 0 {
+                rows_used += 1;
+                cols_used = cols_used.max(active);
+                occupied += active as u64;
+            }
+        }
+        MacroTile {
+            rows_used,
+            cols_used,
+            occupied,
+        }
+    };
+
+    let wb = arch.weight_bits as u64;
+    let mut rounds = Vec::new();
+    match strategy {
+        Strategy::Spatial => {
+            // row tiles across org dim0, col tiles across org dim1
+            let rounds_r = tiles_r.div_ceil(d0);
+            let rounds_c = tiles_c.div_ceil(d1);
+            for rr in 0..rounds_r {
+                for rc in 0..rounds_c {
+                    let mut tiles = Vec::new();
+                    let mut bytes = 0u64;
+                    let mut outputs = 0u64;
+                    let mut input_rows = 0u64;
+                    // outputs: one value per (col position, vector) —
+                    // partial sums accumulate across row tiles on-chip
+                    let mut col_extent = vec![0usize; d1];
+                    for i in 0..d0 {
+                        let tr = rr * d0 + i;
+                        if tr >= tiles_r {
+                            continue;
+                        }
+                        let mut row_tile_max = 0usize;
+                        for j in 0..d1 {
+                            let tc = rc * d1 + j;
+                            if tc >= tiles_c {
+                                continue;
+                            }
+                            let t = tile_at(tr, tc);
+                            if t.occupied == 0 {
+                                continue;
+                            }
+                            bytes += t.occupied * wb / 8;
+                            col_extent[j] = col_extent[j].max(t.cols_used);
+                            row_tile_max = row_tile_max.max(t.rows_used);
+                            tiles.push(t);
+                        }
+                        // column-unrolled macros share this row tile's inputs
+                        input_rows += row_tile_max as u64;
+                    }
+                    outputs += col_extent.iter().map(|&c| c as u64).sum::<u64>()
+                        * dims.n_vectors as u64;
+                    if tiles.is_empty() {
+                        continue;
+                    }
+                    rounds.push(Round {
+                        tiles,
+                        vectors_per_macro: dims.n_vectors,
+                        weight_bytes: bytes,
+                        outputs,
+                        input_rows,
+                    });
+                }
+            }
+        }
+        Strategy::Duplicate => {
+            // row tiles across dim0; col tiles temporal; dim1 duplicates
+            // the weights and splits the vectors
+            let rounds_r = tiles_r.div_ceil(d0);
+            let vec_share = dims.n_vectors.div_ceil(d1).max(1);
+            for rr in 0..rounds_r {
+                for tc in 0..tiles_c {
+                    let mut tiles = Vec::new();
+                    let mut bytes = 0u64;
+                    let mut outputs = 0u64;
+                    let mut input_rows = 0u64;
+                    let mut col_max = 0usize;
+                    for i in 0..d0 {
+                        let tr = rr * d0 + i;
+                        if tr >= tiles_r {
+                            continue;
+                        }
+                        let t = tile_at(tr, tc);
+                        if t.occupied == 0 {
+                            continue;
+                        }
+                        // one broadcast read serves all d1 duplicates;
+                        // each copy processes a different vector share and
+                        // fetches its own inputs
+                        bytes += t.occupied * wb / 8;
+                        col_max = col_max.max(t.cols_used);
+                        for _ in 0..d1 {
+                            input_rows += t.rows_used as u64;
+                            tiles.push(t);
+                        }
+                    }
+                    // copies cover disjoint vectors; row tiles accumulate
+                    outputs += col_max as u64 * (vec_share * d1) as u64;
+                    if tiles.is_empty() {
+                        continue;
+                    }
+                    rounds.push(Round {
+                        tiles,
+                        vectors_per_macro: vec_share,
+                        weight_bytes: bytes,
+                        outputs,
+                        input_rows,
+                    });
+                }
+            }
+        }
+    }
+
+    let utilization = mean_utilization(&rounds, n_macros, r_arr, c_arr);
+    OpTiling {
+        tiles_r,
+        tiles_c,
+        rounds,
+        utilization,
+        groups_per_tile: 1,
+    }
+}
+
+/// Depthwise/grouped layers: per-group matrices are tiny (kh·kw × 1), so
+/// groups pack block-diagonally into one tile — disjoint rows *and*
+/// columns per group keep row broadcast and column accumulation disjoint.
+fn tile_grouped(
+    arch: &Architecture,
+    dims: &MvmDims,
+    layout: &CompressedLayout,
+    strategy: Strategy,
+) -> OpTiling {
+    let (r_arr, c_arr) = (arch.cim.rows, arch.cim.cols);
+    let d0 = arch.org.row_dim();
+    let d1 = arch.org.col_dim();
+    let n_macros = arch.org.n_macros();
+    let g_rows = layout.comp_rows.max(1);
+    let g_cols = layout.comp_cols.max(1);
+    let per_tile = (r_arr / g_rows).min(c_arr / g_cols).max(1);
+    let tiles = dims.groups.div_ceil(per_tile);
+    let occupied_per_group = layout.row_lengths.iter().map(|&l| l as u64).sum::<u64>();
+    let wb = arch.weight_bits as u64;
+
+    let tile_for = |groups_here: usize| MacroTile {
+        rows_used: groups_here * g_rows,
+        cols_used: groups_here * g_cols,
+        occupied: occupied_per_group * groups_here as u64,
+    };
+
+    let (spatial_macros, vec_share) = match strategy {
+        Strategy::Spatial => (d0 * d1, dims.n_vectors),
+        Strategy::Duplicate => (d0, dims.n_vectors.div_ceil(d1).max(1)),
+    };
+    let dup = match strategy {
+        Strategy::Spatial => 1,
+        Strategy::Duplicate => d1,
+    };
+
+    let mut rounds = Vec::new();
+    let mut remaining = dims.groups;
+    while remaining > 0 {
+        let mut tiles_vec = Vec::new();
+        let mut bytes = 0u64;
+        let mut outputs = 0u64;
+        let mut input_rows = 0u64;
+        for _ in 0..spatial_macros {
+            if remaining == 0 {
+                break;
+            }
+            let g_here = remaining.min(per_tile);
+            remaining -= g_here;
+            let t = tile_for(g_here);
+            // broadcast one tile load to all duplicates; copies split
+            // the vectors, so outputs cover the full vector range
+            bytes += t.occupied * wb / 8;
+            outputs += t.cols_used as u64 * (vec_share * dup) as u64;
+            for _ in 0..dup {
+                input_rows += t.rows_used as u64;
+                tiles_vec.push(t);
+            }
+        }
+        rounds.push(Round {
+            tiles: tiles_vec,
+            vectors_per_macro: vec_share,
+            weight_bytes: bytes,
+            outputs,
+            input_rows,
+        });
+    }
+    let utilization = mean_utilization(&rounds, n_macros, r_arr, c_arr);
+    OpTiling {
+        tiles_r: tiles,
+        tiles_c: 1,
+        rounds,
+        utilization,
+        groups_per_tile: per_tile,
+    }
+}
+
+fn mean_utilization(rounds: &[Round], n_macros: usize, r: usize, c: usize) -> f64 {
+    if rounds.is_empty() {
+        return 0.0;
+    }
+    let cap = (n_macros * r * c) as f64;
+    rounds
+        .iter()
+        .map(|rd| rd.occupied_cells() as f64 / cap)
+        .sum::<f64>()
+        / rounds.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+    use crate::sparsity::compress::CompressedLayout;
+    use crate::workload::op::MvmDims;
+
+    fn dims(rows: usize, cols: usize, vecs: usize) -> MvmDims {
+        MvmDims {
+            rows,
+            cols,
+            n_vectors: vecs,
+            groups: 1,
+        }
+    }
+
+    #[test]
+    fn dense_small_fits_one_round() {
+        let arch = presets::usecase_arch(4, (2, 2)); // 1024x32 arrays
+        let d = dims(512, 32, 100);
+        let l = CompressedLayout::dense(512, 32);
+        let t = tile_op(&arch, &d, &l, Strategy::Spatial);
+        assert_eq!((t.tiles_r, t.tiles_c), (1, 1));
+        assert_eq!(t.rounds.len(), 1);
+        assert_eq!(t.rounds[0].tiles.len(), 1);
+        assert_eq!(t.rounds[0].tiles[0].rows_used, 512);
+        // utilization: 512*32 cells of 4 macros × 1024×32
+        assert!((t.utilization - 512.0 * 32.0 / (4.0 * 1024.0 * 32.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spatial_uses_grid() {
+        let arch = presets::usecase_arch(4, (2, 2));
+        // 2048 rows × 64 cols → 2×2 tiles → one round on 2×2 org
+        let d = dims(2048, 64, 10);
+        let l = CompressedLayout::dense(2048, 64);
+        let t = tile_op(&arch, &d, &l, Strategy::Spatial);
+        assert_eq!((t.tiles_r, t.tiles_c), (2, 2));
+        assert_eq!(t.rounds.len(), 1);
+        assert_eq!(t.rounds[0].tiles.len(), 4);
+        assert!((t.utilization - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spatial_overflow_goes_temporal() {
+        let arch = presets::usecase_arch(4, (2, 2));
+        let d = dims(4096, 64, 10);
+        let l = CompressedLayout::dense(4096, 64);
+        let t = tile_op(&arch, &d, &l, Strategy::Spatial);
+        assert_eq!(t.tiles_r, 4);
+        assert_eq!(t.rounds.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_splits_vectors_and_reloads_weights() {
+        let arch = presets::usecase_arch(4, (2, 2));
+        let d = dims(1024, 32, 100);
+        let l = CompressedLayout::dense(1024, 32);
+        let sp = tile_op(&arch, &d, &l, Strategy::Spatial);
+        let dp = tile_op(&arch, &d, &l, Strategy::Duplicate);
+        // duplication: 2 copies working on 50 vectors each
+        assert_eq!(dp.rounds[0].vectors_per_macro, 50);
+        assert_eq!(sp.rounds[0].vectors_per_macro, 100);
+        // the duplicate copies receive the tile over a broadcast bus —
+        // one weight-buffer read covers both
+        assert_eq!(dp.rounds[0].weight_bytes, sp.rounds[0].weight_bytes);
+        // outputs cover the same total work either way
+        assert_eq!(dp.rounds[0].outputs, sp.rounds[0].outputs);
+        // and duplication doubles utilization for this single-tile op
+        assert!(dp.utilization > sp.utilization * 1.9);
+    }
+
+    #[test]
+    fn ragged_rows_limit_cols_used() {
+        let arch = presets::usecase_arch(4, (2, 2));
+        let mut l = CompressedLayout::dense(64, 32);
+        l.row_lengths = (0..64).map(|r| if r < 32 { 32 } else { 8 }).collect();
+        l.comp_cols = 32;
+        let d = dims(64, 32, 10);
+        let t = tile_op(&arch, &d, &l, Strategy::Spatial);
+        let tile = &t.rounds[0].tiles[0];
+        assert_eq!(tile.rows_used, 64);
+        assert_eq!(tile.cols_used, 32);
+        assert_eq!(tile.occupied, 32 * 32 + 32 * 8);
+    }
+
+    #[test]
+    fn grouped_depthwise_packs_block_diagonal() {
+        let arch = presets::usecase_arch(4, (2, 2)); // 1024x32
+        let d = MvmDims {
+            rows: 9,
+            cols: 1,
+            n_vectors: 64,
+            groups: 32,
+        };
+        let l = CompressedLayout::dense(9, 1);
+        let t = tile_op(&arch, &d, &l, Strategy::Spatial);
+        // per tile: min(1024/9, 32/1) = 32 groups → single tile
+        assert_eq!(t.groups_per_tile, 32);
+        assert_eq!(t.rounds.len(), 1);
+        let tile = &t.rounds[0].tiles[0];
+        assert_eq!(tile.rows_used, 32 * 9);
+        assert_eq!(tile.cols_used, 32);
+        // utilization is low: 288 cells of 32768 per macro
+        assert!(t.utilization < 0.01);
+    }
+
+    #[test]
+    fn compressed_layout_reduces_rounds() {
+        let arch = presets::usecase_arch(4, (2, 2));
+        let d = dims(8192, 32, 10);
+        let dense = CompressedLayout::dense(8192, 32);
+        let mut comp = CompressedLayout::dense(2048, 32);
+        comp.orig_rows = 8192;
+        let td = tile_op(&arch, &d, &dense, Strategy::Spatial);
+        let tc = tile_op(&arch, &d, &comp, Strategy::Spatial);
+        assert!(tc.rounds.len() < td.rounds.len());
+    }
+}

@@ -1,0 +1,146 @@
+//! Pruning criteria ρ(·) (Sec. IV-D): per-element importance measures
+//! aggregated over blocks (Eq. 1) or over pattern-pruned positions
+//! (Eq. 2). L1 (magnitude) and L2 (squared magnitude, summing to the
+//! squared Euclidean norm over a block) are the paper's named criteria.
+
+/// Pruning criterion selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Criterion {
+    /// ρ(w) = |w| — magnitude pruning.
+    L1,
+    /// ρ(w) = w² — Euclidean-norm pruning (block loss = ‖W_block‖₂²).
+    L2,
+}
+
+impl Criterion {
+    #[inline]
+    pub fn rho(&self, w: f32) -> f64 {
+        match self {
+            Criterion::L1 => w.abs() as f64,
+            Criterion::L2 => (w as f64) * (w as f64),
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Criterion> {
+        match s.to_ascii_lowercase().as_str() {
+            "l1" => Ok(Criterion::L1),
+            "l2" => Ok(Criterion::L2),
+            other => anyhow::bail!("unknown pruning criterion `{other}` (expected l1|l2)"),
+        }
+    }
+}
+
+/// A weight matrix in row-major order with its dims; the unit the
+/// pruning workflow operates on (reshaped 2-D view of a layer).
+#[derive(Debug, Clone)]
+pub struct WeightMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl WeightMatrix {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> anyhow::Result<Self> {
+        if data.len() != rows * cols {
+            anyhow::bail!(
+                "weight data length {} != {rows}x{cols}",
+                data.len()
+            );
+        }
+        Ok(Self { rows, cols, data })
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Block loss L_FB (Eq. 1): Σ ρ(W[x,y]) over the block rectangle,
+    /// clipped at matrix edges.
+    pub fn block_loss(
+        &self,
+        crit: Criterion,
+        r0: usize,
+        c0: usize,
+        m: usize,
+        n: usize,
+    ) -> f64 {
+        let mut s = 0.0;
+        for r in r0..(r0 + m).min(self.rows) {
+            for c in c0..(c0 + n).min(self.cols) {
+                s += crit.rho(self.get(r, c));
+            }
+        }
+        s
+    }
+
+    /// Pattern loss L_IB (Eq. 2): Σ ρ over positions the pattern prunes
+    /// (Ω_k = zeros of the pattern mask).
+    pub fn pattern_loss(
+        &self,
+        crit: Criterion,
+        r0: usize,
+        c0: usize,
+        pattern: &crate::util::bits::BitMatrix,
+    ) -> f64 {
+        let mut s = 0.0;
+        for pr in 0..pattern.rows() {
+            for pc in 0..pattern.cols() {
+                if !pattern.get(pr, pc) {
+                    let (r, c) = (r0 + pr, c0 + pc);
+                    if r < self.rows && c < self.cols {
+                        s += crit.rho(self.get(r, c));
+                    }
+                }
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bits::BitMatrix;
+
+    #[test]
+    fn rho_values() {
+        assert_eq!(Criterion::L1.rho(-2.0), 2.0);
+        assert_eq!(Criterion::L2.rho(-2.0), 4.0);
+        assert_eq!(Criterion::L1.rho(0.5), 0.5);
+        assert_eq!(Criterion::L2.rho(0.5), 0.25);
+    }
+
+    #[test]
+    fn parse_criteria() {
+        assert_eq!(Criterion::parse("L1").unwrap(), Criterion::L1);
+        assert_eq!(Criterion::parse("l2").unwrap(), Criterion::L2);
+        assert!(Criterion::parse("l3").is_err());
+    }
+
+    #[test]
+    fn block_loss_sums_rectangle() {
+        let w = WeightMatrix::new(2, 3, vec![1.0, -2.0, 3.0, 0.5, 0.0, -1.0]).unwrap();
+        assert_eq!(w.block_loss(Criterion::L1, 0, 0, 2, 2), 1.0 + 2.0 + 0.5 + 0.0);
+        assert_eq!(w.block_loss(Criterion::L2, 0, 2, 2, 1), 9.0 + 1.0);
+        // edge clipping
+        assert_eq!(w.block_loss(Criterion::L1, 1, 2, 5, 5), 1.0);
+    }
+
+    #[test]
+    fn pattern_loss_counts_pruned_positions() {
+        let w = WeightMatrix::new(2, 1, vec![3.0, -1.0]).unwrap();
+        // pattern keeping row 0 → prunes row 1 → loss = ρ(-1)
+        let mut keep_top = BitMatrix::zeros(2, 1);
+        keep_top.set(0, 0, true);
+        assert_eq!(w.pattern_loss(Criterion::L1, 0, 0, &keep_top), 1.0);
+        let mut keep_bot = BitMatrix::zeros(2, 1);
+        keep_bot.set(1, 0, true);
+        assert_eq!(w.pattern_loss(Criterion::L1, 0, 0, &keep_bot), 3.0);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(WeightMatrix::new(2, 2, vec![0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Pruning workflow (Sec. IV-D): criteria ρ(·), block-loss (Eq. 1) and
+//! pattern-loss (Eq. 2) selection, and the per-network workflow that
+//! emits FlexBlock-conformant masks.
+
+pub mod criterion;
+pub mod select;
+pub mod workflow;
+
+pub use criterion::{Criterion, WeightMatrix};
+pub use select::{apply_mask, importance_mask};
+pub use workflow::{LayerPrune, PrunePlan, PruningWorkflow};

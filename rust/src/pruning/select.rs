@@ -1,0 +1,195 @@
+//! Importance-driven block and pattern selection (Sec. IV-D): the
+//! "pruning strategies" component. FullBlock selection keeps the
+//! highest-loss Φ blocks globally within a layer (Eq. 1); IntraBlock
+//! selection picks, per surviving block, the pattern with the lowest
+//! pruned-away loss (Eq. 2).
+
+use super::criterion::{Criterion, WeightMatrix};
+use crate::sparsity::mask::{
+    bind, fullblock_mask_from_selection, intrablock_apply, pattern_set_for, LayerCtx,
+};
+use crate::sparsity::flexblock::FlexBlock;
+use crate::util::bits::BitMatrix;
+
+/// Keep-selection for a FullBlock pattern: retain the Φ blocks with the
+/// highest aggregate importance (equivalently prune the lowest-loss
+/// blocks). Ties break on grid order for determinism.
+pub fn fullblock_importance_selection(
+    w: &WeightMatrix,
+    crit: Criterion,
+    bp: &crate::sparsity::pattern::BoundPattern,
+) -> Vec<bool> {
+    let (gr, gc) = bp.grid(w.rows, w.cols);
+    let keep_n = bp.nonzero_blocks(w.rows, w.cols);
+    let mut losses: Vec<(f64, usize)> = Vec::with_capacity(gr * gc);
+    for bi in 0..gr {
+        for bj in 0..gc {
+            let loss = w.block_loss(crit, bi * bp.m, bj * bp.n, bp.m, bp.n);
+            losses.push((loss, bi * gc + bj));
+        }
+    }
+    // descending by loss, ascending by index for ties
+    losses.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut keep = vec![false; gr * gc];
+    for &(_, idx) in losses.iter().take(keep_n) {
+        keep[idx] = true;
+    }
+    keep
+}
+
+/// Generate a pruning mask for one layer's weights under `fb`, using
+/// importance-based selection (the pruning-workflow path, vs. the random
+/// path in `sparsity::mask::random_mask`).
+pub fn importance_mask(
+    fb: &FlexBlock,
+    w: &WeightMatrix,
+    crit: Criterion,
+    ctx: LayerCtx,
+) -> BitMatrix {
+    if fb.is_dense() {
+        return BitMatrix::ones(w.rows, w.cols);
+    }
+    let (intra, full) = bind(fb, w.rows, w.cols, ctx);
+    let mut mask = match &full {
+        Some(bp) => {
+            let keep = fullblock_importance_selection(w, crit, bp);
+            fullblock_mask_from_selection(w.rows, w.cols, bp, &keep)
+        }
+        None => BitMatrix::ones(w.rows, w.cols),
+    };
+    if let Some(bp) = &intra {
+        let patterns = pattern_set_for(fb, bp);
+        intrablock_apply(&mut mask, bp, &patterns, |bi, bj, set| {
+            // lowest pruned-away loss wins (Eq. 2)
+            let (r0, c0) = (bi * bp.m, bj * bp.n);
+            let mut best = 0usize;
+            let mut best_loss = f64::INFINITY;
+            for (k, p) in set.iter().enumerate() {
+                let loss = w.pattern_loss(crit, r0, c0, p);
+                if loss < best_loss {
+                    best_loss = loss;
+                    best = k;
+                }
+            }
+            best
+        });
+    }
+    mask
+}
+
+/// Apply a mask to weights, zeroing pruned elements (in place).
+pub fn apply_mask(w: &mut WeightMatrix, mask: &BitMatrix) {
+    assert_eq!((w.rows, w.cols), (mask.rows(), mask.cols()));
+    for r in 0..w.rows {
+        for c in 0..w.cols {
+            if !mask.get(r, c) {
+                w.data[r * w.cols + c] = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_weights(rows: usize, cols: usize, seed: u64) -> WeightMatrix {
+        let mut rng = Pcg32::new(seed);
+        WeightMatrix::new(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|_| rng.next_normal() as f32)
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fullblock_keeps_highest_magnitude_rows() {
+        // rows 0..4 have magnitude proportional to row index
+        let mut data = vec![0f32; 4 * 8];
+        for r in 0..4 {
+            for c in 0..8 {
+                data[r * 8 + c] = (r as f32 + 1.0) * 0.1;
+            }
+        }
+        let w = WeightMatrix::new(4, 8, data).unwrap();
+        let fb = FlexBlock::row_wise(0.5);
+        let mask = importance_mask(&fb, &w, Criterion::L1, LayerCtx::fc());
+        // rows 2 and 3 (largest) survive
+        assert_eq!(mask.row_count(0), 0);
+        assert_eq!(mask.row_count(1), 0);
+        assert_eq!(mask.row_count(2), 8);
+        assert_eq!(mask.row_count(3), 8);
+    }
+
+    #[test]
+    fn intra_keeps_largest_element_per_block() {
+        let w = WeightMatrix::new(4, 1, vec![0.1, 0.9, -0.8, 0.2]).unwrap();
+        let fb = FlexBlock::intra(2, 0.5);
+        let mask = importance_mask(&fb, &w, Criterion::L1, LayerCtx::fc());
+        assert!(!mask.get(0, 0) && mask.get(1, 0), "keeps 0.9 of (0.1,0.9)");
+        assert!(mask.get(2, 0) && !mask.get(3, 0), "keeps -0.8 of (-0.8,0.2)");
+    }
+
+    #[test]
+    fn importance_beats_random_in_retained_norm() {
+        let w = random_weights(64, 64, 7);
+        let fb = FlexBlock::row_block(16, 0.75);
+        let imask = importance_mask(&fb, &w, Criterion::L2, LayerCtx::fc());
+        let mut rng = Pcg32::new(8);
+        let rmask = crate::sparsity::mask::random_mask(&fb, 64, 64, LayerCtx::fc(), &mut rng);
+        let norm = |m: &BitMatrix| -> f64 {
+            let mut s = 0.0;
+            for r in 0..64 {
+                for c in 0..64 {
+                    if m.get(r, c) {
+                        s += (w.get(r, c) as f64).powi(2);
+                    }
+                }
+            }
+            s
+        };
+        assert!(
+            norm(&imask) > norm(&rmask),
+            "importance selection retains more weight norm"
+        );
+        // identical sparsity level
+        assert_eq!(imask.count_ones(), rmask.count_ones());
+    }
+
+    #[test]
+    fn apply_mask_zeroes_pruned() {
+        let mut w = random_weights(8, 8, 9);
+        let fb = FlexBlock::row_wise(0.5);
+        let mask = importance_mask(&fb, &w, Criterion::L1, LayerCtx::fc());
+        apply_mask(&mut w, &mask);
+        for r in 0..8 {
+            for c in 0..8 {
+                if !mask.get(r, c) {
+                    assert_eq!(w.get(r, c), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn l1_vs_l2_can_differ() {
+        // L2 favors blocks with one huge value; L1 favors many mediums.
+        let w = WeightMatrix::new(2, 2, vec![10.0, 0.0, 4.0, 4.0]).unwrap();
+        let fb = FlexBlock::row_wise(0.5);
+        let m1 = importance_mask(&fb, &w, Criterion::L1, LayerCtx::fc());
+        let m2 = importance_mask(&fb, &w, Criterion::L2, LayerCtx::fc());
+        // L1: row1 loss 8 < row0 loss 10 → keep row0. L2: 100 vs 32 → row0.
+        assert_eq!(m1.row_count(0), 2);
+        assert_eq!(m2.row_count(0), 2);
+        // L1: row0=6 vs row1=8 → keep row1. L2: row0=36 vs row1=32 → keep row0.
+        let w2 = WeightMatrix::new(2, 2, vec![6.0, 0.0, 4.0, 4.0]).unwrap();
+        let m1b = importance_mask(&fb, &w2, Criterion::L1, LayerCtx::fc());
+        let m2b = importance_mask(&fb, &w2, Criterion::L2, LayerCtx::fc());
+        assert_eq!(m1b.row_count(1), 2, "L1 keeps 4+4=8 over 6");
+        assert_eq!(m2b.row_count(0), 2, "L2 keeps 36 over 32");
+    }
+}

@@ -1,0 +1,267 @@
+//! The pruning workflow (Sec. IV-D): iterates over a network's MVM
+//! layers, selects blocks/patterns per the configured criterion, and
+//! produces per-layer masks forming a [`PrunePlan`] consumed by the
+//! mapping and simulation layers (and, via `runtime::infer`, applied to
+//! trained artifact weights for accuracy evaluation).
+
+use super::criterion::{Criterion, WeightMatrix};
+use super::select::importance_mask;
+use crate::sparsity::flexblock::FlexBlock;
+use crate::sparsity::mask::{random_mask, LayerCtx};
+use crate::util::bits::BitMatrix;
+use crate::util::rng::Pcg32;
+use crate::workload::graph::Network;
+use crate::workload::op::{OpId, OpKind};
+use std::collections::BTreeMap;
+
+/// Pruning configuration.
+#[derive(Debug, Clone)]
+pub struct PruningWorkflow {
+    pub criterion: Criterion,
+    /// Seed for randomized masks when no weights are available.
+    pub seed: u64,
+    /// Skip depthwise convolutions (paper: pruning them destroys
+    /// MobileNetV2 accuracy — Fig. 9(b); default true).
+    pub skip_depthwise: bool,
+    /// Skip fully-connected layers (paper: pruning VGG16 FC layers causes
+    /// significant accuracy drop; default false).
+    pub skip_fc: bool,
+    /// Skip the stem/first convolution (common pruning practice).
+    pub skip_first_conv: bool,
+}
+
+impl Default for PruningWorkflow {
+    fn default() -> Self {
+        Self {
+            criterion: Criterion::L2,
+            seed: 0xC1A0_5EED,
+            skip_depthwise: true,
+            skip_fc: false,
+            skip_first_conv: true,
+        }
+    }
+}
+
+/// One layer's pruning outcome.
+#[derive(Debug, Clone)]
+pub struct LayerPrune {
+    pub fb: FlexBlock,
+    pub mask: BitMatrix,
+    pub ctx: LayerCtx,
+}
+
+/// Masks for all pruned layers of a network.
+#[derive(Debug, Clone, Default)]
+pub struct PrunePlan {
+    pub layers: BTreeMap<OpId, LayerPrune>,
+}
+
+impl PrunePlan {
+    /// Overall weight sparsity across pruned layers (element-weighted).
+    pub fn overall_sparsity(&self) -> f64 {
+        let (mut nz, mut total) = (0u64, 0u64);
+        for lp in self.layers.values() {
+            nz += lp.mask.count_ones() as u64;
+            total += (lp.mask.rows() * lp.mask.cols()) as u64;
+        }
+        if total == 0 {
+            0.0
+        } else {
+            1.0 - nz as f64 / total as f64
+        }
+    }
+
+    pub fn mask_for(&self, id: OpId) -> Option<&LayerPrune> {
+        self.layers.get(&id)
+    }
+}
+
+impl PruningWorkflow {
+    /// Is this op eligible for pruning under the workflow's policy?
+    pub fn eligible(&self, net: &Network, id: OpId) -> bool {
+        let op = &net.ops[id];
+        match &op.kind {
+            OpKind::Conv2d { groups, .. } => {
+                if *groups > 1 && self.skip_depthwise {
+                    return false;
+                }
+                if self.skip_first_conv {
+                    // first MVM op in topological order is the stem
+                    if net.mvm_ops().first() == Some(&id) {
+                        return false;
+                    }
+                }
+                true
+            }
+            OpKind::Fc { .. } => !self.skip_fc,
+            _ => false,
+        }
+    }
+
+    /// Layer context for symbolic dim binding (kh·kw rows per channel).
+    pub fn layer_ctx(net: &Network, id: OpId) -> LayerCtx {
+        match &net.ops[id].kind {
+            OpKind::Conv2d { kh, kw, .. } => LayerCtx {
+                per_channel: kh * kw,
+            },
+            _ => LayerCtx::fc(),
+        }
+    }
+
+    /// Apply the same FlexBlock description to every eligible layer.
+    /// With `weights` (keyed by op id, reshaped row-major M×N), selection
+    /// is importance-based (Eq. 1/2); otherwise randomized per seed.
+    pub fn run_uniform(
+        &self,
+        net: &Network,
+        fb: &FlexBlock,
+        weights: Option<&BTreeMap<OpId, WeightMatrix>>,
+    ) -> anyhow::Result<PrunePlan> {
+        fb.validate()?;
+        let mut assignment = BTreeMap::new();
+        for id in net.mvm_ops() {
+            if self.eligible(net, id) {
+                assignment.insert(id, fb.clone());
+            }
+        }
+        self.run(net, &assignment, weights)
+    }
+
+    /// Apply per-layer FlexBlock assignments.
+    pub fn run(
+        &self,
+        net: &Network,
+        assignment: &BTreeMap<OpId, FlexBlock>,
+        weights: Option<&BTreeMap<OpId, WeightMatrix>>,
+    ) -> anyhow::Result<PrunePlan> {
+        let mut rng = Pcg32::new(self.seed);
+        let mut plan = PrunePlan::default();
+        for (&id, fb) in assignment {
+            if fb.is_dense() {
+                continue;
+            }
+            fb.validate()?;
+            let dims = net
+                .mvm_dims(id)
+                .ok_or_else(|| anyhow::anyhow!("op {id} is not an MVM op"))?;
+            let ctx = Self::layer_ctx(net, id);
+            let mask = match weights.and_then(|w| w.get(&id)) {
+                Some(w) => {
+                    if (w.rows, w.cols) != (dims.rows, dims.cols) {
+                        anyhow::bail!(
+                            "op {id} (`{}`): weights {}x{} != reshaped dims {}x{}",
+                            net.ops[id].name,
+                            w.rows,
+                            w.cols,
+                            dims.rows,
+                            dims.cols
+                        );
+                    }
+                    importance_mask(fb, w, self.criterion, ctx)
+                }
+                None => {
+                    let mut layer_rng = rng.fork(id as u64);
+                    random_mask(fb, dims.rows, dims.cols, ctx, &mut layer_rng)
+                }
+            };
+            plan.layers.insert(
+                id,
+                LayerPrune {
+                    fb: fb.clone(),
+                    mask,
+                    ctx,
+                },
+            );
+        }
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn uniform_prunes_eligible_layers_only() {
+        let net = zoo::mobilenet_mini();
+        let wf = PruningWorkflow::default();
+        let fb = FlexBlock::row_wise(0.5);
+        let plan = wf.run_uniform(&net, &fb, None).unwrap();
+        // depthwise + stem excluded
+        for (&id, _) in &plan.layers {
+            match net.ops[id].kind {
+                OpKind::Conv2d { groups, .. } => assert_eq!(groups, 1),
+                OpKind::Fc { .. } => {}
+                _ => panic!("non-MVM op pruned"),
+            }
+        }
+        let first_mvm = net.mvm_ops()[0];
+        assert!(!plan.layers.contains_key(&first_mvm), "stem skipped");
+        assert!(!plan.layers.is_empty());
+    }
+
+    #[test]
+    fn plan_sparsity_close_to_target() {
+        let net = zoo::resnet_mini();
+        let wf = PruningWorkflow::default();
+        let fb = FlexBlock::row_wise(0.8);
+        let plan = wf.run_uniform(&net, &fb, None).unwrap();
+        let s = plan.overall_sparsity();
+        assert!((s - 0.8).abs() < 0.05, "sparsity {s}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let net = zoo::resnet_mini();
+        let wf = PruningWorkflow::default();
+        let fb = FlexBlock::hybrid(2, 16, 0.7);
+        let a = wf.run_uniform(&net, &fb, None).unwrap();
+        let b = wf.run_uniform(&net, &fb, None).unwrap();
+        for (id, la) in &a.layers {
+            assert_eq!(la.mask, b.layers[id].mask);
+        }
+    }
+
+    #[test]
+    fn mask_dims_match_layer_dims() {
+        let net = zoo::vgg_mini();
+        let wf = PruningWorkflow {
+            skip_fc: false,
+            ..Default::default()
+        };
+        let fb = FlexBlock::row_block(16, 0.6);
+        let plan = wf.run_uniform(&net, &fb, None).unwrap();
+        for (&id, lp) in &plan.layers {
+            let d = net.mvm_dims(id).unwrap();
+            assert_eq!((lp.mask.rows(), lp.mask.cols()), (d.rows, d.cols));
+        }
+    }
+
+    #[test]
+    fn skip_fc_flag() {
+        let net = zoo::vgg_mini();
+        let wf = PruningWorkflow {
+            skip_fc: true,
+            ..Default::default()
+        };
+        let plan = wf
+            .run_uniform(&net, &FlexBlock::row_wise(0.5), None)
+            .unwrap();
+        for (&id, _) in &plan.layers {
+            assert!(!matches!(net.ops[id].kind, OpKind::Fc { .. }));
+        }
+    }
+
+    #[test]
+    fn weight_shape_mismatch_rejected() {
+        let net = zoo::resnet_mini();
+        let wf = PruningWorkflow::default();
+        let mut weights = BTreeMap::new();
+        let id = net.mvm_ops()[1];
+        weights.insert(id, WeightMatrix::new(2, 2, vec![0.0; 4]).unwrap());
+        let mut assignment = BTreeMap::new();
+        assignment.insert(id, FlexBlock::row_wise(0.5));
+        assert!(wf.run(&net, &assignment, Some(&weights)).is_err());
+    }
+}

@@ -1,0 +1,202 @@
+//! Report emitters: turn study results into the paper's tables/series
+//! (ASCII + CSV). Shared by the bench binaries and `ciminus report`.
+
+use crate::explore::input_study::InputSparsityPoint;
+use crate::explore::mapping_study::{MappingPoint, RearrangePoint};
+use crate::explore::sparsity_study::SparsityPoint;
+use crate::sparsity::flexblock::FlexBlock;
+use crate::util::table::{fmt_f, Table};
+use crate::validate::ValidationPoint;
+
+/// Table I: validation-architecture summary.
+pub fn tab1() -> Table {
+    let mut t = Table::new(&["parameter", "MARS", "SDP"]).with_title("Table I: CIM designs for validation");
+    let m = crate::hw::presets::mars();
+    let s = crate::hw::presets::sdp();
+    t.row(vec![
+        "macro size".into(),
+        format!("{}x{}", m.cim.rows, m.cim.cols),
+        format!("{}x{}", s.cim.rows, s.cim.cols),
+    ]);
+    t.row(vec![
+        "sub-array size".into(),
+        format!("{}x{}", m.cim.sub_rows, m.cim.sub_cols),
+        format!("{}x{}", s.cim.sub_rows, s.cim.sub_cols),
+    ]);
+    t.row(vec![
+        "macro org".into(),
+        format!("{} macros ({})", m.org.n_macros(), m.org.label()),
+        format!("{} macros ({})", s.org.n_macros(), s.org.label()),
+    ]);
+    t.row(vec![
+        "global buf".into(),
+        format!(
+            "{} KB (ping-pong)",
+            (m.global_in_buf.size_bytes + m.global_out_buf.size_bytes) / 1024
+        ),
+        format!(
+            "{} KB (in), {} KB (out)",
+            s.global_in_buf.size_bytes / 1024,
+            s.global_out_buf.size_bytes / 1024
+        ),
+    ]);
+    t.row(vec![
+        "sparsity".into(),
+        "Full (1, 16)".into(),
+        "Intra (2, 1) + Full (2, 8)".into(),
+    ]);
+    t.row(vec![
+        "eval scope".into(),
+        "Only Conv layers".into(),
+        "Entire NN".into(),
+    ]);
+    t
+}
+
+/// Table II: sparsity patterns and their FlexBlock representations.
+pub fn tab2() -> Table {
+    let mut t = Table::new(&["sparsity pattern", "FlexBlock representation"])
+        .with_title("Table II: FlexBlock representations");
+    let rows: Vec<(&str, FlexBlock)> = vec![
+        ("Row-wise", FlexBlock::row_wise(0.8)),
+        ("Row-block", FlexBlock::row_block(16, 0.8)),
+        ("Column (Filter)-wise", FlexBlock::column_wise(0.8)),
+        ("Channel-wise", FlexBlock::channel_wise(0.8)),
+        ("Column-block", FlexBlock::column_block(16, 0.8)),
+        ("1:2 + Row-block", FlexBlock::hybrid(2, 16, 0.8)),
+        ("1:2 + Row-wise", FlexBlock::hybrid_row_wise(2, 0.8)),
+        ("1:4 + Row-block", FlexBlock::hybrid(4, 16, 0.8)),
+    ];
+    for (name, fb) in rows {
+        fb.validate().expect("table II patterns are valid");
+        t.row(vec![name.to_string(), fb.representation()]);
+    }
+    t
+}
+
+/// Fig. 6(a)/(b): reported-vs-estimated table.
+pub fn fig6_table(points: &[ValidationPoint]) -> Table {
+    let mut t = Table::new(&["design", "workload", "metric", "reported", "estimated", "err%"])
+        .with_title("Fig. 6: validation against MARS and SDP");
+    for p in points {
+        t.row(vec![
+            p.design.to_string(),
+            p.workload.clone(),
+            p.metric.to_string(),
+            fmt_f(p.reported, 2),
+            fmt_f(p.estimated, 2),
+            fmt_f(p.err_pct(), 2),
+        ]);
+    }
+    t
+}
+
+/// Fig. 6(c): SDP power-breakdown comparison.
+pub fn fig6c_table(rows: &[(&'static str, f64, f64)]) -> Table {
+    let mut t = Table::new(&["component", "reported%", "estimated%"])
+        .with_title("Fig. 6(c): SDP power breakdown");
+    for (name, rep, est) in rows {
+        t.row(vec![
+            name.to_string(),
+            fmt_f(rep * 100.0, 1),
+            fmt_f(est * 100.0, 1),
+        ]);
+    }
+    t
+}
+
+/// Fig. 8-style sparsity-sweep table.
+pub fn sparsity_table(title: &str, points: &[SparsityPoint]) -> Table {
+    let mut t = Table::new(&["pattern", "ratio", "speedup", "energy_saving", "util%", "accuracy"])
+        .with_title(title);
+    for p in points {
+        t.row(vec![
+            p.pattern.clone(),
+            fmt_f(p.ratio, 2),
+            fmt_f(p.speedup, 3),
+            fmt_f(p.energy_saving, 3),
+            fmt_f(p.utilization * 100.0, 1),
+            p.accuracy
+                .map(|a| fmt_f(a * 100.0, 1))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t
+}
+
+/// Fig. 10: input-sparsity table.
+pub fn input_sparsity_table(title: &str, points: &[InputSparsityPoint]) -> Table {
+    let mut t = Table::new(&["config", "skip%", "speedup(I/W)", "energy_saving(I/W)"])
+        .with_title(title);
+    for p in points {
+        t.row(vec![
+            p.label.clone(),
+            fmt_f(p.skip_ratio * 100.0, 1),
+            fmt_f(p.speedup_from_input, 3),
+            fmt_f(p.energy_saving_from_input, 3),
+        ]);
+    }
+    t
+}
+
+/// Fig. 11: mapping-strategy grid.
+pub fn mapping_table(points: &[MappingPoint]) -> Table {
+    let mut t = Table::new(&["model", "org", "strategy", "energy(uJ)", "latency(cyc)", "util%"])
+        .with_title("Fig. 11: mapping strategies across macro organizations");
+    for p in points {
+        t.row(vec![
+            p.model.clone(),
+            p.org.clone(),
+            p.strategy.clone(),
+            fmt_f(p.energy_pj / 1e6, 3),
+            p.latency_cycles.to_string(),
+            fmt_f(p.utilization * 100.0, 1),
+        ]);
+    }
+    t
+}
+
+/// Fig. 12: rearrangement comparison.
+pub fn rearrange_table(points: &[RearrangePoint]) -> Table {
+    let mut t = Table::new(&["strategy", "rearranged", "energy(uJ)", "latency(cyc)", "util%"])
+        .with_title("Fig. 12: weight-data rearrangement");
+    for p in points {
+        t.row(vec![
+            p.strategy.clone(),
+            if p.rearranged { "R" } else { "-" }.to_string(),
+            fmt_f(p.energy_pj / 1e6, 3),
+            p.latency_cycles.to_string(),
+            fmt_f(p.utilization * 100.0, 1),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_tables_render() {
+        let t1 = tab1().render();
+        assert!(t1.contains("1024x64"));
+        assert!(t1.contains("Intra (2, 1)"));
+        let t2 = tab2().render();
+        assert!(t2.contains("Row-wise"));
+        assert!(t2.contains("Full(1,*)@0.80"));
+        assert_eq!(tab2().n_rows(), 8);
+    }
+
+    #[test]
+    fn fig6_table_includes_errors() {
+        let pts = vec![ValidationPoint {
+            design: "MARS",
+            workload: "vgg16".into(),
+            metric: "speedup",
+            reported: 2.0,
+            estimated: 2.2,
+        }];
+        let t = fig6_table(&pts).render();
+        assert!(t.contains("10.00"));
+    }
+}

@@ -1,0 +1,298 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime (weights blobs, HLO files, dataset splits).
+
+use crate::pruning::criterion::WeightMatrix;
+use crate::util::bits::BitMatrix;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One MVM op's parameter layout inside the weights blob.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamInfo {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub groups: usize,
+    pub w_offset: usize,
+    pub b_offset: usize,
+}
+
+/// One model's artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelArtifacts {
+    pub name: String,
+    pub params: Vec<ParamInfo>,
+    /// The full weights blob (w/b interleaved per `params`).
+    pub blob: Vec<f32>,
+    pub fwd_hlo: PathBuf,
+    pub acts_hlo: PathBuf,
+    pub graph_json: PathBuf,
+    pub dense_eval_acc: f64,
+    pub taps: Vec<String>,
+}
+
+impl ModelArtifacts {
+    /// Extract the reshaped 2-D weight matrices keyed by op name.
+    pub fn weight_matrices(&self) -> Result<BTreeMap<String, WeightMatrix>> {
+        let mut out = BTreeMap::new();
+        for p in &self.params {
+            let n = p.rows * p.cols;
+            anyhow::ensure!(
+                p.w_offset + n <= self.blob.len(),
+                "param `{}` out of blob bounds",
+                p.name
+            );
+            out.insert(
+                p.name.clone(),
+                WeightMatrix::new(
+                    p.rows,
+                    p.cols,
+                    self.blob[p.w_offset..p.w_offset + n].to_vec(),
+                )?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Produce a blob copy with pruning masks applied (masks keyed by op
+    /// name; ops absent stay dense). Biases untouched.
+    pub fn masked_blob(&self, masks: &BTreeMap<String, BitMatrix>) -> Result<Vec<f32>> {
+        let mut blob = self.blob.clone();
+        for p in &self.params {
+            if let Some(mask) = masks.get(&p.name) {
+                anyhow::ensure!(
+                    mask.rows() == p.rows && mask.cols() == p.cols,
+                    "mask for `{}` is {}x{}, param is {}x{}",
+                    p.name,
+                    mask.rows(),
+                    mask.cols(),
+                    p.rows,
+                    p.cols
+                );
+                for r in 0..p.rows {
+                    for c in 0..p.cols {
+                        if !mask.get(r, c) {
+                            blob[p.w_offset + r * p.cols + c] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(blob)
+    }
+
+    /// Assemble the flat HLO argument list (w, b per param in order) from
+    /// a blob, ready to append the image batch.
+    pub fn args_from_blob(
+        &self,
+        blob: &[f32],
+    ) -> Result<Vec<crate::runtime::client::ArrayArg>> {
+        use crate::runtime::client::ArrayArg;
+        let mut args = Vec::with_capacity(self.params.len() * 2 + 1);
+        for p in &self.params {
+            let n = p.rows * p.cols;
+            args.push(ArrayArg::new(
+                blob[p.w_offset..p.w_offset + n].to_vec(),
+                vec![p.rows as i64, p.cols as i64],
+            )?);
+            args.push(ArrayArg::new(
+                blob[p.b_offset..p.b_offset + p.cols].to_vec(),
+                vec![p.cols as i64],
+            )?);
+        }
+        Ok(args)
+    }
+}
+
+/// The whole artifacts directory.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub img: usize,
+    pub classes: usize,
+    pub fwd_batch: usize,
+    pub acts_batch: usize,
+    pub eval_n: usize,
+    pub models: BTreeMap<String, ModelArtifacts>,
+}
+
+fn read_f32_bin(path: &Path) -> Result<Vec<f32>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{}: not f32-aligned", path.display());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_i32_bin(path: &Path) -> Result<Vec<i32>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{}: not i32-aligned", path.display());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+impl Artifacts {
+    /// Default artifacts directory: `$CIMINUS_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CIMINUS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// True if the manifest exists (used to gate integration tests).
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.json").exists()
+    }
+
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let manifest = Json::parse_file(&dir.join("manifest.json"))?;
+        let mut models = BTreeMap::new();
+        let models_j = manifest
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing `models`"))?;
+        for (name, mj) in models_j {
+            let mut params = Vec::new();
+            for pj in mj.req_arr("params")? {
+                params.push(ParamInfo {
+                    name: pj.req_str("name")?.to_string(),
+                    rows: pj.req_usize("rows")?,
+                    cols: pj.req_usize("cols")?,
+                    groups: pj.opt_usize("groups", 1),
+                    w_offset: pj.req_usize("w_offset")?,
+                    b_offset: pj.req_usize("b_offset")?,
+                });
+            }
+            let blob = read_f32_bin(&dir.join(mj.req_str("weights_bin")?))?;
+            anyhow::ensure!(
+                blob.len() == mj.req_usize("total_floats")?,
+                "model `{name}`: blob length mismatch"
+            );
+            models.insert(
+                name.clone(),
+                ModelArtifacts {
+                    name: name.clone(),
+                    params,
+                    blob,
+                    fwd_hlo: dir.join(mj.req_str("fwd_hlo")?),
+                    acts_hlo: dir.join(mj.req_str("acts_hlo")?),
+                    graph_json: dir.join(mj.req_str("graph_json")?),
+                    dense_eval_acc: mj.req_f64("dense_eval_acc")?,
+                    taps: mj
+                        .req_arr("taps")?
+                        .iter()
+                        .map(|t| {
+                            t.as_str()
+                                .map(str::to_string)
+                                .ok_or_else(|| anyhow::anyhow!("bad tap name"))
+                        })
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+        Ok(Artifacts {
+            dir: dir.to_path_buf(),
+            img: manifest.req_usize("img")?,
+            classes: manifest.req_usize("classes")?,
+            fwd_batch: manifest.req_usize("fwd_batch")?,
+            acts_batch: manifest.req_usize("acts_batch")?,
+            eval_n: manifest.req_usize("eval_n")?,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model `{name}` not in artifacts"))
+    }
+
+    /// Eval images as NHWC f32 (flat) + labels.
+    pub fn eval_set(&self) -> Result<(Vec<f32>, Vec<i32>)> {
+        Ok((
+            read_f32_bin(&self.dir.join("eval_images.bin"))?,
+            read_i32_bin(&self.dir.join("eval_labels.bin"))?,
+        ))
+    }
+
+    /// Calibration images for activation profiling.
+    pub fn calib_set(&self) -> Result<Vec<f32>> {
+        read_f32_bin(&self.dir.join("calib_images.bin"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_bin_roundtrip() {
+        let tmp = std::env::temp_dir().join("ciminus_test_f32.bin");
+        let data: Vec<f32> = vec![1.5, -2.25, 0.0, 3.0e7];
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&tmp, bytes).unwrap();
+        assert_eq!(read_f32_bin(&tmp).unwrap(), data);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn masked_blob_zeroes_only_masked_weights() {
+        let ma = ModelArtifacts {
+            name: "t".into(),
+            params: vec![ParamInfo {
+                name: "fc".into(),
+                rows: 2,
+                cols: 2,
+                groups: 1,
+                w_offset: 0,
+                b_offset: 4,
+            }],
+            blob: vec![1.0, 2.0, 3.0, 4.0, 9.0, 9.0],
+            fwd_hlo: PathBuf::new(),
+            acts_hlo: PathBuf::new(),
+            graph_json: PathBuf::new(),
+            dense_eval_acc: 1.0,
+            taps: vec!["fc".into()],
+        };
+        let mut mask = BitMatrix::ones(2, 2);
+        mask.set(0, 1, false);
+        let mut masks = BTreeMap::new();
+        masks.insert("fc".to_string(), mask);
+        let blob = ma.masked_blob(&masks).unwrap();
+        assert_eq!(blob, vec![1.0, 0.0, 3.0, 4.0, 9.0, 9.0]);
+        // dims mismatch is rejected
+        let mut bad = BTreeMap::new();
+        bad.insert("fc".to_string(), BitMatrix::ones(3, 2));
+        assert!(ma.masked_blob(&bad).is_err());
+    }
+
+    #[test]
+    fn weight_matrices_extracted() {
+        let ma = ModelArtifacts {
+            name: "t".into(),
+            params: vec![ParamInfo {
+                name: "fc".into(),
+                rows: 2,
+                cols: 3,
+                groups: 1,
+                w_offset: 0,
+                b_offset: 6,
+            }],
+            blob: vec![1., 2., 3., 4., 5., 6., 0., 0., 0.],
+            fwd_hlo: PathBuf::new(),
+            acts_hlo: PathBuf::new(),
+            graph_json: PathBuf::new(),
+            dense_eval_acc: 1.0,
+            taps: vec![],
+        };
+        let ws = ma.weight_matrices().unwrap();
+        assert_eq!(ws["fc"].get(1, 2), 6.0);
+    }
+}

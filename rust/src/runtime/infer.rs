@@ -1,0 +1,216 @@
+//! Pre-simulation analysis via PJRT (Sec. IV-B): pruned-model accuracy
+//! evaluation and input-activation profiling, run entirely from rust
+//! against the AOT artifacts — Python is never on this path.
+
+use super::artifacts::{Artifacts, ModelArtifacts};
+use super::client::{ArrayArg, LoadedExec, Runtime};
+use crate::pruning::criterion::WeightMatrix;
+use crate::pruning::workflow::{PrunePlan, PruningWorkflow};
+use crate::sim::input_sparsity::{ActivationProfile, InputProfiles};
+use crate::sparsity::flexblock::FlexBlock;
+use crate::util::bits::BitMatrix;
+use crate::workload::graph::Network;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// A loaded model: compiled executables + datasets, reusable across many
+/// pruning configurations (compilation is the expensive part).
+pub struct ModelSession<'a> {
+    pub arts: &'a Artifacts,
+    pub ma: &'a ModelArtifacts,
+    fwd: LoadedExec,
+    acts: LoadedExec,
+    eval_images: Vec<f32>,
+    eval_labels: Vec<i32>,
+    calib_images: Vec<f32>,
+}
+
+/// Result of pruning + accuracy evaluation for one configuration.
+#[derive(Debug, Clone)]
+pub struct PruneEval {
+    pub accuracy: f64,
+    pub dense_accuracy: f64,
+    pub weight_sparsity: f64,
+    /// Masks keyed by op name (for the simulator's mapping stage).
+    pub masks_by_name: BTreeMap<String, BitMatrix>,
+    pub plan: PrunePlan,
+}
+
+impl<'a> ModelSession<'a> {
+    pub fn new(rt: &Runtime, arts: &'a Artifacts, model: &str) -> Result<ModelSession<'a>> {
+        let ma = arts.model(model)?;
+        let fwd = rt
+            .load_hlo(&ma.fwd_hlo)
+            .with_context(|| format!("loading fwd HLO for {model}"))?;
+        let acts = rt
+            .load_hlo(&ma.acts_hlo)
+            .with_context(|| format!("loading acts HLO for {model}"))?;
+        let (eval_images, eval_labels) = arts.eval_set()?;
+        let calib_images = arts.calib_set()?;
+        Ok(ModelSession {
+            arts,
+            ma,
+            fwd,
+            acts,
+            eval_images,
+            eval_labels,
+            calib_images,
+        })
+    }
+
+    /// Top-1 accuracy of the model with the given weights blob over the
+    /// eval split (batched at the artifact's fwd batch size).
+    pub fn eval_blob(&self, blob: &[f32]) -> Result<f64> {
+        let b = self.arts.fwd_batch;
+        let img_elems = self.arts.img * self.arts.img * 3;
+        let n = self.arts.eval_n;
+        anyhow::ensure!(n % b == 0, "eval_n {n} not a multiple of batch {b}");
+        let weight_args = self.ma.args_from_blob(blob)?;
+        let mut correct = 0usize;
+        for batch_i in 0..n / b {
+            let lo = batch_i * b * img_elems;
+            let hi = lo + b * img_elems;
+            let mut args = weight_args.clone();
+            args.push(ArrayArg::new(
+                self.eval_images[lo..hi].to_vec(),
+                vec![b as i64, self.arts.img as i64, self.arts.img as i64, 3],
+            )?);
+            let outs = self.fwd.run_f32(&args)?;
+            let logits = &outs[0];
+            let c = self.arts.classes;
+            for i in 0..b {
+                let row = &logits[i * c..(i + 1) * c];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap();
+                if pred as i32 == self.eval_labels[batch_i * b + i] {
+                    correct += 1;
+                }
+            }
+        }
+        Ok(correct as f64 / n as f64)
+    }
+
+    /// Profile per-MVM-op input activations on the calibration batch,
+    /// returning quantized bit-plane profiles keyed by op name.
+    pub fn profile_activations(
+        &self,
+        blob: &[f32],
+        bits: usize,
+    ) -> Result<BTreeMap<String, ActivationProfile>> {
+        let b = self.arts.acts_batch;
+        let img_elems = self.arts.img * self.arts.img * 3;
+        let mut args = self.ma.args_from_blob(blob)?;
+        args.push(ArrayArg::new(
+            self.calib_images[..b * img_elems].to_vec(),
+            vec![b as i64, self.arts.img as i64, self.arts.img as i64, 3],
+        )?);
+        let outs = self.acts.run_f32(&args)?;
+        // output 0 is the logits (kept to prevent XLA from pruning the
+        // classifier parameters); taps follow in manifest order
+        anyhow::ensure!(
+            outs.len() == self.ma.taps.len() + 1,
+            "acts returned {} outputs for {} taps (+logits)",
+            outs.len(),
+            self.ma.taps.len()
+        );
+        let mut profiles = BTreeMap::new();
+        for (tap, values) in self.ma.taps.iter().zip(outs.iter().skip(1)) {
+            profiles.insert(tap.clone(), ActivationProfile::from_values(values, bits));
+        }
+        Ok(profiles)
+    }
+
+    /// Run the pruning workflow with importance selection against the
+    /// artifact weights, evaluate the pruned model, and return everything
+    /// the simulator needs.
+    pub fn prune_and_eval(
+        &self,
+        net: &Network,
+        fb: &FlexBlock,
+        wf: &PruningWorkflow,
+    ) -> Result<PruneEval> {
+        let weights_by_name = self.ma.weight_matrices()?;
+        let weights_by_id = weights_by_id(net, &weights_by_name)?;
+        let plan = wf.run_uniform(net, fb, Some(&weights_by_id))?;
+        let mut masks_by_name = BTreeMap::new();
+        for (&id, lp) in &plan.layers {
+            masks_by_name.insert(net.ops[id].name.clone(), lp.mask.clone());
+        }
+        let blob = self.ma.masked_blob(&masks_by_name)?;
+        let accuracy = self.eval_blob(&blob)?;
+        Ok(PruneEval {
+            accuracy,
+            dense_accuracy: self.ma.dense_eval_acc,
+            weight_sparsity: plan.overall_sparsity(),
+            masks_by_name,
+            plan,
+        })
+    }
+}
+
+/// Re-key artifact weight matrices from op names to the network's op ids.
+pub fn weights_by_id(
+    net: &Network,
+    by_name: &BTreeMap<String, WeightMatrix>,
+) -> Result<BTreeMap<usize, WeightMatrix>> {
+    let mut out = BTreeMap::new();
+    for (name, w) in by_name {
+        let op = net
+            .ops
+            .iter()
+            .find(|o| &o.name == name)
+            .ok_or_else(|| anyhow::anyhow!("artifact param `{name}` has no graph op"))?;
+        out.insert(op.id, w.clone());
+    }
+    Ok(out)
+}
+
+/// Convert name-keyed activation profiles into the simulator's id-keyed
+/// [`InputProfiles`].
+pub fn input_profiles_for(
+    net: &Network,
+    by_name: &BTreeMap<String, ActivationProfile>,
+) -> InputProfiles {
+    let mut per_layer = BTreeMap::new();
+    for (name, p) in by_name {
+        if let Some(op) = net.ops.iter().find(|o| &o.name == name) {
+            per_layer.insert(op.id, p.clone());
+        }
+    }
+    InputProfiles {
+        per_layer,
+        fallback: by_name.values().next().cloned(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn weights_by_id_rejects_unknown_names() {
+        let net = zoo::resnet_mini();
+        let mut by_name = BTreeMap::new();
+        by_name.insert(
+            "not_a_layer".to_string(),
+            WeightMatrix::new(1, 2, vec![0.0, 0.0]).unwrap(),
+        );
+        assert!(weights_by_id(&net, &by_name).is_err());
+    }
+
+    #[test]
+    fn profiles_rekey_by_op_id() {
+        let net = zoo::resnet_mini();
+        let mut by_name = BTreeMap::new();
+        by_name.insert("stem".to_string(), ActivationProfile::dense(8));
+        let p = input_profiles_for(&net, &by_name);
+        let stem_id = net.ops.iter().find(|o| o.name == "stem").unwrap().id;
+        assert!(p.per_layer.contains_key(&stem_id));
+        assert!(p.fallback.is_some());
+    }
+}

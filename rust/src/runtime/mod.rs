@@ -1,0 +1,11 @@
+//! Runtime bridge (L3 ↔ AOT artifacts): PJRT client wrapper, artifact
+//! manifest loading, and the pre-simulation analyses (accuracy
+//! evaluation, activation profiling) of Sec. IV-B.
+
+pub mod artifacts;
+pub mod client;
+pub mod infer;
+
+pub use artifacts::{Artifacts, ModelArtifacts, ParamInfo};
+pub use client::{ArrayArg, LoadedExec, Runtime};
+pub use infer::{input_profiles_for, weights_by_id, ModelSession, PruneEval};

@@ -1,0 +1,106 @@
+//! Per-unit access counters accumulated during simulation — the N_acc /
+//! N_read / N_write terms of Eq. 5 and Eq. 6.
+
+use crate::hw::units::UnitKind;
+use std::collections::BTreeMap;
+
+/// Access counters: compute-unit accesses and memory reads/writes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Counters {
+    pub compute: BTreeMap<UnitKind, u64>,
+    pub mem_reads: BTreeMap<UnitKind, u64>,
+    pub mem_writes: BTreeMap<UnitKind, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add_compute(&mut self, kind: UnitKind, n: u64) {
+        if n > 0 {
+            *self.compute.entry(kind).or_insert(0) += n;
+        }
+    }
+
+    #[inline]
+    pub fn add_read(&mut self, kind: UnitKind, n: u64) {
+        if n > 0 {
+            *self.mem_reads.entry(kind).or_insert(0) += n;
+        }
+    }
+
+    #[inline]
+    pub fn add_write(&mut self, kind: UnitKind, n: u64) {
+        if n > 0 {
+            *self.mem_writes.entry(kind).or_insert(0) += n;
+        }
+    }
+
+    pub fn compute_of(&self, kind: UnitKind) -> u64 {
+        self.compute.get(&kind).copied().unwrap_or(0)
+    }
+
+    pub fn reads_of(&self, kind: UnitKind) -> u64 {
+        self.mem_reads.get(&kind).copied().unwrap_or(0)
+    }
+
+    pub fn writes_of(&self, kind: UnitKind) -> u64 {
+        self.mem_writes.get(&kind).copied().unwrap_or(0)
+    }
+
+    /// Merge another counter set into this one.
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, v) in &other.compute {
+            *self.compute.entry(*k).or_insert(0) += v;
+        }
+        for (k, v) in &other.mem_reads {
+            *self.mem_reads.entry(*k).or_insert(0) += v;
+        }
+        for (k, v) in &other.mem_writes {
+            *self.mem_writes.entry(*k).or_insert(0) += v;
+        }
+    }
+
+    pub fn total_accesses(&self) -> u64 {
+        self.compute.values().sum::<u64>()
+            + self.mem_reads.values().sum::<u64>()
+            + self.mem_writes.values().sum::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_and_query() {
+        let mut c = Counters::new();
+        c.add_compute(UnitKind::CimArray, 10);
+        c.add_compute(UnitKind::CimArray, 5);
+        c.add_read(UnitKind::WeightBuf, 3);
+        c.add_write(UnitKind::GlobalOutBuf, 2);
+        c.add_compute(UnitKind::Mux, 0); // no-op
+        assert_eq!(c.compute_of(UnitKind::CimArray), 15);
+        assert_eq!(c.reads_of(UnitKind::WeightBuf), 3);
+        assert_eq!(c.writes_of(UnitKind::GlobalOutBuf), 2);
+        assert_eq!(c.compute_of(UnitKind::Mux), 0);
+        assert!(!c.compute.contains_key(&UnitKind::Mux));
+        assert_eq!(c.total_accesses(), 20);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = Counters::new();
+        a.add_compute(UnitKind::AdderTree, 7);
+        a.add_read(UnitKind::IndexMem, 1);
+        let mut b = Counters::new();
+        b.add_compute(UnitKind::AdderTree, 3);
+        b.add_write(UnitKind::IndexMem, 4);
+        a.merge(&b);
+        assert_eq!(a.compute_of(UnitKind::AdderTree), 10);
+        assert_eq!(a.reads_of(UnitKind::IndexMem), 1);
+        assert_eq!(a.writes_of(UnitKind::IndexMem), 4);
+    }
+}

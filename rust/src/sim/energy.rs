@@ -1,0 +1,208 @@
+//! Energy aggregation (Eq. 4–7, Sec. V-A): dynamic energy = per-access ×
+//! access counts; static energy = per-unit static power × total latency
+//! × instantiated unit count.
+
+use super::access::Counters;
+use crate::hw::arch::Architecture;
+use crate::hw::units::{UnitCounts, UnitKind};
+use std::collections::BTreeMap;
+
+/// Component-level energy breakdown (pJ) — the Fig. 6(c)-style split.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// Dynamic energy per unit kind.
+    pub dynamic_pj: BTreeMap<UnitKind, f64>,
+    /// Total static energy.
+    pub static_pj: f64,
+    /// E_total (Eq. 4).
+    pub total_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn dynamic_total(&self) -> f64 {
+        self.dynamic_pj.values().sum()
+    }
+
+    pub fn of(&self, kind: UnitKind) -> f64 {
+        self.dynamic_pj.get(&kind).copied().unwrap_or(0.0)
+    }
+
+    /// Fraction of total energy per unit kind (dynamic only).
+    pub fn share(&self, kind: UnitKind) -> f64 {
+        if self.total_pj == 0.0 {
+            0.0
+        } else {
+            self.of(kind) / self.total_pj
+        }
+    }
+}
+
+/// Compute Eq. 4–7 from counters, the architecture's energy table, and
+/// the simulated latency in cycles.
+pub fn aggregate(arch: &Architecture, counters: &Counters, total_cycles: u64) -> EnergyBreakdown {
+    let e = &arch.energy;
+    let mut dynamic: BTreeMap<UnitKind, f64> = BTreeMap::new();
+    let mut add = |k: UnitKind, pj: f64| {
+        if pj > 0.0 {
+            *dynamic.entry(k).or_insert(0.0) += pj;
+        }
+    };
+
+    // compute units (Eq. 5)
+    add(
+        UnitKind::CimArray,
+        counters.compute_of(UnitKind::CimArray) as f64 * e.cim_cell.dynamic_pj,
+    );
+    add(
+        UnitKind::AdderTree,
+        counters.compute_of(UnitKind::AdderTree) as f64 * e.adder_tree.dynamic_pj,
+    );
+    add(
+        UnitKind::ShiftAdd,
+        counters.compute_of(UnitKind::ShiftAdd) as f64 * e.shift_add.dynamic_pj,
+    );
+    add(
+        UnitKind::Accumulator,
+        counters.compute_of(UnitKind::Accumulator) as f64 * e.accumulator.dynamic_pj,
+    );
+    add(
+        UnitKind::PreProc,
+        counters.compute_of(UnitKind::PreProc) as f64 * e.preproc_bit.dynamic_pj,
+    );
+    add(
+        UnitKind::ZeroDetect,
+        counters.compute_of(UnitKind::ZeroDetect) as f64 * e.zero_detect.dynamic_pj,
+    );
+    add(
+        UnitKind::Mux,
+        counters.compute_of(UnitKind::Mux) as f64 * e.mux.dynamic_pj,
+    );
+    add(
+        UnitKind::PostProc,
+        counters.compute_of(UnitKind::PostProc) as f64 * e.postproc.dynamic_pj,
+    );
+
+    // memory units (Eq. 6)
+    let mem: [(UnitKind, f64, f64); 5] = [
+        (
+            UnitKind::GlobalInBuf,
+            arch.global_in_buf.read_pj,
+            arch.global_in_buf.write_pj,
+        ),
+        (
+            UnitKind::GlobalOutBuf,
+            arch.global_out_buf.read_pj,
+            arch.global_out_buf.write_pj,
+        ),
+        (
+            UnitKind::WeightBuf,
+            arch.weight_buf.read_pj,
+            arch.weight_buf.write_pj,
+        ),
+        (
+            UnitKind::LocalBuf,
+            arch.local_buf.read_pj,
+            arch.local_buf.write_pj,
+        ),
+        (UnitKind::IndexMem, e.index_mem.dynamic_pj, e.index_mem.dynamic_pj),
+    ];
+    for (kind, rd, wr) in mem {
+        add(
+            kind,
+            counters.reads_of(kind) as f64 * rd + counters.writes_of(kind) as f64 * wr,
+        );
+    }
+
+    // static energy (Eq. 7): per instantiated unit per cycle
+    let n = UnitCounts::infer(arch);
+    let cyc = total_cycles as f64;
+    let static_pj = cyc
+        * ((n.subarrays * arch.cim.sub_rows * arch.cim.sub_cols) as f64
+            * e.cim_cell.static_pj_cycle
+            + n.adder_trees as f64 * e.adder_tree.static_pj_cycle
+            + n.shift_adds as f64 * e.shift_add.static_pj_cycle
+            + (n.macros * arch.cim.cols) as f64 * e.accumulator.static_pj_cycle
+            + n.preproc_lanes as f64 * e.preproc_bit.static_pj_cycle
+            + n.mux_lanes as f64 * e.mux.static_pj_cycle
+            + n.postproc_lanes as f64 * e.postproc.static_pj_cycle
+            + arch.global_in_buf.static_pj_cycle
+            + arch.global_out_buf.static_pj_cycle
+            + arch.weight_buf.static_pj_cycle
+            + n.macros as f64 * arch.local_buf.static_pj_cycle
+            + if arch.sparsity.weight_indexing {
+                arch.index_mem.static_pj_cycle
+            } else {
+                0.0
+            });
+
+    let total = dynamic.values().sum::<f64>() + static_pj;
+    EnergyBreakdown {
+        dynamic_pj: dynamic,
+        static_pj,
+        total_pj: total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    #[test]
+    fn dynamic_energy_proportional_to_accesses() {
+        let arch = presets::usecase_arch(4, (2, 2));
+        let mut c1 = Counters::new();
+        c1.add_compute(UnitKind::CimArray, 1000);
+        let mut c2 = Counters::new();
+        c2.add_compute(UnitKind::CimArray, 2000);
+        let e1 = aggregate(&arch, &c1, 0);
+        let e2 = aggregate(&arch, &c2, 0);
+        assert!((e2.of(UnitKind::CimArray) / e1.of(UnitKind::CimArray) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn static_energy_proportional_to_cycles() {
+        let arch = presets::usecase_arch(4, (2, 2));
+        let c = Counters::new();
+        let e1 = aggregate(&arch, &c, 1_000);
+        let e2 = aggregate(&arch, &c, 3_000);
+        assert!((e2.static_pj / e1.static_pj - 3.0).abs() < 1e-9);
+        assert_eq!(e1.dynamic_total(), 0.0);
+    }
+
+    #[test]
+    fn buffer_reads_and_writes_priced_separately() {
+        let arch = presets::usecase_arch(4, (2, 2));
+        let mut cr = Counters::new();
+        cr.add_read(UnitKind::GlobalInBuf, 100);
+        let mut cw = Counters::new();
+        cw.add_write(UnitKind::GlobalInBuf, 100);
+        let er = aggregate(&arch, &cr, 0).of(UnitKind::GlobalInBuf);
+        let ew = aggregate(&arch, &cw, 0).of(UnitKind::GlobalInBuf);
+        assert!(ew > er, "writes cost more: {ew} vs {er}");
+    }
+
+    #[test]
+    fn shares_sum_to_one_with_dynamic_only() {
+        let arch = presets::usecase_arch(4, (2, 2));
+        let mut c = Counters::new();
+        c.add_compute(UnitKind::CimArray, 500);
+        c.add_compute(UnitKind::AdderTree, 200);
+        c.add_read(UnitKind::WeightBuf, 50);
+        let e = aggregate(&arch, &c, 100);
+        let share_sum: f64 = UnitKind::ALL.iter().map(|&k| e.share(k)).sum();
+        let static_share = e.static_pj / e.total_pj;
+        assert!((share_sum + static_share - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bigger_arch_leaks_more() {
+        let small = presets::usecase_arch(4, (2, 2));
+        let big = presets::usecase_arch(16, (4, 4));
+        let c = Counters::new();
+        let es = aggregate(&small, &c, 1000).static_pj;
+        let eb = aggregate(&big, &c, 1000).static_pj;
+        // macro-side leakage scales 4×, shared buffers stay constant
+        assert!(eb > es * 1.3, "{eb} vs {es}");
+    }
+}

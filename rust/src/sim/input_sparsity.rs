@@ -1,0 +1,264 @@
+//! Input-sparsity modeling (Sec. III-B, Sec. V-B, Fig. 10): bit-serial
+//! zero-bit skipping.
+//!
+//! A bit-position cycle of a sub-array can be skipped iff *every* input
+//! broadcast to the activated rows is zero at that bit. With per-bit
+//! zero probability p_b for one activation and a broadcast group of G
+//! distinct inputs, the skip probability is p_b^G (independence across
+//! inputs, documented approximation), so the expected executed bits are
+//! Σ_b (1 − p_b^G).
+//!
+//! Profiles come from two sources matching the paper's workflow:
+//! measured activations (PJRT inference on dataset samples via
+//! `runtime::infer`, quantized to the architecture's input width) or a
+//! synthetic ReLU-censored Gaussian model for full-size networks whose
+//! weights we do not have (DESIGN.md §3).
+
+use crate::util::rng::Pcg32;
+use crate::workload::op::OpId;
+use std::collections::BTreeMap;
+
+/// Per-bit zero probabilities of one activation value (bit 0 = LSB).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActivationProfile {
+    pub bit_zero_prob: Vec<f64>,
+}
+
+impl ActivationProfile {
+    pub fn bits(&self) -> usize {
+        self.bit_zero_prob.len()
+    }
+
+    /// Profile of an all-dense (never-skippable) input stream.
+    pub fn dense(bits: usize) -> Self {
+        Self {
+            bit_zero_prob: vec![0.0; bits],
+        }
+    }
+
+    /// Measure from concrete activation values: quantize to `bits` by
+    /// max-abs scaling (symmetric uint after ReLU) and count zero bits
+    /// per plane.
+    pub fn from_values(values: &[f32], bits: usize) -> Self {
+        assert!(bits >= 1 && bits <= 16);
+        let max = values.iter().cloned().fold(0f32, |a, b| a.max(b.abs()));
+        if max == 0.0 || values.is_empty() {
+            return Self {
+                bit_zero_prob: vec![1.0; bits],
+            };
+        }
+        let scale = ((1u32 << bits) - 1) as f32 / max;
+        let mut zero_counts = vec![0u64; bits];
+        for &v in values {
+            let q = (v.max(0.0) * scale).round() as u32; // ReLU'd inputs
+            for (b, cnt) in zero_counts.iter_mut().enumerate() {
+                if (q >> b) & 1 == 0 {
+                    *cnt += 1;
+                }
+            }
+        }
+        let n = values.len() as f64;
+        Self {
+            bit_zero_prob: zero_counts.iter().map(|&c| c as f64 / n).collect(),
+        }
+    }
+
+    /// Synthetic ReLU-censored Gaussian profile: activations
+    /// max(0, N(μ, σ))·quantized. `zero_frac` shifts μ to hit the target
+    /// exact-zero fraction (ReLU kill rate), matching the ~50% typical of
+    /// trained CNNs (higher for sparser models — Fig. 10's observation).
+    pub fn synthetic_relu(bits: usize, zero_frac: f64, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed);
+        // choose μ via the inverse CDF so P(N(μ,1) ≤ 0) = zero_frac
+        let mu = -inv_normal_cdf(zero_frac.clamp(0.01, 0.99));
+        let n = 8192;
+        let values: Vec<f32> = (0..n)
+            .map(|_| ((rng.next_normal() + mu).max(0.0)) as f32)
+            .collect();
+        Self::from_values(&values, bits)
+    }
+
+    /// Expected executed bit cycles for a broadcast group of `group`
+    /// distinct inputs (≥ 1).
+    pub fn group_active_bits(&self, group: usize) -> f64 {
+        let g = group.max(1) as f64;
+        self.bit_zero_prob
+            .iter()
+            .map(|&p| 1.0 - p.powf(g))
+            .sum()
+    }
+
+    /// Skippable-cycle ratio for a group (the profiling metric Fig. 10
+    /// reports).
+    pub fn skip_ratio(&self, group: usize) -> f64 {
+        1.0 - self.group_active_bits(group) / self.bits() as f64
+    }
+}
+
+/// Rational approximation of the standard normal inverse CDF
+/// (Acklam's method, |ε| < 1.15e-9 on (0,1)).
+fn inv_normal_cdf(p: f64) -> f64 {
+    debug_assert!(p > 0.0 && p < 1.0);
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+/// Per-layer activation profiles for a network's MVM inputs.
+#[derive(Debug, Clone, Default)]
+pub struct InputProfiles {
+    pub per_layer: BTreeMap<OpId, ActivationProfile>,
+    pub fallback: Option<ActivationProfile>,
+}
+
+impl InputProfiles {
+    /// Synthetic profiles for every MVM op; `zero_frac` optionally raised
+    /// for deeper layers (activation distributions sparsify with depth in
+    /// pruned models — Fig. 10).
+    pub fn synthetic(
+        net: &crate::workload::graph::Network,
+        bits: usize,
+        zero_frac: f64,
+        seed: u64,
+    ) -> Self {
+        // One synthesis shared by all layers: the per-layer profiles are
+        // iid draws from the same censored-Gaussian model, so separate
+        // 8k-sample syntheses per layer only added noise and ~40% of the
+        // per-configuration runtime (§Perf opt 3). Measured (PJRT)
+        // profiles remain genuinely per-layer.
+        let shared = ActivationProfile::synthetic_relu(bits, zero_frac, seed);
+        let mut per_layer = BTreeMap::new();
+        for id in net.mvm_ops() {
+            per_layer.insert(id, shared.clone());
+        }
+        Self {
+            fallback: Some(shared),
+            per_layer,
+        }
+    }
+
+    pub fn profile_for(&self, id: OpId) -> Option<&ActivationProfile> {
+        self.per_layer.get(&id).or(self.fallback.as_ref())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_profile_never_skips() {
+        let p = ActivationProfile::dense(8);
+        assert_eq!(p.group_active_bits(64), 8.0);
+        assert_eq!(p.skip_ratio(64), 0.0);
+    }
+
+    #[test]
+    fn from_values_quantizes() {
+        // all zeros → every bit plane fully zero
+        let p = ActivationProfile::from_values(&[0.0; 64], 8);
+        assert!(p.bit_zero_prob.iter().all(|&x| x == 1.0));
+        assert_eq!(p.group_active_bits(1), 0.0);
+        // max value sets all bits at max-abs scale
+        let p2 = ActivationProfile::from_values(&[1.0], 8);
+        assert_eq!(p2.group_active_bits(1), 8.0);
+    }
+
+    #[test]
+    fn skip_decreases_with_group_size() {
+        let p = ActivationProfile::synthetic_relu(8, 0.5, 42);
+        let s1 = p.skip_ratio(1);
+        let s32 = p.skip_ratio(32);
+        let s1024 = p.skip_ratio(1024);
+        assert!(s1 > s32 && s32 >= s1024, "{s1} {s32} {s1024}");
+        assert!(s1 > 0.4, "single-input skip near zero fraction: {s1}");
+    }
+
+    #[test]
+    fn sparser_activations_skip_more() {
+        let mild = ActivationProfile::synthetic_relu(8, 0.4, 1);
+        let sparse = ActivationProfile::synthetic_relu(8, 0.8, 1);
+        for g in [1usize, 8, 32] {
+            assert!(
+                sparse.skip_ratio(g) > mild.skip_ratio(g),
+                "g={g}: {} <= {}",
+                sparse.skip_ratio(g),
+                mild.skip_ratio(g)
+            );
+        }
+    }
+
+    #[test]
+    fn sub_array_skip_is_meaningful_for_small_groups() {
+        // paper reports 1.2–1.4× from input sparsity → skip 15–30% at
+        // practical group sizes (1×64 rows like SDP, or 32 with leading
+        // zeros); check our model lands in a plausible band for G=32.
+        // at G=32 only the near-always-zero leading planes survive the
+        // OR: a few percent. Designs with fine detection granularity
+        // (SDP's 1-row sub-arrays → G≈2) reach the 20-40% band that
+        // yields the paper's 1.2-1.4× (see fig10 bench).
+        let p = ActivationProfile::synthetic_relu(8, 0.5, 7);
+        let s32 = p.skip_ratio(32);
+        assert!((0.02..0.6).contains(&s32), "skip(32) = {s32}");
+        let s2 = p.skip_ratio(2);
+        assert!((0.2..0.8).contains(&s2), "skip(2) = {s2}");
+    }
+
+    #[test]
+    fn inv_normal_cdf_sane() {
+        assert!((inv_normal_cdf(0.5)).abs() < 1e-9);
+        assert!((inv_normal_cdf(0.975) - 1.959964).abs() < 1e-4);
+        assert!((inv_normal_cdf(0.025) + 1.959964).abs() < 1e-4);
+    }
+
+    #[test]
+    fn profiles_lookup_with_fallback() {
+        let net = crate::workload::zoo::resnet_mini();
+        let p = InputProfiles::synthetic(&net, 8, 0.5, 3);
+        for id in net.mvm_ops() {
+            assert!(p.profile_for(id).is_some());
+        }
+        assert!(p.profile_for(9999).is_some(), "fallback applies");
+    }
+}

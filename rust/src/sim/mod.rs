@@ -1,0 +1,18 @@
+//! The modeling methodology (Sec. V): cycle-level simulation with
+//! pipeline latency composition (Eq. 3), per-unit access counting and
+//! energy aggregation (Eq. 4–7), and bit-serial input-sparsity skipping.
+
+pub mod access;
+pub mod energy;
+pub mod engine;
+pub mod input_sparsity;
+pub mod pipeline;
+pub mod report;
+pub mod trace;
+
+pub use access::Counters;
+pub use energy::{aggregate, EnergyBreakdown};
+pub use engine::{simulate, simulate_network_default, SimOptions};
+pub use input_sparsity::{ActivationProfile, InputProfiles};
+pub use pipeline::{pipeline_latency, uniform_pipeline_latency, StepLat};
+pub use report::{OpReport, SimReport};

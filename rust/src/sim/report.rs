@@ -1,0 +1,169 @@
+//! Simulation results: overall latency, the Eq. 4–7 energy breakdown,
+//! per-op detail, utilization and input-sparsity statistics.
+
+use super::access::Counters;
+use super::energy::EnergyBreakdown;
+use crate::util::table::{fmt_cycles, fmt_energy_pj, Table};
+use crate::workload::op::OpId;
+
+/// Per-op simulation detail.
+#[derive(Debug, Clone)]
+pub struct OpReport {
+    pub op: OpId,
+    pub name: String,
+    pub kind: String,
+    pub rounds: usize,
+    pub cycles: u64,
+    pub utilization: f64,
+    /// Mean executed bit cycles per bit-serial pass (≤ input_bits).
+    pub eff_bits: f64,
+    /// Dense-equivalent MACs this op represents.
+    pub macs: u64,
+}
+
+/// Full simulation report for one (architecture, network, sparsity,
+/// mapping) configuration.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub arch: String,
+    pub network: String,
+    pub sparsity_label: String,
+    pub total_cycles: u64,
+    pub latency_us: f64,
+    pub energy: EnergyBreakdown,
+    pub counters: Counters,
+    pub ops: Vec<OpReport>,
+    /// Mean array utilization over rounds (idle macros count).
+    pub mean_utilization: f64,
+    /// MAC-weighted mean input-bit skip ratio (0 when skipping disabled).
+    pub mean_skip_ratio: f64,
+    /// Index memory footprint required by the mapping (Eq. 8 total).
+    pub index_bytes: u64,
+    /// Pre-overlap stage totals (Σ over pipeline steps) — the Eq. 3
+    /// inputs, useful for diagnosing load- vs compute-bound workloads.
+    pub stage_totals: (u64, u64, u64),
+}
+
+impl SimReport {
+    /// Speedup of `self` relative to `baseline` (> 1 = faster).
+    pub fn speedup_vs(&self, baseline: &SimReport) -> f64 {
+        baseline.total_cycles as f64 / self.total_cycles.max(1) as f64
+    }
+
+    /// Energy saving factor relative to `baseline` (> 1 = less energy).
+    pub fn energy_saving_vs(&self, baseline: &SimReport) -> f64 {
+        baseline.energy.total_pj / self.energy.total_pj.max(1e-12)
+    }
+
+    /// Multi-line human summary.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "=== {} on {} [{}] ===\n",
+            self.network, self.arch, self.sparsity_label
+        ));
+        s.push_str(&format!(
+            "latency : {} ({:.3} us)\n",
+            fmt_cycles(self.total_cycles),
+            self.latency_us
+        ));
+        s.push_str(&format!(
+            "energy  : {} (dynamic {}, static {})\n",
+            fmt_energy_pj(self.energy.total_pj),
+            fmt_energy_pj(self.energy.dynamic_total()),
+            fmt_energy_pj(self.energy.static_pj)
+        ));
+        s.push_str(&format!(
+            "util    : {:.1}%   skip: {:.1}%   index mem: {} B\n",
+            self.mean_utilization * 100.0,
+            self.mean_skip_ratio * 100.0,
+            self.index_bytes
+        ));
+        let (l, c, w) = self.stage_totals;
+        s.push_str(&format!(
+            "stages  : load {}  comp {}  wb {}\n",
+            fmt_cycles(l),
+            fmt_cycles(c),
+            fmt_cycles(w)
+        ));
+        s
+    }
+
+    /// Per-op table (the detailed view).
+    pub fn op_table(&self) -> Table {
+        let mut t = Table::new(&["op", "kind", "rounds", "cycles", "util%", "eff_bits", "MACs"])
+            .with_title(&format!("{} per-op detail", self.network));
+        for o in &self.ops {
+            t.row(vec![
+                o.name.clone(),
+                o.kind.clone(),
+                o.rounds.to_string(),
+                o.cycles.to_string(),
+                format!("{:.1}", o.utilization * 100.0),
+                format!("{:.2}", o.eff_bits),
+                o.macs.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Energy-breakdown table (Fig. 6(c)-style).
+    pub fn energy_table(&self) -> Table {
+        let mut t = Table::new(&["component", "energy", "share%"])
+            .with_title(&format!("{} energy breakdown", self.network));
+        for (kind, pj) in &self.energy.dynamic_pj {
+            t.row(vec![
+                kind.label().to_string(),
+                fmt_energy_pj(*pj),
+                format!("{:.2}", pj / self.energy.total_pj * 100.0),
+            ]);
+        }
+        t.row(vec![
+            "static".into(),
+            fmt_energy_pj(self.energy.static_pj),
+            format!("{:.2}", self.energy.static_pj / self.energy.total_pj * 100.0),
+        ]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(cycles: u64, energy: f64) -> SimReport {
+        let mut e = EnergyBreakdown::default();
+        e.total_pj = energy;
+        SimReport {
+            arch: "a".into(),
+            network: "n".into(),
+            sparsity_label: "Dense".into(),
+            total_cycles: cycles,
+            latency_us: cycles as f64 * 2e-3,
+            energy: e,
+            counters: Counters::new(),
+            ops: vec![],
+            mean_utilization: 0.5,
+            mean_skip_ratio: 0.0,
+            index_bytes: 0,
+            stage_totals: (0, cycles, 0),
+        }
+    }
+
+    #[test]
+    fn speedup_and_saving() {
+        let dense = dummy(1000, 100.0);
+        let sparse = dummy(250, 40.0);
+        assert!((sparse.speedup_vs(&dense) - 4.0).abs() < 1e-9);
+        assert!((sparse.energy_saving_vs(&dense) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_contains_key_metrics() {
+        let r = dummy(1_500_000, 5e6);
+        let s = r.summary();
+        assert!(s.contains("latency"));
+        assert!(s.contains("energy"));
+        assert!(s.contains("util"));
+    }
+}

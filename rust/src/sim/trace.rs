@@ -1,0 +1,192 @@
+//! Execution tracing: an optional per-round record of what the
+//! simulator scheduled, for debugging mappings and for the bound
+//! (roofline-style) analysis the performance pass uses.
+
+use crate::hw::arch::Architecture;
+use crate::mapping::planner::MappingPlan;
+use crate::workload::graph::Network;
+
+/// What bounds a round's latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    Load,
+    Compute,
+    WriteBack,
+}
+
+impl Bound {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Bound::Load => "load",
+            Bound::Compute => "compute",
+            Bound::WriteBack => "writeback",
+        }
+    }
+}
+
+/// One traced round.
+#[derive(Debug, Clone)]
+pub struct RoundTrace {
+    pub op: String,
+    pub round: usize,
+    pub active_macros: usize,
+    pub load_cycles: u64,
+    pub comp_cycles: u64,
+    pub wb_cycles: u64,
+    pub occupied_cells: u64,
+}
+
+impl RoundTrace {
+    pub fn bound(&self) -> Bound {
+        if self.load_cycles >= self.comp_cycles && self.load_cycles >= self.wb_cycles {
+            Bound::Load
+        } else if self.comp_cycles >= self.wb_cycles {
+            Bound::Compute
+        } else {
+            Bound::WriteBack
+        }
+    }
+}
+
+/// Whole-run trace with summary queries.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub rounds: Vec<RoundTrace>,
+}
+
+impl Trace {
+    /// Fraction of rounds bound by each stage.
+    pub fn bound_histogram(&self) -> [(Bound, f64); 3] {
+        let n = self.rounds.len().max(1) as f64;
+        let count = |b: Bound| self.rounds.iter().filter(|r| r.bound() == b).count() as f64 / n;
+        [
+            (Bound::Load, count(Bound::Load)),
+            (Bound::Compute, count(Bound::Compute)),
+            (Bound::WriteBack, count(Bound::WriteBack)),
+        ]
+    }
+
+    /// Ops ranked by attributed cycles (descending) — the profiling view.
+    pub fn hotspots(&self, top: usize) -> Vec<(String, u64)> {
+        let mut per_op: std::collections::BTreeMap<String, u64> = Default::default();
+        for r in &self.rounds {
+            *per_op.entry(r.op.clone()).or_insert(0) +=
+                r.load_cycles.max(r.comp_cycles) + r.wb_cycles;
+        }
+        let mut v: Vec<(String, u64)> = per_op.into_iter().collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v.truncate(top);
+        v
+    }
+
+    pub fn render(&self, limit: usize) -> String {
+        let mut out = String::from("op                        round macros    load    comp      wb bound\n");
+        for r in self.rounds.iter().take(limit) {
+            out.push_str(&format!(
+                "{:<25} {:>5} {:>6} {:>7} {:>7} {:>7} {}\n",
+                r.op,
+                r.round,
+                r.active_macros,
+                r.load_cycles,
+                r.comp_cycles,
+                r.wb_cycles,
+                r.bound().label()
+            ));
+        }
+        out
+    }
+}
+
+/// Build a trace by replaying the mapping the way the engine schedules
+/// it (kept consistent with `engine::simulate` via the shared Round
+/// structures; latencies recomputed with the same formulas).
+pub fn trace_mapping(
+    arch: &Architecture,
+    net: &Network,
+    mapping: &MappingPlan,
+    eff_bits: f64,
+) -> Trace {
+    let mut t = Trace::default();
+    for op in &net.ops {
+        let Some(m) = mapping.ops.get(&op.id) else {
+            continue;
+        };
+        for (i, round) in m.tiling.rounds.iter().enumerate() {
+            let max_tile_bytes = round
+                .tiles
+                .iter()
+                .map(|x| x.occupied * arch.weight_bits as u64 / 8)
+                .max()
+                .unwrap_or(0);
+            let load = arch
+                .local_buf
+                .transfer_cycles(max_tile_bytes)
+                .max(arch.weight_buf.transfer_cycles(round.weight_bytes));
+            let comp = (round.vectors_per_macro as f64 * eff_bits).ceil() as u64;
+            let wb = arch
+                .global_out_buf
+                .transfer_cycles(round.outputs * arch.input_bits as u64 / 8);
+            t.rounds.push(RoundTrace {
+                op: m.name.clone(),
+                round: i,
+                active_macros: round.tiles.len(),
+                load_cycles: load,
+                comp_cycles: comp,
+                wb_cycles: wb,
+                occupied_cells: round.occupied_cells(),
+            });
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+    use crate::mapping::planner::{plan, MappingOptions};
+    use crate::workload::zoo;
+
+    fn make_trace() -> Trace {
+        let net = zoo::resnet_mini();
+        let arch = presets::usecase_arch(4, (2, 2));
+        let mapping = plan(&arch, &net, None, MappingOptions::default()).unwrap();
+        trace_mapping(&arch, &net, &mapping, 8.0)
+    }
+
+    #[test]
+    fn trace_covers_all_mvm_rounds() {
+        let t = make_trace();
+        assert!(!t.rounds.is_empty());
+        let net = zoo::resnet_mini();
+        let names: std::collections::BTreeSet<String> =
+            t.rounds.iter().map(|r| r.op.clone()).collect();
+        assert_eq!(names.len(), net.mvm_ops().len());
+    }
+
+    #[test]
+    fn bound_histogram_sums_to_one() {
+        let t = make_trace();
+        let h = t.bound_histogram();
+        let s: f64 = h.iter().map(|(_, f)| f).sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hotspots_sorted_desc() {
+        let t = make_trace();
+        let h = t.hotspots(5);
+        assert!(!h.is_empty());
+        for w in h.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+
+    #[test]
+    fn render_is_bounded() {
+        let t = make_trace();
+        let s = t.render(3);
+        assert!(s.lines().count() <= 4);
+        assert!(s.contains("bound"));
+    }
+}

@@ -1,0 +1,421 @@
+//! Compression semantics: how a FlexBlock-masked weight matrix maps to a
+//! dense physical layout in CIM arrays (Sec. III-B/III-D, Sec. IV-C ①).
+//!
+//! Five structural paths, selected by the bound coarse pattern geometry:
+//!
+//! | path | coarse pattern          | compression                         | hw support                 |
+//! |------|-------------------------|-------------------------------------|----------------------------|
+//! | A    | none (intra only)       | uniform row compression φ/m         | mux routing + elem indices |
+//! | B    | full-width (n = N)      | row-strip elimination               | block indices              |
+//! | C    | full-height (m = M)     | column elimination                  | block indices              |
+//! | D    | partial width (n < N)   | horizontal in-strip packing, ragged | block idx + extra accum    |
+//! | E    | partial height, n = 1   | vertical in-column packing, ragged  | block idx + mux routing    |
+//!
+//! A hybrid (intra + full) composes the full path with path A's uniform
+//! row compression inside surviving strips.
+
+use super::flexblock::FlexBlock;
+use super::mask::{bind, LayerCtx};
+use super::pattern::BoundPattern;
+use crate::util::bits::BitMatrix;
+
+/// Physical layout of a compressed weight matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedLayout {
+    pub orig_rows: usize,
+    pub orig_cols: usize,
+    /// Physical rows required (max over ragged columns).
+    pub comp_rows: usize,
+    /// Physical columns required (max over ragged rows).
+    pub comp_cols: usize,
+    /// Per-physical-row occupancy in columns (len == comp_rows). Ragged
+    /// when compression produces uneven strips; uniform otherwise.
+    pub row_lengths: Vec<usize>,
+    /// Distinct logical inputs broadcast per physical row (1 = dense
+    /// broadcast; m for IntraBlock(m,1); measured fan-in for path E).
+    pub broadcast: usize,
+    /// Non-zero weight elements.
+    pub nnz: u64,
+    /// Block-level indices the hardware must store (Eq. 8 first term).
+    pub block_index_count: u64,
+    /// Element-level indices (Eq. 8 second term; IntraBlock only).
+    pub elem_index_count: u64,
+    /// Horizontal packing misaligned partial sums → extra accumulators.
+    pub misaligned_cols: bool,
+    /// Vertical packing / intra → mux-based input routing required.
+    pub routed_rows: bool,
+}
+
+impl CompressedLayout {
+    /// Dense layout for an unpruned matrix.
+    pub fn dense(rows: usize, cols: usize) -> Self {
+        Self {
+            orig_rows: rows,
+            orig_cols: cols,
+            comp_rows: rows,
+            comp_cols: cols,
+            row_lengths: vec![cols; rows],
+            broadcast: 1,
+            nnz: (rows * cols) as u64,
+            block_index_count: 0,
+            elem_index_count: 0,
+            misaligned_cols: false,
+            routed_rows: false,
+        }
+    }
+
+    /// Occupied fraction of the comp_rows × comp_cols bounding rectangle.
+    pub fn packing_utilization(&self) -> f64 {
+        if self.comp_rows == 0 || self.comp_cols == 0 {
+            return 0.0;
+        }
+        let occ: usize = self.row_lengths.iter().sum();
+        occ as f64 / (self.comp_rows * self.comp_cols) as f64
+    }
+
+    /// Compression ratio of physical footprint vs original (< 1 good).
+    pub fn footprint_ratio(&self) -> f64 {
+        (self.comp_rows * self.comp_cols) as f64 / (self.orig_rows * self.orig_cols) as f64
+    }
+}
+
+/// Compute the compressed layout of `mask` under FlexBlock `fb`.
+pub fn compress(fb: &FlexBlock, mask: &BitMatrix, ctx: LayerCtx) -> CompressedLayout {
+    let rows = mask.rows();
+    let cols = mask.cols();
+    let nnz = mask.count_ones() as u64;
+    if fb.is_dense() {
+        return CompressedLayout::dense(rows, cols);
+    }
+    let (intra, full) = bind(fb, rows, cols, ctx);
+    // intra compression factor: fine block of height im keeps φ rows
+    let (im, phi) = intra.map(|b| (b.m, b.phi)).unwrap_or((1, 1));
+    let elem_index_count = if intra.is_some() { nnz } else { 0 };
+
+    match full {
+        None => {
+            // Path A: uniform intra row compression.
+            let comp_rows = rows.div_ceil(im) * phi;
+            CompressedLayout {
+                orig_rows: rows,
+                orig_cols: cols,
+                comp_rows,
+                comp_cols: cols,
+                row_lengths: vec![cols; comp_rows],
+                broadcast: im,
+                nnz,
+                block_index_count: 0,
+                elem_index_count,
+                misaligned_cols: false,
+                routed_rows: true,
+            }
+        }
+        Some(bp) => compress_with_full(mask, &bp, im, phi, nnz, elem_index_count),
+    }
+}
+
+fn strip_phys_rows(cm: usize, im: usize, phi: usize) -> usize {
+    // a coarse strip of cm logical rows holds cm/im fine blocks of φ rows
+    cm.div_ceil(im) * phi
+}
+
+fn compress_with_full(
+    mask: &BitMatrix,
+    bp: &BoundPattern,
+    im: usize,
+    phi: usize,
+    nnz: u64,
+    elem_index_count: u64,
+) -> CompressedLayout {
+    let rows = mask.rows();
+    let cols = mask.cols();
+    let (gr, gc) = bp.grid(rows, cols);
+    // coarse-cell occupancy grid
+    let mut occupied = vec![false; gr * gc];
+    let mut n_occupied: u64 = 0;
+    for bi in 0..gr {
+        for bj in 0..gc {
+            let r0 = bi * bp.m;
+            let c0 = bj * bp.n;
+            let h = bp.m.min(rows - r0);
+            let w = bp.n.min(cols - c0);
+            if !mask.block_is_zero(r0, c0, h, w) {
+                occupied[bi * gc + bj] = true;
+                n_occupied += 1;
+            }
+        }
+    }
+    let wide = bp.n >= cols; // spans full width
+    let tall = bp.m >= rows; // spans full height
+    let sr = strip_phys_rows(bp.m, im, phi);
+    let routed_by_intra = im > 1;
+
+    if wide {
+        // Path B: row-strip elimination (gc == 1). Partial edge strips
+        // cannot exceed the original row count.
+        let surviving = occupied.iter().filter(|&&o| o).count();
+        let comp_rows = (surviving * sr).min(rows);
+        CompressedLayout {
+            orig_rows: rows,
+            orig_cols: cols,
+            comp_rows,
+            comp_cols: cols,
+            row_lengths: vec![cols; comp_rows],
+            broadcast: im.max(1),
+            nnz,
+            block_index_count: n_occupied,
+            elem_index_count,
+            misaligned_cols: false,
+            routed_rows: routed_by_intra,
+        }
+    } else if tall {
+        // Path C: column elimination (gr == 1).
+        let surviving_cols: usize = (0..gc)
+            .map(|bj| if occupied[bj] { bp.n.min(cols - bj * bp.n) } else { 0 })
+            .sum();
+        let comp_rows = rows.div_ceil(im) * phi;
+        CompressedLayout {
+            orig_rows: rows,
+            orig_cols: cols,
+            comp_rows,
+            comp_cols: surviving_cols,
+            row_lengths: vec![surviving_cols; comp_rows],
+            broadcast: im.max(1),
+            nnz,
+            block_index_count: n_occupied,
+            elem_index_count,
+            misaligned_cols: false,
+            routed_rows: routed_by_intra,
+        }
+    } else if bp.n > 1 {
+        // Path D: horizontal packing of surviving blocks within each strip.
+        let mut strip_widths: Vec<usize> = Vec::with_capacity(gr);
+        for bi in 0..gr {
+            let s: usize = (0..gc)
+                .map(|bj| {
+                    if occupied[bi * gc + bj] {
+                        bp.n.min(cols - bj * bp.n)
+                    } else {
+                        0
+                    }
+                })
+                .sum();
+            strip_widths.push(s);
+        }
+        // strips with zero survivors are eliminated entirely
+        let surviving: Vec<usize> = strip_widths.iter().copied().filter(|&w| w > 0).collect();
+        let comp_rows = (surviving.len() * sr).min(rows);
+        let comp_cols = surviving.iter().copied().max().unwrap_or(0);
+        let mut row_lengths = Vec::with_capacity(comp_rows);
+        'fill: for &w in &surviving {
+            for _ in 0..sr {
+                if row_lengths.len() == comp_rows {
+                    break 'fill;
+                }
+                row_lengths.push(w);
+            }
+        }
+        CompressedLayout {
+            orig_rows: rows,
+            orig_cols: cols,
+            comp_rows,
+            comp_cols,
+            row_lengths,
+            broadcast: im.max(1),
+            nnz,
+            block_index_count: n_occupied,
+            elem_index_count,
+            misaligned_cols: true,
+            routed_rows: routed_by_intra,
+        }
+    } else {
+        // Path E: vertical packing within each column (bp.n == 1, bp.m < M).
+        // Column heights after packing + measured routing fan-in per slot.
+        let mut col_heights: Vec<usize> = Vec::with_capacity(gc);
+        for bj in 0..gc {
+            let o = (0..gr).filter(|&bi| occupied[bi * gc + bj]).count();
+            col_heights.push(o);
+        }
+        let max_slots = col_heights.iter().copied().max().unwrap_or(0);
+        // partial edge blocks cap at the original row extent
+        let comp_rows = (max_slots * sr).min(rows);
+        // fan-in: for each packed slot index, distinct logical block rows
+        // across columns — this is what the input-routing mux must cover.
+        let mut fan_in_sum = 0usize;
+        let mut fan_in_slots = 0usize;
+        for slot in 0..max_slots {
+            let mut distinct = std::collections::BTreeSet::new();
+            for bj in 0..gc {
+                let mut seen = 0usize;
+                for bi in 0..gr {
+                    if occupied[bi * gc + bj] {
+                        if seen == slot {
+                            distinct.insert(bi);
+                            break;
+                        }
+                        seen += 1;
+                    }
+                }
+            }
+            if !distinct.is_empty() {
+                fan_in_sum += distinct.len();
+                fan_in_slots += 1;
+            }
+        }
+        let fan_in = if fan_in_slots > 0 {
+            (fan_in_sum as f64 / fan_in_slots as f64).ceil() as usize
+        } else {
+            1
+        };
+        let surviving_cols = col_heights.iter().filter(|&&h| h > 0).count();
+        // per-physical-row occupancy (transposed view of column heights)
+        let mut row_lengths = vec![0usize; comp_rows];
+        for &h in &col_heights {
+            for r in 0..(h * sr).min(comp_rows) {
+                row_lengths[r] += 1;
+            }
+        }
+        let _ = surviving_cols;
+        CompressedLayout {
+            orig_rows: rows,
+            orig_cols: cols,
+            comp_rows,
+            comp_cols: cols,
+            row_lengths,
+            broadcast: (fan_in * im).max(1),
+            nnz,
+            block_index_count: n_occupied,
+            elem_index_count,
+            misaligned_cols: false,
+            routed_rows: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::mask::random_mask;
+    use crate::util::rng::Pcg32;
+
+    fn ctx() -> LayerCtx {
+        LayerCtx { per_channel: 9 }
+    }
+
+    #[test]
+    fn dense_layout() {
+        let fb = FlexBlock::dense();
+        let mask = BitMatrix::ones(64, 32);
+        let l = compress(&fb, &mask, ctx());
+        assert_eq!((l.comp_rows, l.comp_cols), (64, 32));
+        assert_eq!(l.packing_utilization(), 1.0);
+        assert_eq!(l.broadcast, 1);
+    }
+
+    #[test]
+    fn path_b_row_wise() {
+        let fb = FlexBlock::row_wise(0.75);
+        let mut rng = Pcg32::new(1);
+        let mask = random_mask(&fb, 64, 32, ctx(), &mut rng);
+        let l = compress(&fb, &mask, ctx());
+        assert_eq!(l.comp_rows, 16); // 25% of 64 rows survive
+        assert_eq!(l.comp_cols, 32);
+        assert!(!l.misaligned_cols && !l.routed_rows);
+        assert_eq!(l.block_index_count, 16);
+        assert_eq!(l.elem_index_count, 0);
+        assert_eq!(l.packing_utilization(), 1.0);
+    }
+
+    #[test]
+    fn path_c_column_wise() {
+        let fb = FlexBlock::column_wise(0.5);
+        let mut rng = Pcg32::new(2);
+        let mask = random_mask(&fb, 64, 40, ctx(), &mut rng);
+        let l = compress(&fb, &mask, ctx());
+        assert_eq!(l.comp_rows, 64);
+        assert_eq!(l.comp_cols, 20);
+        assert!(!l.misaligned_cols);
+    }
+
+    #[test]
+    fn path_a_intra() {
+        let fb = FlexBlock::intra(2, 0.5);
+        let mut rng = Pcg32::new(3);
+        let mask = random_mask(&fb, 64, 32, ctx(), &mut rng);
+        let l = compress(&fb, &mask, ctx());
+        assert_eq!(l.comp_rows, 32); // halved uniformly
+        assert_eq!(l.broadcast, 2);
+        assert!(l.routed_rows);
+        assert_eq!(l.elem_index_count, l.nnz);
+        assert_eq!(l.packing_utilization(), 1.0);
+    }
+
+    #[test]
+    fn path_d_row_block_ragged() {
+        let fb = FlexBlock::row_block(16, 0.5);
+        let mut rng = Pcg32::new(4);
+        let mask = random_mask(&fb, 32, 64, ctx(), &mut rng);
+        let l = compress(&fb, &mask, ctx());
+        assert!(l.misaligned_cols);
+        assert!(l.comp_cols <= 64);
+        assert!(l.comp_rows <= 32);
+        // every row length is a multiple of the block width
+        assert!(l.row_lengths.iter().all(|&w| w % 16 == 0));
+        // ragged unless extremely lucky
+        let min = l.row_lengths.iter().min().unwrap();
+        let max = l.row_lengths.iter().max().unwrap();
+        assert!(max >= min);
+        assert_eq!(*max, l.comp_cols);
+    }
+
+    #[test]
+    fn path_e_column_block_vertical() {
+        let fb = FlexBlock::column_block(8, 0.5);
+        let mut rng = Pcg32::new(5);
+        let mask = random_mask(&fb, 64, 16, ctx(), &mut rng);
+        let l = compress(&fb, &mask, ctx());
+        assert!(l.routed_rows);
+        assert!(l.broadcast >= 1);
+        assert!(l.comp_rows <= 64);
+        // vertical packing reduces rows below original on average
+        assert!(l.comp_rows >= 8, "at least one slot of 8 rows");
+    }
+
+    #[test]
+    fn hybrid_combines_intra_and_full() {
+        let fb = FlexBlock::hybrid(2, 16, 0.8);
+        let mut rng = Pcg32::new(6);
+        let mask = random_mask(&fb, 128, 64, ctx(), &mut rng);
+        let l = compress(&fb, &mask, ctx());
+        assert!(l.misaligned_cols, "row-block packing");
+        assert!(l.routed_rows, "intra routing");
+        assert_eq!(l.broadcast, 2);
+        assert_eq!(l.elem_index_count, l.nnz);
+        // rows compress: 128 logical rows → strips of 2 → ≤ 64 physical
+        assert!(l.comp_rows <= 64, "comp_rows={}", l.comp_rows);
+    }
+
+    #[test]
+    fn hybrid_row_wise_uniform() {
+        let fb = FlexBlock::hybrid_row_wise(2, 0.8);
+        let mut rng = Pcg32::new(7);
+        let mask = random_mask(&fb, 128, 64, ctx(), &mut rng);
+        let l = compress(&fb, &mask, ctx());
+        assert!(!l.misaligned_cols);
+        assert_eq!(l.packing_utilization(), 1.0);
+        // density 0.2 → 0.4 of strips survive → 128/2*0.4 ≈ 25 physical rows
+        assert!(l.comp_rows <= 32 && l.comp_rows >= 18, "{}", l.comp_rows);
+    }
+
+    #[test]
+    fn footprint_improves_with_sparsity() {
+        let mut rng = Pcg32::new(8);
+        let lo = FlexBlock::row_wise(0.5);
+        let hi = FlexBlock::row_wise(0.9);
+        let ml = random_mask(&lo, 256, 64, ctx(), &mut rng);
+        let mh = random_mask(&hi, 256, 64, ctx(), &mut rng);
+        let fl = compress(&lo, &ml, ctx()).footprint_ratio();
+        let fh = compress(&hi, &mh, ctx()).footprint_ratio();
+        assert!(fh < fl, "higher sparsity → smaller footprint: {fh} vs {fl}");
+    }
+}

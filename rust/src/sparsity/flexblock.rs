@@ -1,0 +1,487 @@
+//! The FlexBlock sparsity abstraction (Def. III.1): a composition of at
+//! most two block-based patterns describing a weight matrix's sparsity,
+//! with the practical constraints of Sec. III-D enforced by
+//! [`FlexBlock::validate`].
+
+use super::pattern::{BlockPattern, Dim, PatternKind};
+use crate::util::json::Json;
+
+/// A FlexBlock sparsity description 𝓑 = {B₁, …, B_k}, k ≤ 2, stored
+/// finest-first. For hybrid patterns the finer IntraBlock precedes the
+/// coarser FullBlock (e.g. "1:2 + Row-block" = Intra(2,1) + Full(2,16)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlexBlock {
+    pub patterns: Vec<BlockPattern>,
+    /// Human-readable name used in reports (e.g. "Row-block").
+    pub name: String,
+}
+
+impl FlexBlock {
+    /// Dense (no sparsity) marker — empty pattern set.
+    pub fn dense() -> Self {
+        Self {
+            patterns: vec![],
+            name: "Dense".into(),
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        self.patterns.is_empty()
+    }
+
+    /// Single FullBlock pattern.
+    pub fn full_block(m: usize, n: usize, ratio: f64) -> Self {
+        Self {
+            patterns: vec![BlockPattern::full(Dim::Fixed(m), Dim::Fixed(n), ratio)],
+            name: format!("FullBlock({m},{n})"),
+        }
+    }
+
+    // ---- Table II named patterns ----
+
+    /// Row-wise: FullBlock(1, N).
+    pub fn row_wise(ratio: f64) -> Self {
+        Self {
+            patterns: vec![BlockPattern::full(Dim::Fixed(1), Dim::Full, ratio)],
+            name: "Row-wise".into(),
+        }
+    }
+
+    /// Row-block: FullBlock(1, w) (default w = 16).
+    pub fn row_block(w: usize, ratio: f64) -> Self {
+        Self {
+            patterns: vec![BlockPattern::full(Dim::Fixed(1), Dim::Fixed(w), ratio)],
+            name: format!("Row-block({w})"),
+        }
+    }
+
+    /// Column (filter)-wise: FullBlock(M, 1).
+    pub fn column_wise(ratio: f64) -> Self {
+        Self {
+            patterns: vec![BlockPattern::full(Dim::Full, Dim::Fixed(1), ratio)],
+            name: "Column-wise".into(),
+        }
+    }
+
+    /// Channel-wise: prunes whole input channels — row groups of kh·kw
+    /// under channel-major flattening, spanning all columns.
+    pub fn channel_wise(ratio: f64) -> Self {
+        Self {
+            patterns: vec![BlockPattern::full(Dim::PerChannel, Dim::Full, ratio)],
+            name: "Channel-wise".into(),
+        }
+    }
+
+    /// Column-block: FullBlock(h, 1) (default h = 16).
+    pub fn column_block(h: usize, ratio: f64) -> Self {
+        Self {
+            patterns: vec![BlockPattern::full(Dim::Fixed(h), Dim::Fixed(1), ratio)],
+            name: format!("Column-block({h})"),
+        }
+    }
+
+    /// IntraBlock m:1 column pattern (e.g. m=2 → "1:2").
+    pub fn intra(m: usize, ratio: f64) -> Self {
+        Self {
+            patterns: vec![BlockPattern::intra(m, ratio)],
+            name: format!("Intra({m},1)"),
+        }
+    }
+
+    /// IntraBlock with an explicit pattern set 𝒫 (SegPrune-style
+    /// pattern-based sparsity, Sec. III-D): only the given m×1 masks are
+    /// admissible arrangements. All masks must share the same popcount φ
+    /// (uniform compressed shape) — enforced by `validate`.
+    pub fn intra_with_patterns(
+        m: usize,
+        patterns: Vec<crate::util::bits::BitMatrix>,
+        name: &str,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!patterns.is_empty(), "pattern set must be non-empty");
+        let phi = patterns[0].count_ones();
+        anyhow::ensure!(phi >= 1 && phi < m, "patterns must keep 1..m-1 of {m}");
+        for p in &patterns {
+            anyhow::ensure!(
+                (p.rows(), p.cols()) == (m, 1),
+                "pattern shape {}x{} != {m}x1",
+                p.rows(),
+                p.cols()
+            );
+            anyhow::ensure!(
+                p.count_ones() == phi,
+                "all patterns must keep the same φ (uniform compressed shape)"
+            );
+        }
+        let ratio = 1.0 - phi as f64 / m as f64;
+        let mut bp = BlockPattern::intra(m, ratio);
+        bp.pattern_set = Some(patterns);
+        Ok(Self {
+            patterns: vec![bp],
+            name: name.to_string(),
+        })
+    }
+
+    /// Hybrid: IntraBlock(m,1) keeping 1 of m + FullBlock(m, w) at a
+    /// FullBlock ratio chosen to hit `overall_ratio` total sparsity
+    /// (Sec. VII-A: "the IntraBlock ratio is fixed such that only one
+    /// element per block remains; the FullBlock ratio is adjusted to
+    /// maintain the overall sparsity ratio").
+    pub fn hybrid(m: usize, w: usize, overall_ratio: f64) -> Self {
+        let intra_keep = 1.0 / m as f64; // density after intra
+        // overall density = intra_keep * (1 - r_full)  ⇒
+        let r_full = (1.0 - (1.0 - overall_ratio) / intra_keep).clamp(0.01, 0.99);
+        let intra_ratio = 1.0 - intra_keep;
+        Self {
+            patterns: vec![
+                BlockPattern::intra(m, intra_ratio),
+                BlockPattern::full(Dim::Fixed(m), Dim::Fixed(w), r_full),
+            ],
+            name: format!("1:{m}+Row-block({w})"),
+        }
+    }
+
+    /// Hybrid with a full-width coarse pattern ("1:2 + Row-wise").
+    pub fn hybrid_row_wise(m: usize, overall_ratio: f64) -> Self {
+        let intra_keep = 1.0 / m as f64;
+        let r_full = (1.0 - (1.0 - overall_ratio) / intra_keep).clamp(0.01, 0.99);
+        Self {
+            patterns: vec![
+                BlockPattern::intra(m, 1.0 - intra_keep),
+                BlockPattern::full(Dim::Fixed(m), Dim::Full, r_full),
+            ],
+            name: format!("1:{m}+Row-wise"),
+        }
+    }
+
+    /// Overall expected weight sparsity (fraction of zero elements).
+    pub fn overall_sparsity(&self) -> f64 {
+        let mut density = 1.0;
+        for p in &self.patterns {
+            match p.kind {
+                PatternKind::FullBlock => density *= 1.0 - p.ratio,
+                PatternKind::IntraBlock => density *= 1.0 - p.ratio,
+            }
+        }
+        1.0 - density
+    }
+
+    /// The IntraBlock component, if any.
+    pub fn intra_pattern(&self) -> Option<&BlockPattern> {
+        self.patterns
+            .iter()
+            .find(|p| p.kind == PatternKind::IntraBlock)
+    }
+
+    /// The FullBlock component, if any.
+    pub fn full_pattern(&self) -> Option<&BlockPattern> {
+        self.patterns
+            .iter()
+            .find(|p| p.kind == PatternKind::FullBlock)
+    }
+
+    /// Enforce the structural constraints of Sec. III-C/III-D:
+    /// - at most two patterns; if two, exactly one IntraBlock (finer) and
+    ///   one FullBlock (coarser);
+    /// - ratios in (0, 1); block sizes m·n > 1;
+    /// - IntraBlock blocks are column-wise 1-D (n = 1);
+    /// - the coarser FullBlock size is an integral multiple of the finer
+    ///   IntraBlock size along both axes.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.patterns.len() > 2 {
+            anyhow::bail!(
+                "FlexBlock `{}`: composition limited to 2 patterns, got {}",
+                self.name,
+                self.patterns.len()
+            );
+        }
+        for p in &self.patterns {
+            if !(0.0..1.0).contains(&p.ratio) || p.ratio == 0.0 {
+                anyhow::bail!(
+                    "FlexBlock `{}`: sparsity ratio must be in (0,1), got {}",
+                    self.name,
+                    p.ratio
+                );
+            }
+            if let (Dim::Fixed(m), Dim::Fixed(n)) = (p.m, p.n) {
+                if m * n <= 1 {
+                    anyhow::bail!("FlexBlock `{}`: block size m·n must exceed 1", self.name);
+                }
+            }
+            if p.kind == PatternKind::IntraBlock && p.n != Dim::Fixed(1) {
+                anyhow::bail!(
+                    "FlexBlock `{}`: IntraBlock patterns must be column-wise 1-D (n = 1)",
+                    self.name
+                );
+            }
+        }
+        if self.patterns.len() == 2 {
+            let kinds: Vec<PatternKind> = self.patterns.iter().map(|p| p.kind).collect();
+            let n_intra = kinds.iter().filter(|k| **k == PatternKind::IntraBlock).count();
+            if n_intra != 1 {
+                // Two FullBlocks are a mathematical subset of the finer one
+                // (Sec. III-D); two IntraBlocks explode routing complexity.
+                anyhow::bail!(
+                    "FlexBlock `{}`: a 2-pattern composition must pair one IntraBlock with one FullBlock",
+                    self.name
+                );
+            }
+            let intra = self.intra_pattern().unwrap();
+            let full = self.full_pattern().unwrap();
+            // integral-multiple constraint along rows (both are column-wise
+            // 1-D or wider in n; n multiple only checked for Fixed dims)
+            if let (Dim::Fixed(fm), Dim::Fixed(im)) = (full.m, intra.m) {
+                if fm % im != 0 {
+                    anyhow::bail!(
+                        "FlexBlock `{}`: coarse block height {fm} must be an integral multiple of fine height {im}",
+                        self.name
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---- JSON interchange (config files / python pruning workflow) ----
+
+    pub fn to_json(&self) -> Json {
+        let dim_to_json = |d: &Dim| match d {
+            Dim::Fixed(k) => Json::Num(*k as f64),
+            Dim::Full => Json::Str("full".into()),
+            Dim::PerChannel => Json::Str("per_channel".into()),
+        };
+        let patterns: Vec<Json> = self
+            .patterns
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set(
+                    "kind",
+                    Json::Str(
+                        match p.kind {
+                            PatternKind::FullBlock => "full_block",
+                            PatternKind::IntraBlock => "intra_block",
+                        }
+                        .into(),
+                    ),
+                );
+                o.set("m", dim_to_json(&p.m));
+                o.set("n", dim_to_json(&p.n));
+                o.set("ratio", Json::Num(p.ratio));
+                o
+            })
+            .collect();
+        let mut root = Json::obj();
+        root.set("name", Json::Str(self.name.clone()));
+        root.set("patterns", Json::Arr(patterns));
+        root
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<FlexBlock> {
+        let name = j.req_str("name")?.to_string();
+        let parse_dim = |v: &Json| -> anyhow::Result<Dim> {
+            if let Some(k) = v.as_usize() {
+                Ok(Dim::Fixed(k))
+            } else {
+                match v.as_str() {
+                    Some("full") => Ok(Dim::Full),
+                    Some("per_channel") => Ok(Dim::PerChannel),
+                    _ => anyhow::bail!("bad block dim {v}"),
+                }
+            }
+        };
+        let mut patterns = Vec::new();
+        for p in j.req_arr("patterns")? {
+            let kind = match p.req_str("kind")? {
+                "full_block" => PatternKind::FullBlock,
+                "intra_block" => PatternKind::IntraBlock,
+                other => anyhow::bail!("unknown pattern kind `{other}`"),
+            };
+            patterns.push(BlockPattern {
+                kind,
+                m: parse_dim(p.req("m")?)?,
+                n: parse_dim(p.req("n")?)?,
+                ratio: p.req_f64("ratio")?,
+                pattern_set: None,
+            });
+        }
+        let fb = FlexBlock { patterns, name };
+        fb.validate()?;
+        Ok(fb)
+    }
+
+    /// FlexBlock representation string as printed in Table II.
+    pub fn representation(&self) -> String {
+        if self.is_dense() {
+            return "Dense".into();
+        }
+        self.patterns
+            .iter()
+            .map(|p| p.label())
+            .collect::<Vec<_>>()
+            .join(" + ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_patterns_validate() {
+        for fb in [
+            FlexBlock::row_wise(0.8),
+            FlexBlock::row_block(16, 0.8),
+            FlexBlock::column_wise(0.8),
+            FlexBlock::channel_wise(0.8),
+            FlexBlock::column_block(16, 0.8),
+            FlexBlock::intra(2, 0.5),
+            FlexBlock::hybrid(2, 16, 0.8),
+            FlexBlock::hybrid_row_wise(2, 0.8),
+            FlexBlock::hybrid(4, 16, 0.8),
+        ] {
+            fb.validate().unwrap_or_else(|e| panic!("{}: {e}", fb.name));
+        }
+    }
+
+    #[test]
+    fn hybrid_hits_overall_ratio() {
+        for target in [0.5, 0.6, 0.7, 0.8, 0.9] {
+            let fb = FlexBlock::hybrid(2, 16, target);
+            let got = fb.overall_sparsity();
+            assert!(
+                (got - target).abs() < 0.02,
+                "target {target} got {got} ({})",
+                fb.name
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_three_patterns() {
+        let mut fb = FlexBlock::hybrid(2, 16, 0.8);
+        fb.patterns.push(BlockPattern::full(Dim::Fixed(4), Dim::Fixed(4), 0.5));
+        assert!(fb.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_two_fullblocks() {
+        let fb = FlexBlock {
+            patterns: vec![
+                BlockPattern::full(Dim::Fixed(1), Dim::Fixed(16), 0.5),
+                BlockPattern::full(Dim::Fixed(2), Dim::Fixed(32), 0.5),
+            ],
+            name: "bad".into(),
+        };
+        assert!(fb.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_non_multiple_hybrid() {
+        let fb = FlexBlock {
+            patterns: vec![
+                BlockPattern::intra(2, 0.5),
+                BlockPattern::full(Dim::Fixed(3), Dim::Fixed(16), 0.5),
+            ],
+            name: "bad".into(),
+        };
+        assert!(fb.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_2d_intra() {
+        let fb = FlexBlock {
+            patterns: vec![BlockPattern {
+                kind: PatternKind::IntraBlock,
+                m: Dim::Fixed(2),
+                n: Dim::Fixed(2),
+                ratio: 0.5,
+                pattern_set: None,
+            }],
+            name: "bad".into(),
+        };
+        assert!(fb.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_ratio() {
+        let mut fb = FlexBlock::row_wise(0.8);
+        fb.patterns[0].ratio = 1.0;
+        assert!(fb.validate().is_err());
+        fb.patterns[0].ratio = 0.0;
+        assert!(fb.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for fb in [
+            FlexBlock::row_wise(0.8),
+            FlexBlock::hybrid(2, 16, 0.7),
+            FlexBlock::channel_wise(0.5),
+        ] {
+            let j = fb.to_json();
+            let fb2 = FlexBlock::from_json(&j).unwrap();
+            assert_eq!(fb, fb2);
+        }
+    }
+
+    #[test]
+    fn representations_match_table2_style() {
+        assert_eq!(FlexBlock::row_wise(0.8).representation(), "Full(1,*)@0.80");
+        assert_eq!(
+            FlexBlock::hybrid(2, 16, 0.8).representation(),
+            "Intra(2,1)@0.50 + Full(2,16)@0.60"
+        );
+    }
+
+    #[test]
+    fn custom_pattern_sets() {
+        use crate::util::bits::BitMatrix;
+        let mk = |keeps: &[usize]| {
+            let mut m = BitMatrix::zeros(4, 1);
+            for &k in keeps {
+                m.set(k, 0, true);
+            }
+            m
+        };
+        // SegPrune-style: only "adjacent pair" arrangements allowed
+        let fb = FlexBlock::intra_with_patterns(
+            4,
+            vec![mk(&[0, 1]), mk(&[1, 2]), mk(&[2, 3])],
+            "AdjacentPairs",
+        )
+        .unwrap();
+        fb.validate().unwrap();
+        assert!((fb.overall_sparsity() - 0.5).abs() < 1e-9);
+        // masks drawn from it only use admissible arrangements
+        let mut rng = crate::util::rng::Pcg32::new(3);
+        let mask = crate::sparsity::mask::random_mask(
+            &fb,
+            64,
+            8,
+            crate::sparsity::mask::LayerCtx::fc(),
+            &mut rng,
+        );
+        for b in 0..16 {
+            for c in 0..8 {
+                let kept: Vec<usize> = (0..4).filter(|&r| mask.get(b * 4 + r, c)).collect();
+                assert_eq!(kept.len(), 2, "uniform φ");
+                assert_eq!(kept[1], kept[0] + 1, "adjacent pair only: {kept:?}");
+            }
+        }
+        // rejected: mixed popcounts / wrong shapes
+        assert!(FlexBlock::intra_with_patterns(4, vec![mk(&[0]), mk(&[1, 2])], "bad").is_err());
+        assert!(FlexBlock::intra_with_patterns(4, vec![], "bad").is_err());
+        assert!(
+            FlexBlock::intra_with_patterns(3, vec![mk(&[0, 1])], "bad").is_err(),
+            "shape mismatch"
+        );
+    }
+
+    #[test]
+    fn dense_is_dense() {
+        let d = FlexBlock::dense();
+        assert!(d.is_dense());
+        assert_eq!(d.overall_sparsity(), 0.0);
+        d.validate().unwrap();
+    }
+}

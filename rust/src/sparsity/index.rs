@@ -1,0 +1,160 @@
+//! Index storage overhead for sparsity support (Eq. 8, Sec. V-B):
+//!
+//! S_idx(W) = N_nz_blocks · S_B + Σᵢ N_nz(Bᵢ) · S_elem
+//!
+//! Block indices locate each surviving block of the finest FullBlock (or
+//! IntraBlock) pattern; element indices locate each kept element within
+//! an IntraBlock block. These sizes drive the capacity of the index
+//! memories the hardware layer instantiates automatically.
+
+use super::compress::CompressedLayout;
+use super::flexblock::FlexBlock;
+use super::mask::{bind, LayerCtx};
+
+/// Bits needed to address `n` distinct values (≥1 bit).
+pub fn addr_bits(n: usize) -> u32 {
+    if n <= 1 {
+        1
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()).max(1)
+    }
+}
+
+/// Index storage requirement for one layer, in bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IndexStorage {
+    /// Bits per block index (S_B).
+    pub block_index_bits: u32,
+    /// Bits per element index (S_elem).
+    pub elem_index_bits: u32,
+    /// Number of stored block indices (N_nz blocks).
+    pub n_block_indices: u64,
+    /// Number of stored element indices (Σ N_nz(Bᵢ)).
+    pub n_elem_indices: u64,
+}
+
+impl IndexStorage {
+    /// Total bits of index memory needed (Eq. 8).
+    pub fn total_bits(&self) -> u64 {
+        self.n_block_indices * self.block_index_bits as u64
+            + self.n_elem_indices * self.elem_index_bits as u64
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bits().div_ceil(8)
+    }
+}
+
+/// Compute Eq. 8 for a layer from its FlexBlock description and the
+/// compressed layout measured from the actual mask.
+pub fn index_storage(
+    fb: &FlexBlock,
+    layout: &CompressedLayout,
+    ctx: LayerCtx,
+) -> IndexStorage {
+    if fb.is_dense() {
+        return IndexStorage {
+            block_index_bits: 0,
+            elem_index_bits: 0,
+            n_block_indices: 0,
+            n_elem_indices: 0,
+        };
+    }
+    let (intra, full) = bind(fb, layout.orig_rows, layout.orig_cols, ctx);
+    // Block index width: addresses a position in the coarse grid (or the
+    // fine grid when only IntraBlock is present — each fine block then
+    // needs its position implicitly, which is sequential, so 0).
+    let block_index_bits = match &full {
+        Some(bp) => {
+            let (gr, gc) = bp.grid(layout.orig_rows, layout.orig_cols);
+            addr_bits(gr * gc)
+        }
+        None => 0,
+    };
+    // Element index width: position of a kept element within an m×1 block.
+    let elem_index_bits = intra.map(|bp| addr_bits(bp.m)).unwrap_or(0);
+    IndexStorage {
+        block_index_bits,
+        elem_index_bits,
+        n_block_indices: layout.block_index_count,
+        n_elem_indices: layout.elem_index_count,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::compress::compress;
+    use crate::sparsity::mask::random_mask;
+    use crate::util::rng::Pcg32;
+
+    fn storage_for(fb: &FlexBlock, rows: usize, cols: usize, seed: u64) -> IndexStorage {
+        let ctx = LayerCtx::fc();
+        let mut rng = Pcg32::new(seed);
+        let mask = random_mask(fb, rows, cols, ctx, &mut rng);
+        let layout = compress(fb, &mask, ctx);
+        index_storage(fb, &layout, ctx)
+    }
+
+    #[test]
+    fn addr_bits_values() {
+        assert_eq!(addr_bits(1), 1);
+        assert_eq!(addr_bits(2), 1);
+        assert_eq!(addr_bits(3), 2);
+        assert_eq!(addr_bits(4), 2);
+        assert_eq!(addr_bits(1024), 10);
+        assert_eq!(addr_bits(1025), 11);
+    }
+
+    #[test]
+    fn dense_needs_nothing() {
+        let s = storage_for(&FlexBlock::dense(), 64, 64, 1);
+        assert_eq!(s.total_bits(), 0);
+    }
+
+    #[test]
+    fn fullblock_only_needs_block_indices() {
+        let fb = FlexBlock::row_block(16, 0.5);
+        let s = storage_for(&fb, 64, 64, 2);
+        assert!(s.n_block_indices > 0);
+        assert_eq!(s.n_elem_indices, 0);
+        // grid is 64 × 4 = 256 blocks → 8-bit indices
+        assert_eq!(s.block_index_bits, 8);
+    }
+
+    #[test]
+    fn intra_needs_elem_indices() {
+        let fb = FlexBlock::intra(4, 0.75);
+        let s = storage_for(&fb, 64, 64, 3);
+        assert_eq!(s.n_block_indices, 0);
+        assert_eq!(s.n_elem_indices, 64 * 64 / 4); // φ=1 kept per 4-block
+        assert_eq!(s.elem_index_bits, 2); // position within 4
+    }
+
+    #[test]
+    fn hybrid_needs_both() {
+        let fb = FlexBlock::hybrid(2, 16, 0.8);
+        let s = storage_for(&fb, 128, 64, 4);
+        assert!(s.n_block_indices > 0);
+        assert!(s.n_elem_indices > 0);
+        assert_eq!(s.elem_index_bits, 1); // within a 2-block
+        assert!(s.total_bits() > 0);
+        assert_eq!(
+            s.total_bits(),
+            s.n_block_indices * 8 + s.n_elem_indices // grid 64*4=256 → 8 bits
+        );
+    }
+
+    #[test]
+    fn finer_patterns_cost_more_index_storage() {
+        // Paper: finer granularity → more indexing overhead.
+        let coarse = storage_for(&FlexBlock::row_wise(0.8), 256, 256, 5);
+        let fine = storage_for(&FlexBlock::hybrid(2, 16, 0.8), 256, 256, 5);
+        assert!(
+            fine.total_bits() > coarse.total_bits(),
+            "fine {} <= coarse {}",
+            fine.total_bits(),
+            coarse.total_bits()
+        );
+    }
+}

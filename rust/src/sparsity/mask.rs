@@ -1,0 +1,381 @@
+//! Sparsity mask generation from FlexBlock descriptions.
+//!
+//! Masks come from two sources, matching Sec. IV-C: the pruning workflow
+//! (importance-driven selection, `crate::pruning`) or randomized
+//! generation "in accordance with the provided pattern description" for
+//! user-defined workloads without weights. Both go through the selection
+//! functions here so the structural guarantees are enforced in one place.
+
+use super::pattern::{default_pattern_set, BoundPattern, PatternKind};
+use crate::sparsity::flexblock::FlexBlock;
+use crate::util::bits::BitMatrix;
+use crate::util::rng::Pcg32;
+
+/// Layer context needed to bind symbolic dims: `per_channel` = rows per
+/// input channel in the reshaped matrix (kh·kw; 1 for FC).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerCtx {
+    pub per_channel: usize,
+}
+
+impl LayerCtx {
+    pub fn fc() -> Self {
+        Self { per_channel: 1 }
+    }
+}
+
+/// Bind a FlexBlock's patterns against a concrete matrix, returning
+/// `(intra, full)` bound components.
+pub fn bind(
+    fb: &FlexBlock,
+    rows: usize,
+    cols: usize,
+    ctx: LayerCtx,
+) -> (Option<BoundPattern>, Option<BoundPattern>) {
+    let mut intra = None;
+    let mut full = None;
+    for p in &fb.patterns {
+        let b = p.bind(rows, cols, ctx.per_channel);
+        match b.kind {
+            PatternKind::IntraBlock => intra = Some(b),
+            PatternKind::FullBlock => full = Some(b),
+        }
+    }
+    (intra, full)
+}
+
+/// Build a mask keeping exactly the coarse blocks whose grid-row-major
+/// index is in `keep` (true = keep). Grid uses ceil division; edge blocks
+/// are partial.
+pub fn fullblock_mask_from_selection(
+    rows: usize,
+    cols: usize,
+    bp: &BoundPattern,
+    keep: &[bool],
+) -> BitMatrix {
+    let (gr, gc) = bp.grid(rows, cols);
+    assert_eq!(keep.len(), gr * gc, "selection length != grid size");
+    let mut mask = BitMatrix::zeros(rows, cols);
+    for bi in 0..gr {
+        for bj in 0..gc {
+            if keep[bi * gc + bj] {
+                let r0 = bi * bp.m;
+                let c0 = bj * bp.n;
+                let c1 = (c0 + bp.n).min(cols);
+                for r in r0..(r0 + bp.m).min(rows) {
+                    mask.set_row_range(r, c0, c1, true);
+                }
+            }
+        }
+    }
+    mask
+}
+
+/// Fast path for randomized IntraBlock(m, 1) with the default (full)
+/// pattern set: keeping φ of m elements uniformly is equivalent to
+/// sampling φ distinct offsets per surviving block — no pattern-set
+/// materialization, no per-pattern masking. Hot path of the pruning
+/// workflow (§Perf).
+pub fn intrablock_random_m1(mask: &mut BitMatrix, bp: &BoundPattern, rng: &mut Pcg32) {
+    debug_assert_eq!(bp.n, 1);
+    let rows = mask.rows();
+    let cols = mask.cols();
+    let gr = rows.div_ceil(bp.m);
+    for bi in 0..gr {
+        let r0 = bi * bp.m;
+        let h = bp.m.min(rows - r0);
+        let phi = bp.phi.min(h);
+        let pow2 = h.is_power_of_two();
+        for c in 0..cols {
+            // coarse FullBlock pruning is block-aligned (integral-multiple
+            // constraint), so a surviving fine block is fully set — test
+            // one cell
+            if !mask.get(r0, c) {
+                continue;
+            }
+            if phi == 1 {
+                // power-of-two block heights (1:2, 1:4 — the practical
+                // cases) take an unbiased masked draw, skipping Lemire
+                // rejection (§Perf opt 4)
+                let keep = if pow2 {
+                    (rng.next_u32() as usize) & (h - 1)
+                } else {
+                    rng.index(h)
+                };
+                for r in 0..h {
+                    if r != keep {
+                        mask.set(r0 + r, c, false);
+                    }
+                }
+            } else {
+                let keeps = rng.sample_indices(h, phi);
+                for r in 0..h {
+                    if !keeps.contains(&r) {
+                        mask.set(r0 + r, c, false);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Random FullBlock selection: keep Φ = ⌊(1−r)·G⌋ blocks chosen uniformly.
+pub fn fullblock_random_selection(
+    rows: usize,
+    cols: usize,
+    bp: &BoundPattern,
+    rng: &mut Pcg32,
+) -> Vec<bool> {
+    let (gr, gc) = bp.grid(rows, cols);
+    let total = gr * gc;
+    let keep_n = bp.nonzero_blocks(rows, cols);
+    let mut keep = vec![false; total];
+    for i in rng.sample_indices(total, keep_n) {
+        keep[i] = true;
+    }
+    keep
+}
+
+/// Apply IntraBlock sparsity in place: for every fine block that is not
+/// already fully zero, AND it with a pattern chosen by `choose` (given
+/// the block grid coordinates and the candidate set, return the index of
+/// the pattern to use).
+pub fn intrablock_apply<F>(
+    mask: &mut BitMatrix,
+    bp: &BoundPattern,
+    patterns: &[BitMatrix],
+    mut choose: F,
+) where
+    F: FnMut(usize, usize, &[BitMatrix]) -> usize,
+{
+    assert!(!patterns.is_empty(), "empty IntraBlock pattern set");
+    for p in patterns {
+        assert_eq!(
+            (p.rows(), p.cols()),
+            (bp.m, bp.n),
+            "pattern shape mismatch with block size"
+        );
+    }
+    let rows = mask.rows();
+    let cols = mask.cols();
+    let (gr, gc) = bp.grid(rows, cols);
+    for bi in 0..gr {
+        for bj in 0..gc {
+            let r0 = bi * bp.m;
+            let c0 = bj * bp.n;
+            let h = bp.m.min(rows - r0);
+            let w = bp.n.min(cols - c0);
+            if mask.block_is_zero(r0, c0, h, w) {
+                continue; // pruned by a coarser pattern
+            }
+            let pi = choose(bi, bj, patterns);
+            let pat = &patterns[pi];
+            for r in 0..h {
+                for c in 0..w {
+                    if !pat.get(r, c) {
+                        mask.set(r0 + r, c0 + c, false);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The effective IntraBlock pattern set: explicit if provided, else the
+/// default full enumeration for (m, n, φ).
+pub fn pattern_set_for(fb: &FlexBlock, bp: &BoundPattern) -> Vec<BitMatrix> {
+    if let Some(p) = fb.intra_pattern() {
+        if let Some(set) = &p.pattern_set {
+            return set.clone();
+        }
+    }
+    default_pattern_set(bp.m, bp.n, bp.phi)
+}
+
+/// Generate a randomized mask realizing `fb` on a `rows`×`cols` matrix
+/// (Sec. IV-C: auto-generated randomized sparsity for user-defined
+/// workloads). Coarse FullBlock applies first, IntraBlock within the
+/// survivors.
+pub fn random_mask(
+    fb: &FlexBlock,
+    rows: usize,
+    cols: usize,
+    ctx: LayerCtx,
+    rng: &mut Pcg32,
+) -> BitMatrix {
+    if fb.is_dense() {
+        return BitMatrix::ones(rows, cols);
+    }
+    let (intra, full) = bind(fb, rows, cols, ctx);
+    let mut mask = match &full {
+        Some(bp) => {
+            let keep = fullblock_random_selection(rows, cols, bp, rng);
+            fullblock_mask_from_selection(rows, cols, bp, &keep)
+        }
+        None => BitMatrix::ones(rows, cols),
+    };
+    if let Some(bp) = &intra {
+        let has_custom_set = fb
+            .intra_pattern()
+            .map(|p| p.pattern_set.is_some())
+            .unwrap_or(false);
+        if bp.n == 1 && !has_custom_set {
+            intrablock_random_m1(&mut mask, bp, rng);
+        } else {
+            let patterns = pattern_set_for(fb, bp);
+            intrablock_apply(&mut mask, bp, &patterns, |_, _, set| rng.index(set.len()));
+        }
+    }
+    mask
+}
+
+/// Measured sparsity statistics of a mask against its description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaskStats {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    pub sparsity: f64,
+}
+
+pub fn mask_stats(mask: &BitMatrix) -> MaskStats {
+    let nnz = mask.count_ones();
+    MaskStats {
+        rows: mask.rows(),
+        cols: mask.cols(),
+        nnz,
+        sparsity: 1.0 - mask.density(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure};
+
+    fn ctx() -> LayerCtx {
+        LayerCtx { per_channel: 9 }
+    }
+
+    #[test]
+    fn dense_mask_is_all_ones() {
+        let mut rng = Pcg32::new(1);
+        let m = random_mask(&FlexBlock::dense(), 8, 8, ctx(), &mut rng);
+        assert_eq!(m.count_ones(), 64);
+    }
+
+    #[test]
+    fn row_wise_mask_prunes_whole_rows() {
+        let mut rng = Pcg32::new(2);
+        let fb = FlexBlock::row_wise(0.75);
+        let m = random_mask(&fb, 64, 32, ctx(), &mut rng);
+        let mut surviving = 0;
+        for r in 0..64 {
+            let cnt = m.row_count(r);
+            assert!(cnt == 0 || cnt == 32, "row {r} partially pruned: {cnt}");
+            if cnt > 0 {
+                surviving += 1;
+            }
+        }
+        assert_eq!(surviving, 16); // ⌊0.25 · 64⌋
+    }
+
+    #[test]
+    fn column_wise_mask_prunes_whole_cols() {
+        let mut rng = Pcg32::new(3);
+        let fb = FlexBlock::column_wise(0.5);
+        let m = random_mask(&fb, 32, 40, ctx(), &mut rng);
+        let surviving = (0..40).filter(|&c| m.col_count(c) > 0).count();
+        assert_eq!(surviving, 20);
+        for c in 0..40 {
+            let cnt = m.col_count(c);
+            assert!(cnt == 0 || cnt == 32);
+        }
+    }
+
+    #[test]
+    fn intra_mask_keeps_phi_per_block() {
+        let mut rng = Pcg32::new(4);
+        let fb = FlexBlock::intra(2, 0.5); // 1:2
+        let m = random_mask(&fb, 64, 16, ctx(), &mut rng);
+        for b in 0..32 {
+            for c in 0..16 {
+                let cnt = m.block_count(b * 2, c, 2, 1);
+                assert_eq!(cnt, 1, "block ({b},{c}) keeps exactly 1 of 2");
+            }
+        }
+        let s = mask_stats(&m);
+        assert!((s.sparsity - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hybrid_mask_overall_ratio() {
+        let mut rng = Pcg32::new(5);
+        let fb = FlexBlock::hybrid(2, 16, 0.8);
+        let m = random_mask(&fb, 128, 64, ctx(), &mut rng);
+        let s = mask_stats(&m);
+        assert!(
+            (s.sparsity - 0.8).abs() < 0.05,
+            "sparsity {} vs target 0.8",
+            s.sparsity
+        );
+        // surviving (2,16) blocks must have exactly 1 nonzero per (2,1) column
+        for bi in 0..64 {
+            for bj in 0..4 {
+                let (r0, c0) = (bi * 2, bj * 16);
+                let cnt = m.block_count(r0, c0, 2, 16);
+                assert!(
+                    cnt == 0 || cnt == 16,
+                    "surviving block keeps 1 of 2 per column: got {cnt}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn channel_wise_uses_per_channel_rows() {
+        let mut rng = Pcg32::new(6);
+        let fb = FlexBlock::channel_wise(0.5);
+        // 4 channels × 9 rows each
+        let m = random_mask(&fb, 36, 8, ctx(), &mut rng);
+        for ch in 0..4 {
+            let cnt = m.block_count(ch * 9, 0, 9, 8);
+            assert!(cnt == 0 || cnt == 72, "channel {ch} all-or-nothing: {cnt}");
+        }
+        assert_eq!(m.count_ones(), 2 * 72);
+    }
+
+    #[test]
+    fn prop_random_mask_sparsity_tracks_description() {
+        check("mask_sparsity", 60, 42, |g| {
+            let rows = g.usize_in(2, 40) * 4;
+            let cols = g.usize_in(1, 10) * 16;
+            let ratio = g.f64_in(0.3, 0.9);
+            let fb = match g.usize_in(0, 3) {
+                0 => FlexBlock::row_wise(ratio),
+                1 => FlexBlock::row_block(16, ratio),
+                2 => FlexBlock::column_block(4, ratio),
+                _ => FlexBlock::intra(4, 0.75),
+            };
+            let mut rng = g.rng.fork(99);
+            let m = random_mask(&fb, rows, cols, LayerCtx::fc(), &mut rng);
+            let want = fb.overall_sparsity();
+            let got = mask_stats(&m).sparsity;
+            // floor effects on small grids allow some slack
+            ensure(
+                (got - want).abs() < 0.15,
+                format!("{}: sparsity {got} vs {want} ({rows}x{cols})", fb.name),
+            )
+        });
+    }
+
+    #[test]
+    fn mask_deterministic_per_seed() {
+        let fb = FlexBlock::hybrid(2, 16, 0.8);
+        let a = random_mask(&fb, 64, 32, ctx(), &mut Pcg32::new(7));
+        let b = random_mask(&fb, 64, 32, ctx(), &mut Pcg32::new(7));
+        assert_eq!(a, b);
+        let c = random_mask(&fb, 64, 32, ctx(), &mut Pcg32::new(8));
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,15 @@
+//! The FlexBlock sparsity layer (Sec. III): pattern primitives, the
+//! FlexBlock composition with its structural constraints, mask
+//! generation, compression semantics and index-overhead accounting.
+
+pub mod compress;
+pub mod flexblock;
+pub mod index;
+pub mod mask;
+pub mod pattern;
+
+pub use compress::{compress, CompressedLayout};
+pub use flexblock::FlexBlock;
+pub use index::{index_storage, IndexStorage};
+pub use mask::{mask_stats, random_mask, LayerCtx, MaskStats};
+pub use pattern::{BlockPattern, BoundPattern, Dim, PatternKind};

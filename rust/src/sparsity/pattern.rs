@@ -1,0 +1,225 @@
+//! Block-based sparsity patterns: the two primitive pattern types of the
+//! FlexBlock abstraction (Def. III.2 FullBlock, Def. III.3 IntraBlock).
+
+use crate::util::bits::BitMatrix;
+
+/// A block dimension, possibly symbolic. Symbolic dims are resolved
+//  against a concrete weight matrix (and layer context) at bind time,
+/// letting one description like "Row-wise = FullBlock(1, N)" apply to
+/// every layer (Table II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dim {
+    /// Fixed element count.
+    Fixed(usize),
+    /// The full extent of the matrix along this axis (M or N).
+    Full,
+    /// Rows of one input channel in the reshaped matrix (kh·kw under
+    /// channel-major flattening) — used by channel-wise pruning.
+    PerChannel,
+}
+
+impl Dim {
+    /// Resolve to a concrete size; `extent` is the matrix dim this block
+    /// dim lies along, `per_channel` the channel row-group size (kh·kw).
+    pub fn resolve(&self, extent: usize, per_channel: usize) -> usize {
+        match *self {
+            Dim::Fixed(k) => k,
+            Dim::Full => extent,
+            Dim::PerChannel => per_channel.max(1),
+        }
+    }
+}
+
+/// Pattern type discriminator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PatternKind {
+    FullBlock,
+    IntraBlock,
+}
+
+/// One block-based sparsity pattern (an element of the FlexBlock set 𝓑).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockPattern {
+    pub kind: PatternKind,
+    /// Block height (rows), possibly symbolic.
+    pub m: Dim,
+    /// Block width (cols), possibly symbolic.
+    pub n: Dim,
+    /// Sparsity ratio r ∈ (0, 1): fraction of blocks (FullBlock) or of
+    /// elements within each block (IntraBlock) that are zero.
+    pub ratio: f64,
+    /// IntraBlock only: explicit pattern set 𝒫 of binary masks. `None`
+    /// defaults to *all* arrangements of φ non-zeros in an m×n block
+    /// (Sec. IV-C: "when the pattern set is not specified, it defaults to
+    /// all available patterns").
+    pub pattern_set: Option<Vec<BitMatrix>>,
+}
+
+impl BlockPattern {
+    pub fn full(m: Dim, n: Dim, ratio: f64) -> Self {
+        Self {
+            kind: PatternKind::FullBlock,
+            m,
+            n,
+            ratio,
+            pattern_set: None,
+        }
+    }
+
+    pub fn intra(m: usize, ratio: f64) -> Self {
+        Self {
+            kind: PatternKind::IntraBlock,
+            m: Dim::Fixed(m),
+            // Practical constraint (Sec. III-D): IntraBlock blocks are
+            // column-wise one-dimensional.
+            n: Dim::Fixed(1),
+            ratio,
+            pattern_set: None,
+        }
+    }
+
+    /// Bind symbolic dims against a concrete matrix.
+    pub fn bind(&self, rows: usize, cols: usize, per_channel: usize) -> BoundPattern {
+        let m = self.m.resolve(rows, per_channel).min(rows.max(1));
+        let n = self.n.resolve(cols, per_channel).min(cols.max(1));
+        BoundPattern {
+            kind: self.kind,
+            m,
+            n,
+            ratio: self.ratio,
+            phi: match self.kind {
+                PatternKind::IntraBlock => {
+                    (((1.0 - self.ratio) * (m * n) as f64).floor() as usize).max(1)
+                }
+                PatternKind::FullBlock => 0,
+            },
+        }
+    }
+
+    /// Short label like `Full(1,16)@0.80` for reports.
+    pub fn label(&self) -> String {
+        let d = |d: &Dim| match d {
+            Dim::Fixed(k) => k.to_string(),
+            Dim::Full => "*".to_string(),
+            Dim::PerChannel => "Cin".to_string(),
+        };
+        let k = match self.kind {
+            PatternKind::FullBlock => "Full",
+            PatternKind::IntraBlock => "Intra",
+        };
+        format!("{k}({},{})@{:.2}", d(&self.m), d(&self.n), self.ratio)
+    }
+}
+
+/// A pattern bound to concrete dims.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoundPattern {
+    pub kind: PatternKind,
+    pub m: usize,
+    pub n: usize,
+    pub ratio: f64,
+    /// IntraBlock non-zeros per block: φ = ⌊(1−r)·m·n⌋ (≥ 1).
+    pub phi: usize,
+}
+
+impl BoundPattern {
+    /// Number of blocks along rows/cols (ceil: edge blocks are partial).
+    pub fn grid(&self, rows: usize, cols: usize) -> (usize, usize) {
+        (rows.div_ceil(self.m), cols.div_ceil(self.n))
+    }
+
+    /// FullBlock: number of non-zero blocks Φ = ⌊(1−r)·(M/m)·(N/n)⌋
+    /// (Def. III.2), computed over the ceil grid.
+    pub fn nonzero_blocks(&self, rows: usize, cols: usize) -> usize {
+        let (gr, gc) = self.grid(rows, cols);
+        (((1.0 - self.ratio) * (gr * gc) as f64).floor() as usize).clamp(1, gr * gc)
+    }
+}
+
+/// Enumerate the default IntraBlock pattern set: all C(m·n, φ) placements
+/// of φ non-zeros in an m×n block. Sizes used in practice are tiny
+/// (1:2 → C(2,1)=2, 1:4 → C(4,1)=4, 2:4 → C(4,2)=6).
+pub fn default_pattern_set(m: usize, n: usize, phi: usize) -> Vec<BitMatrix> {
+    let total = m * n;
+    assert!(phi <= total, "phi {phi} > block size {total}");
+    assert!(
+        total <= 16,
+        "default pattern set for block of {total} elements would be huge; supply an explicit set"
+    );
+    let mut out = Vec::new();
+    // iterate bitmasks of `total` bits with exactly `phi` ones
+    for bits in 0u32..(1u32 << total) {
+        if bits.count_ones() as usize != phi {
+            continue;
+        }
+        let mut mask = BitMatrix::zeros(m, n);
+        for i in 0..total {
+            if (bits >> i) & 1 == 1 {
+                mask.set(i / n, i % n, true);
+            }
+        }
+        out.push(mask);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dim_resolution() {
+        assert_eq!(Dim::Fixed(16).resolve(100, 9), 16);
+        assert_eq!(Dim::Full.resolve(100, 9), 100);
+        assert_eq!(Dim::PerChannel.resolve(100, 9), 9);
+    }
+
+    #[test]
+    fn bind_clamps_to_matrix() {
+        let p = BlockPattern::full(Dim::Fixed(64), Dim::Fixed(16), 0.5);
+        let b = p.bind(32, 8, 1);
+        assert_eq!((b.m, b.n), (32, 8));
+    }
+
+    #[test]
+    fn intra_phi() {
+        let p = BlockPattern::intra(2, 0.5); // 1:2
+        let b = p.bind(100, 50, 1);
+        assert_eq!(b.phi, 1);
+        let p4 = BlockPattern::intra(4, 0.75); // 1:4
+        assert_eq!(p4.bind(100, 50, 1).phi, 1);
+        let p24 = BlockPattern::intra(4, 0.5); // 2:4
+        assert_eq!(p24.bind(100, 50, 1).phi, 2);
+    }
+
+    #[test]
+    fn fullblock_phi_formula() {
+        // 8x8 matrix, 2x2 blocks, r=0.75 → 16 blocks, 4 survive
+        let p = BlockPattern::full(Dim::Fixed(2), Dim::Fixed(2), 0.75);
+        let b = p.bind(8, 8, 1);
+        assert_eq!(b.nonzero_blocks(8, 8), 4);
+        // ceil grid with non-dividing dims
+        let b2 = p.bind(9, 9, 1);
+        assert_eq!(b2.grid(9, 9), (5, 5));
+    }
+
+    #[test]
+    fn default_set_sizes() {
+        assert_eq!(default_pattern_set(2, 1, 1).len(), 2);
+        assert_eq!(default_pattern_set(4, 1, 1).len(), 4);
+        assert_eq!(default_pattern_set(4, 1, 2).len(), 6);
+        for p in default_pattern_set(4, 1, 2) {
+            assert_eq!(p.count_ones(), 2);
+            assert_eq!((p.rows(), p.cols()), (4, 1));
+        }
+    }
+
+    #[test]
+    fn labels_readable() {
+        assert_eq!(
+            BlockPattern::full(Dim::Fixed(1), Dim::Full, 0.8).label(),
+            "Full(1,*)@0.80"
+        );
+        assert_eq!(BlockPattern::intra(2, 0.5).label(), "Intra(2,1)@0.50");
+    }
+}

@@ -1,0 +1,154 @@
+//! Tiny benchmark harness (no criterion in the offline registry).
+//!
+//! Provides warm-up + repeated timed runs with mean / stddev / min
+//! statistics and criterion-style output lines, used by every
+//! `rust/benches/bench_*.rs` target (declared with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn report_line(&self) -> String {
+        format!(
+            "bench {:<48} iters={:<4} mean={:>12?} min={:>12?} max={:>12?} stddev={:>10?}",
+            self.name, self.iters, self.mean, self.min, self.max, self.stddev
+        )
+    }
+}
+
+/// Benchmark runner with a time budget: runs at least `min_iters`, at most
+/// `max_iters`, stopping early once `budget` has elapsed.
+pub struct Bencher {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 30,
+            budget: Duration::from_secs(5),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup: 1,
+            min_iters: 2,
+            max_iters: 10,
+            budget: Duration::from_secs(2),
+        }
+    }
+
+    /// Time `f`, which must return some value to defeat dead-code
+    /// elimination; the values are black-boxed.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters && start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        stats_from(name, &samples)
+    }
+}
+
+fn stats_from(name: &str, samples: &[Duration]) -> BenchStats {
+    let n = samples.len() as f64;
+    let mean_s = samples.iter().map(|d| d.as_secs_f64()).sum::<f64>() / n;
+    let var = samples
+        .iter()
+        .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+        .sum::<f64>()
+        / n;
+    BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: Duration::from_secs_f64(mean_s),
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: *samples.iter().min().unwrap(),
+        max: *samples.iter().max().unwrap(),
+    }
+}
+
+/// Opaque value sink (std::hint::black_box wrapper kept behind our own
+/// name so benches don't import std::hint everywhere).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Standard header printed by every bench binary.
+pub fn bench_header(what: &str) {
+    println!("=== CIMinus bench: {what} ===");
+    println!(
+        "host: {} cores, release={}",
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        !cfg!(debug_assertions)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_at_least_min_iters() {
+        let b = Bencher {
+            warmup: 0,
+            min_iters: 4,
+            max_iters: 8,
+            budget: Duration::from_millis(1),
+        };
+        let mut count = 0usize;
+        let stats = b.run("t", || {
+            count += 1;
+            count
+        });
+        assert!(stats.iters >= 4);
+        assert!(count >= 4);
+        assert!(stats.min <= stats.mean && stats.mean <= stats.max + Duration::from_nanos(1));
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let b = Bencher {
+            warmup: 0,
+            min_iters: 1,
+            max_iters: 3,
+            budget: Duration::from_secs(60),
+        };
+        let stats = b.run("t", || 1 + 1);
+        assert!(stats.iters <= 3);
+    }
+
+    #[test]
+    fn report_line_contains_name() {
+        let b = Bencher::quick();
+        let s = b.run("my_bench", || 42);
+        assert!(s.report_line().contains("my_bench"));
+    }
+}

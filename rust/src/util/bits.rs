@@ -1,0 +1,397 @@
+//! Compact bit containers used by sparsity masks and the bit-serial
+//! input-sparsity model. A dense 2-D `u64`-backed bitmap is the storage
+//! for FlexBlock masks: ResNet50's largest reshaped weight matrix is
+//! 4608×512 ≈ 2.4 M bits ≈ 295 KB, so whole-model mask sets stay small.
+
+/// Fixed-size bit vector backed by `u64` words.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitVec {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl BitVec {
+    pub fn zeros(len: usize) -> Self {
+        Self {
+            len,
+            words: vec![0; len.div_ceil(64)],
+        }
+    }
+
+    pub fn ones(len: usize) -> Self {
+        let mut v = Self {
+            len,
+            words: vec![u64::MAX; len.div_ceil(64)],
+        };
+        v.clear_tail();
+        v
+    }
+
+    fn clear_tail(&mut self) {
+        let tail = self.len % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i >> 6];
+        if v {
+            *w |= 1u64 << (i & 63);
+        } else {
+            *w &= !(1u64 << (i & 63));
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// In-place OR with another vector of the same length.
+    pub fn or_assign(&mut self, other: &BitVec) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// In-place AND.
+    pub fn and_assign(&mut self, other: &BitVec) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// Set every bit in `[lo, hi)` to `v` (word-level).
+    pub fn set_range(&mut self, lo: usize, hi: usize, v: bool) {
+        debug_assert!(lo <= hi && hi <= self.len);
+        if lo >= hi {
+            return;
+        }
+        let (wl, bl) = (lo >> 6, lo & 63);
+        let (wh, bh) = (hi >> 6, hi & 63);
+        let head_mask = u64::MAX << bl;
+        let tail_mask = if bh == 0 { 0 } else { u64::MAX >> (64 - bh) };
+        if wl == wh {
+            let m = head_mask & tail_mask;
+            if v {
+                self.words[wl] |= m;
+            } else {
+                self.words[wl] &= !m;
+            }
+            return;
+        }
+        if v {
+            self.words[wl] |= head_mask;
+            for w in &mut self.words[wl + 1..wh] {
+                *w = u64::MAX;
+            }
+            if bh != 0 {
+                self.words[wh] |= tail_mask;
+            }
+        } else {
+            self.words[wl] &= !head_mask;
+            for w in &mut self.words[wl + 1..wh] {
+                *w = 0;
+            }
+            if bh != 0 {
+                self.words[wh] &= !tail_mask;
+            }
+        }
+    }
+
+    /// Count set bits in `[lo, hi)` (word-level).
+    pub fn count_range(&self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi && hi <= self.len);
+        if lo >= hi {
+            return 0;
+        }
+        let (wl, bl) = (lo >> 6, lo & 63);
+        let (wh, bh) = (hi >> 6, hi & 63);
+        let head_mask = u64::MAX << bl;
+        let tail_mask = if bh == 0 { 0 } else { u64::MAX >> (64 - bh) };
+        if wl == wh {
+            return (self.words[wl] & head_mask & tail_mask).count_ones() as usize;
+        }
+        let mut n = (self.words[wl] & head_mask).count_ones() as usize;
+        for w in &self.words[wl + 1..wh] {
+            n += w.count_ones() as usize;
+        }
+        if bh != 0 {
+            n += (self.words[wh] & tail_mask).count_ones() as usize;
+        }
+        n
+    }
+
+    /// Any set bit in `[lo, hi)`?
+    pub fn any_range(&self, lo: usize, hi: usize) -> bool {
+        debug_assert!(lo <= hi && hi <= self.len);
+        if lo >= hi {
+            return false;
+        }
+        let (wl, bl) = (lo >> 6, lo & 63);
+        let (wh, bh) = (hi >> 6, hi & 63);
+        let head_mask = u64::MAX << bl;
+        let tail_mask = if bh == 0 { 0 } else { u64::MAX >> (64 - bh) };
+        if wl == wh {
+            return self.words[wl] & head_mask & tail_mask != 0;
+        }
+        if self.words[wl] & head_mask != 0 {
+            return true;
+        }
+        if self.words[wl + 1..wh].iter().any(|&w| w != 0) {
+            return true;
+        }
+        bh != 0 && self.words[wh] & tail_mask != 0
+    }
+
+    /// Iterate over set-bit indices.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+/// Row-major 2-D bit matrix. `true` = element present (non-zero).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitMatrix {
+    rows: usize,
+    cols: usize,
+    bits: BitVec,
+}
+
+impl BitMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            bits: BitVec::zeros(rows * cols),
+        }
+    }
+
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            bits: BitVec::ones(rows * cols),
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols, "({r},{c}) out of {}x{}", self.rows, self.cols);
+        self.bits.get(r * self.cols + c)
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.bits.set(r * self.cols + c, v);
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.bits.count_ones()
+    }
+
+    /// Density of set bits in [0, 1]; 0 for an empty matrix.
+    pub fn density(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            0.0
+        } else {
+            self.count_ones() as f64 / (self.rows * self.cols) as f64
+        }
+    }
+
+    /// Count of set bits in row `r`.
+    pub fn row_count(&self, r: usize) -> usize {
+        self.bits.count_range(r * self.cols, (r + 1) * self.cols)
+    }
+
+    /// Count of set bits in column `c`.
+    pub fn col_count(&self, c: usize) -> usize {
+        (0..self.rows).filter(|&r| self.get(r, c)).count()
+    }
+
+    /// Set row `r`'s columns `[c0, c1)` to `v` (word-level fast path).
+    pub fn set_row_range(&mut self, r: usize, c0: usize, c1: usize, v: bool) {
+        debug_assert!(r < self.rows && c1 <= self.cols);
+        self.bits.set_range(r * self.cols + c0, r * self.cols + c1, v);
+    }
+
+    /// True if every bit in the rectangle [r0, r0+h) × [c0, c0+w) is zero.
+    pub fn block_is_zero(&self, r0: usize, c0: usize, h: usize, w: usize) -> bool {
+        for r in r0..r0 + h {
+            if self.bits.any_range(r * self.cols + c0, r * self.cols + c0 + w) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Count of set bits in the rectangle.
+    pub fn block_count(&self, r0: usize, c0: usize, h: usize, w: usize) -> usize {
+        let mut n = 0;
+        for r in r0..r0 + h {
+            n += self
+                .bits
+                .count_range(r * self.cols + c0, r * self.cols + c0 + w);
+        }
+        n
+    }
+
+    /// Element-wise AND, panics on shape mismatch.
+    pub fn and(&self, other: &BitMatrix) -> BitMatrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        out.bits.and_assign(&other.bits);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitvec_set_get_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        for i in [0usize, 1, 63, 64, 65, 127, 128, 129] {
+            assert!(!v.get(i));
+            v.set(i, true);
+            assert!(v.get(i));
+        }
+        assert_eq!(v.count_ones(), 8);
+        v.set(64, false);
+        assert_eq!(v.count_ones(), 7);
+    }
+
+    #[test]
+    fn ones_respects_tail() {
+        let v = BitVec::ones(67);
+        assert_eq!(v.count_ones(), 67);
+        let v = BitVec::ones(64);
+        assert_eq!(v.count_ones(), 64);
+        let v = BitVec::ones(0);
+        assert_eq!(v.count_ones(), 0);
+    }
+
+    #[test]
+    fn iter_ones_matches_get() {
+        let mut v = BitVec::zeros(200);
+        let idx = [3usize, 64, 65, 120, 199];
+        for &i in &idx {
+            v.set(i, true);
+        }
+        let got: Vec<usize> = v.iter_ones().collect();
+        assert_eq!(got, idx);
+    }
+
+    #[test]
+    fn or_and_assign() {
+        let mut a = BitVec::zeros(100);
+        let mut b = BitVec::zeros(100);
+        a.set(5, true);
+        b.set(6, true);
+        a.or_assign(&b);
+        assert!(a.get(5) && a.get(6));
+        let mut c = BitVec::ones(100);
+        c.and_assign(&a);
+        assert_eq!(c.count_ones(), 2);
+    }
+
+    #[test]
+    fn bitmatrix_block_ops() {
+        let mut m = BitMatrix::zeros(8, 8);
+        m.set(2, 3, true);
+        m.set(3, 3, true);
+        assert!(!m.block_is_zero(2, 2, 2, 2));
+        assert!(m.block_is_zero(0, 0, 2, 8));
+        assert_eq!(m.block_count(2, 3, 2, 1), 2);
+        assert_eq!(m.row_count(2), 1);
+        assert_eq!(m.col_count(3), 2);
+        assert!((m.density() - 2.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn range_ops_match_scalar() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(42);
+        for _ in 0..200 {
+            let len = 1 + rng.index(300);
+            let mut v = BitVec::zeros(len);
+            for _ in 0..len / 3 {
+                v.set(rng.index(len), true);
+            }
+            let lo = rng.index(len);
+            let hi = lo + rng.index(len - lo + 1);
+            let want_count = (lo..hi).filter(|&i| v.get(i)).count();
+            assert_eq!(v.count_range(lo, hi), want_count, "count [{lo},{hi}) len {len}");
+            assert_eq!(v.any_range(lo, hi), want_count > 0);
+            let mut a = v.clone();
+            a.set_range(lo, hi, true);
+            for i in 0..len {
+                let want = if (lo..hi).contains(&i) { true } else { v.get(i) };
+                assert_eq!(a.get(i), want, "set_range true at {i}");
+            }
+            let mut b = v.clone();
+            b.set_range(lo, hi, false);
+            for i in 0..len {
+                let want = if (lo..hi).contains(&i) { false } else { v.get(i) };
+                assert_eq!(b.get(i), want, "set_range false at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitmatrix_and() {
+        let mut a = BitMatrix::ones(4, 4);
+        let mut b = BitMatrix::zeros(4, 4);
+        b.set(1, 1, true);
+        a.set(1, 1, true);
+        let c = a.and(&b);
+        assert_eq!(c.count_ones(), 1);
+        assert!(c.get(1, 1));
+    }
+}

@@ -1,0 +1,12 @@
+//! Self-contained utility layer: JSON, PRNG, bit containers, tables,
+//! bench harness and a property-testing mini-framework. These exist
+//! in-tree because the build environment resolves crates offline and only
+//! the `xla` dependency closure is available (see DESIGN.md §3).
+
+pub mod bench;
+pub mod bits;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,157 @@
+//! Minimal property-based testing harness (no `proptest` crate offline).
+//!
+//! A property is a closure over a [`Gen`] (seeded PCG wrapper with
+//! convenience samplers). [`check`] runs it for `cases` random cases and,
+//! on failure, re-runs with the failing seed reported so the case can be
+//! reproduced by `check_seed`. Coordinator invariants (routing, batching,
+//! mask algebra, mapping legality) are property-tested with this.
+
+use super::rng::Pcg32;
+
+/// Random-input generator handed to properties.
+pub struct Gen {
+    pub rng: Pcg32,
+    pub case: usize,
+}
+
+impl Gen {
+    /// usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.index(xs.len())]
+    }
+
+    /// Biased coin.
+    pub fn bool_with(&mut self, p_true: f64) -> bool {
+        self.rng.next_f64() < p_true
+    }
+
+    /// A divisor of `n` chosen uniformly among all divisors.
+    pub fn divisor_of(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        let divs: Vec<usize> = (1..=n).filter(|d| n % d == 0).collect();
+        *self.choose(&divs)
+    }
+
+    /// Vector of f32 weights with controllable magnitude spread.
+    pub fn weights(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (self.rng.next_f32() - 0.5) * 4.0).collect()
+    }
+}
+
+/// Outcome of a property: Ok(()) or an explanation of the violation.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` for `cases` random cases derived from `seed`.
+///
+/// Panics (test failure) with the case index and per-case seed on the
+/// first violation.
+pub fn check<F: FnMut(&mut Gen) -> PropResult>(name: &str, cases: usize, seed: u64, mut prop: F) {
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut g = Gen {
+            rng: Pcg32::new(case_seed),
+            case,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property `{name}` violated at case {case}/{cases} \
+                 (reproduce with check_seed(\"{name}\", {case_seed}u64, ..)): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn check_seed<F: FnMut(&mut Gen) -> PropResult>(name: &str, case_seed: u64, mut prop: F) {
+    let mut g = Gen {
+        rng: Pcg32::new(case_seed),
+        case: 0,
+    };
+    if let Err(msg) = prop(&mut g) {
+        panic!("property `{name}` violated for seed {case_seed}: {msg}");
+    }
+}
+
+/// Assertion helpers returning PropResult.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, ctx: &str) -> PropResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: |{a} - {b}| > tol {tol}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add_commutes", 200, 1, |g| {
+            let a = g.usize_in(0, 1000);
+            let b = g.usize_in(0, 1000);
+            ensure_eq(a + b, b + a, "commutativity")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` violated")]
+    fn failing_property_panics_with_seed() {
+        check("always_fails", 10, 2, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn divisor_of_divides() {
+        check("divisor", 100, 3, |g| {
+            let n = g.usize_in(1, 500);
+            let d = g.divisor_of(n);
+            ensure(n % d == 0, format!("{d} does not divide {n}"))
+        });
+    }
+
+    #[test]
+    fn ensure_close_tolerance() {
+        assert!(ensure_close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-9, "x").is_err());
+    }
+
+    #[test]
+    fn gen_ranges() {
+        check("ranges", 300, 4, |g| {
+            let v = g.usize_in(3, 7);
+            ensure(v >= 3 && v <= 7, format!("{v} out of [3,7]"))?;
+            let f = g.f64_in(-1.0, 1.0);
+            ensure((-1.0..1.0).contains(&f), format!("{f} out of [-1,1)"))
+        });
+    }
+}

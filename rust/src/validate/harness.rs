@@ -1,0 +1,233 @@
+//! Validation harness (Sec. VI-A, Fig. 6): runs CIMinus on the MARS and
+//! SDP configurations of Table I and compares estimated speedups, energy
+//! savings and power breakdowns against the published numbers.
+
+use super::reported::{all_results, Design, ReportedResult, SDP_POWER_BREAKDOWN};
+use crate::hw::arch::{Architecture, SparsitySupport};
+use crate::hw::presets;
+use crate::hw::units::UnitKind;
+use crate::mapping::planner::{plan, MappingOptions};
+use crate::pruning::workflow::PruningWorkflow;
+use crate::sim::engine::{simulate, SimOptions};
+use crate::sim::input_sparsity::InputProfiles;
+use crate::sim::report::SimReport;
+use crate::sparsity::flexblock::FlexBlock;
+use crate::workload::{graph::Network, zoo};
+
+/// One Fig. 6(a) point: a reported-vs-estimated pair.
+#[derive(Debug, Clone)]
+pub struct ValidationPoint {
+    pub design: &'static str,
+    pub workload: String,
+    pub metric: &'static str,
+    pub reported: f64,
+    pub estimated: f64,
+}
+
+impl ValidationPoint {
+    pub fn err_pct(&self) -> f64 {
+        (self.estimated - self.reported).abs() / self.reported * 100.0
+    }
+}
+
+fn scenario_net(r: &ReportedResult) -> anyhow::Result<Network> {
+    Ok(match (r.design, r.workload) {
+        // MARS evaluates CIFAR models, SDP ImageNet models (Sec. VI-A)
+        (Design::Mars, w) => zoo::by_name(w, 32, 100)?,
+        (Design::Sdp, w) => zoo::by_name(w, 224, 1000)?,
+    })
+}
+
+fn scenario_fb(r: &ReportedResult) -> FlexBlock {
+    match r.design {
+        // MARS: group-wise FullBlock(1,16) on conv layers
+        Design::Mars => FlexBlock::row_block(16, r.sparsity),
+        // SDP: Intra(2,1) + Full(2,8) hierarchical pruning
+        Design::Sdp => FlexBlock::hybrid(2, 8, r.sparsity),
+    }
+}
+
+fn scenario_arch(r: &ReportedResult) -> Architecture {
+    match r.design {
+        Design::Mars => presets::mars(),
+        Design::Sdp => presets::sdp(),
+    }
+}
+
+fn scenario_wf(r: &ReportedResult) -> PruningWorkflow {
+    PruningWorkflow {
+        // MARS evaluates Conv layers only (Table I)
+        skip_fc: r.design == Design::Mars,
+        ..Default::default()
+    }
+}
+
+/// Conv-only cycle/energy scoping (Table I: MARS evaluates "Only Conv
+/// layers"): sum the per-op attributed cycles of conv ops.
+fn conv_cycles(rep: &SimReport) -> u64 {
+    rep.ops
+        .iter()
+        .filter(|o| o.kind == "conv" || o.kind == "dwconv")
+        .map(|o| o.cycles)
+        .sum::<u64>()
+        .max(1)
+}
+
+/// Speedup / energy-saving under a design's evaluation scope.
+pub fn scoped_metrics(r: &ReportedResult, dense: &SimReport, sparse: &SimReport) -> (f64, f64) {
+    match r.design {
+        Design::Mars => {
+            // conv-only latency scope; energy scaled by the same scope
+            // ratio (buffer/static energy follows the conv share)
+            let speedup = conv_cycles(dense) as f64 / conv_cycles(sparse) as f64;
+            let dense_conv_share = conv_cycles(dense) as f64 / dense.total_cycles as f64;
+            let sparse_conv_share = conv_cycles(sparse) as f64 / sparse.total_cycles as f64;
+            let saving = (dense.energy.total_pj * dense_conv_share)
+                / (sparse.energy.total_pj * sparse_conv_share).max(1e-12);
+            (speedup, saving)
+        }
+        Design::Sdp => (
+            sparse.speedup_vs(dense),
+            sparse.energy_saving_vs(dense),
+        ),
+    }
+}
+
+/// Simulate one validation scenario: returns (dense, sparse) reports on
+/// the same architecture geometry (dense baseline runs without
+/// weight-sparsity hardware, as both papers' baselines do).
+pub fn run_scenario(r: &ReportedResult) -> anyhow::Result<(SimReport, SimReport)> {
+    let net = scenario_net(r)?;
+    let arch = scenario_arch(r);
+    let fb = scenario_fb(r);
+    let wf = scenario_wf(r);
+    let profiles = InputProfiles::synthetic(&net, arch.input_bits, 0.55, 0x6006);
+
+    // The dense baselines keep each design's input-sparsity (zero-bit
+    // skip) logic — both papers' dense baselines are their own
+    // architectures running uncompressed weights — but no weight-sparsity
+    // hardware.
+    let mut dense_arch = arch.clone();
+    dense_arch.sparsity = SparsitySupport {
+        weight_indexing: false,
+        weight_routing: false,
+        input_skipping: arch.sparsity.input_skipping,
+    };
+    let dense_map = plan(&dense_arch, &net, None, MappingOptions::default())?;
+    let dense = simulate(
+        &dense_arch,
+        &net,
+        &dense_map,
+        Some(&profiles),
+        SimOptions::default(),
+    )?;
+
+    let prune = wf.run_uniform(&net, &fb, None)?;
+    let sparse_map = plan(&arch, &net, Some(&prune), MappingOptions::default())?;
+    let sparse = simulate(&arch, &net, &sparse_map, Some(&profiles), SimOptions::default())?;
+    Ok((dense, sparse))
+}
+
+/// Run all Fig. 6(a)/(b) validation points.
+pub fn run_validation() -> anyhow::Result<Vec<ValidationPoint>> {
+    let mut out = Vec::new();
+    for r in all_results() {
+        let (dense, sparse) = run_scenario(&r)?;
+        let (speedup, saving) = scoped_metrics(&r, &dense, &sparse);
+        let design = match r.design {
+            Design::Mars => "MARS",
+            Design::Sdp => "SDP",
+        };
+        out.push(ValidationPoint {
+            design,
+            workload: r.workload.to_string(),
+            metric: "speedup",
+            reported: r.speedup,
+            estimated: speedup,
+        });
+        out.push(ValidationPoint {
+            design,
+            workload: r.workload.to_string(),
+            metric: "energy_saving",
+            reported: r.energy_saving,
+            estimated: saving,
+        });
+    }
+    Ok(out)
+}
+
+/// Fig. 6(c): estimated SDP power breakdown vs published, as matched
+/// category fractions.
+pub fn sdp_power_breakdown() -> anyhow::Result<Vec<(&'static str, f64, f64)>> {
+    let r = &super::reported::SDP_RESULTS[0];
+    let (_dense, sparse) = run_scenario(r)?;
+    let e = &sparse.energy;
+    let cat = |kinds: &[UnitKind]| -> f64 { kinds.iter().map(|&k| e.of(k)).sum() };
+    let macros = cat(&[
+        UnitKind::CimArray,
+        UnitKind::AdderTree,
+        UnitKind::ShiftAdd,
+        UnitKind::Accumulator,
+        UnitKind::LocalBuf,
+    ]);
+    let feature = cat(&[UnitKind::GlobalInBuf, UnitKind::GlobalOutBuf]);
+    let weight = cat(&[UnitKind::WeightBuf]);
+    let prepost = cat(&[UnitKind::PreProc, UnitKind::ZeroDetect, UnitKind::PostProc]);
+    let index = cat(&[UnitKind::IndexMem, UnitKind::Mux]);
+    let total = macros + feature + weight + prepost + index;
+    let est = [
+        ("cim_macros", macros / total),
+        ("feature_buffers", feature / total),
+        ("weight_path", weight / total),
+        ("pre_post_proc", prepost / total),
+        ("index_logic", index / total),
+    ];
+    Ok(SDP_POWER_BREAKDOWN
+        .iter()
+        .zip(est)
+        .map(|(&(name, rep), (_, e))| (name, rep, e))
+        .collect())
+}
+
+/// Mean and max error of a validation run (the Fig. 6(a) margin).
+pub fn error_stats(points: &[ValidationPoint]) -> (f64, f64) {
+    let errs: Vec<f64> = points.iter().map(|p| p.err_pct()).collect();
+    let mean = errs.iter().sum::<f64>() / errs.len().max(1) as f64;
+    let max = errs.iter().cloned().fold(0.0, f64::max);
+    (mean, max)
+}
+
+/// Pearson correlation of reported vs estimated — the Fig. 6(a)
+/// scatter's agreement statistic.
+pub fn correlation(points: &[ValidationPoint]) -> f64 {
+    let xs: Vec<f64> = points.iter().map(|p| p.reported).collect();
+    let ys: Vec<f64> = points.iter().map(|p| p.estimated).collect();
+    crate::util::stats::pearson(&xs, &ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenarios_simulate() {
+        // smallest scenario end-to-end (MARS resnet18 CIFAR)
+        let r = &super::super::reported::MARS_RESULTS[1];
+        let (dense, sparse) = run_scenario(r).unwrap();
+        assert!(sparse.total_cycles < dense.total_cycles);
+        assert!(sparse.energy.total_pj < dense.energy.total_pj);
+    }
+
+    #[test]
+    fn validation_points_have_both_sides() {
+        // full run is exercised by bench_fig6; here just the scaffolding
+        let p = ValidationPoint {
+            design: "MARS",
+            workload: "vgg16".into(),
+            metric: "speedup",
+            reported: 2.0,
+            estimated: 2.1,
+        };
+        assert!((p.err_pct() - 5.0).abs() < 1e-9);
+    }
+}

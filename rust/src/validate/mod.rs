@@ -1,0 +1,8 @@
+//! Framework validation (Sec. VI, Fig. 6): published MARS/SDP results and
+//! the comparison harness.
+
+pub mod harness;
+pub mod reported;
+
+pub use harness::{correlation, error_stats, run_validation, sdp_power_breakdown, ValidationPoint};
+pub use reported::{all_results, Design, ReportedResult};

@@ -1,0 +1,390 @@
+//! Workload DAG: construction builder, topological ordering, shape
+//! inference / functional verification (the "pre-simulation analysis"
+//! validity check of Sec. IV-B), and whole-network statistics.
+
+use super::op::{kind_label, MvmDims, Op, OpId, OpKind, Shape};
+use std::collections::BTreeMap;
+
+/// A DNN workload as a DAG of [`Op`]s in insertion order. Insertion order
+/// must be topological (builders guarantee it; `verify` checks it).
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub ops: Vec<Op>,
+}
+
+impl Network {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            ops: Vec::new(),
+        }
+    }
+
+    // ---------- builder ----------
+
+    /// Add the graph input node.
+    pub fn input(&mut self, shape: Shape) -> OpId {
+        self.push("input", OpKind::Input, vec![], Some(shape))
+    }
+
+    pub fn conv(
+        &mut self,
+        name: &str,
+        input: OpId,
+        in_ch: usize,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> OpId {
+        self.push(
+            name,
+            OpKind::Conv2d {
+                in_ch,
+                out_ch,
+                kh: k,
+                kw: k,
+                stride,
+                pad,
+                groups: 1,
+            },
+            vec![input],
+            None,
+        )
+    }
+
+    pub fn dwconv(
+        &mut self,
+        name: &str,
+        input: OpId,
+        ch: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> OpId {
+        self.push(
+            name,
+            OpKind::Conv2d {
+                in_ch: ch,
+                out_ch: ch,
+                kh: k,
+                kw: k,
+                stride,
+                pad,
+                groups: ch,
+            },
+            vec![input],
+            None,
+        )
+    }
+
+    pub fn fc(&mut self, name: &str, input: OpId, in_f: usize, out_f: usize) -> OpId {
+        self.push(
+            name,
+            OpKind::Fc {
+                in_features: in_f,
+                out_features: out_f,
+            },
+            vec![input],
+            None,
+        )
+    }
+
+    pub fn relu(&mut self, name: &str, input: OpId) -> OpId {
+        self.push(name, OpKind::Relu, vec![input], None)
+    }
+
+    pub fn bn(&mut self, name: &str, input: OpId) -> OpId {
+        self.push(name, OpKind::BatchNorm, vec![input], None)
+    }
+
+    pub fn add(&mut self, name: &str, a: OpId, b: OpId) -> OpId {
+        self.push(name, OpKind::Add, vec![a, b], None)
+    }
+
+    pub fn maxpool(&mut self, name: &str, input: OpId, k: usize, stride: usize) -> OpId {
+        self.push(
+            name,
+            OpKind::Pool {
+                kind: super::op::PoolKind::Max,
+                k,
+                stride,
+            },
+            vec![input],
+            None,
+        )
+    }
+
+    pub fn avgpool(&mut self, name: &str, input: OpId, k: usize, stride: usize) -> OpId {
+        self.push(
+            name,
+            OpKind::Pool {
+                kind: super::op::PoolKind::Avg,
+                k,
+                stride,
+            },
+            vec![input],
+            None,
+        )
+    }
+
+    pub fn gap(&mut self, name: &str, input: OpId) -> OpId {
+        self.push(name, OpKind::GlobalAvgPool, vec![input], None)
+    }
+
+    pub fn flatten(&mut self, name: &str, input: OpId) -> OpId {
+        self.push(name, OpKind::Flatten, vec![input], None)
+    }
+
+    fn push(
+        &mut self,
+        name: &str,
+        kind: OpKind,
+        inputs: Vec<OpId>,
+        shape: Option<Shape>,
+    ) -> OpId {
+        let id = self.ops.len();
+        self.ops.push(Op {
+            id,
+            name: name.to_string(),
+            kind,
+            inputs,
+            out_shape: shape.unwrap_or(Shape::Flat(0)),
+        });
+        id
+    }
+
+    // ---------- analysis ----------
+
+    /// Infer all output shapes in topological (insertion) order and verify
+    /// graph validity: edge targets exist and precede their consumers,
+    /// exactly one Input, shape compatibility throughout.
+    pub fn infer_shapes(&mut self) -> anyhow::Result<()> {
+        let n_inputs = self
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Input))
+            .count();
+        if n_inputs != 1 {
+            anyhow::bail!(
+                "network `{}` must have exactly 1 input op, found {n_inputs}",
+                self.name
+            );
+        }
+        for i in 0..self.ops.len() {
+            let op = self.ops[i].clone();
+            if op.id != i {
+                anyhow::bail!("op `{}` id {} != position {i}", op.name, op.id);
+            }
+            for &src in &op.inputs {
+                if src >= i {
+                    anyhow::bail!(
+                        "op `{}` consumes op {src} which does not precede it (not topological)",
+                        op.name
+                    );
+                }
+            }
+            let in_shapes: Vec<Shape> =
+                op.inputs.iter().map(|&s| self.ops[s].out_shape).collect();
+            let out = op.infer_shape(&in_shapes)?;
+            self.ops[i].out_shape = out;
+        }
+        Ok(())
+    }
+
+    /// Input shape of op `id` (its first producer's output shape).
+    pub fn input_shape(&self, id: OpId) -> Option<Shape> {
+        let op = &self.ops[id];
+        op.inputs.first().map(|&s| self.ops[s].out_shape)
+    }
+
+    /// MVM dims of op `id` if it is an MVM op.
+    pub fn mvm_dims(&self, id: OpId) -> Option<MvmDims> {
+        let op = &self.ops[id];
+        self.input_shape(id).and_then(|s| op.mvm_dims(s))
+    }
+
+    /// Ids of all MVM ops (the layers that land on CIM macros).
+    pub fn mvm_ops(&self) -> Vec<OpId> {
+        self.ops
+            .iter()
+            .filter(|o| o.is_mvm())
+            .map(|o| o.id)
+            .collect()
+    }
+
+    /// Consumers-of map (adjacency), for pipeline/liveness analysis.
+    pub fn consumers(&self) -> Vec<Vec<OpId>> {
+        let mut out = vec![Vec::new(); self.ops.len()];
+        for op in &self.ops {
+            for &src in &op.inputs {
+                out[src].push(op.id);
+            }
+        }
+        out
+    }
+
+    /// Aggregate statistics.
+    pub fn stats(&self) -> NetworkStats {
+        let mut s = NetworkStats::default();
+        for op in &self.ops {
+            if let Some(d) = self.mvm_dims(op.id) {
+                s.macs += d.macs();
+                s.params += d.params();
+                match op.kind {
+                    OpKind::Conv2d { groups, .. } if groups > 1 => s.n_dwconv += 1,
+                    OpKind::Conv2d { .. } => s.n_conv += 1,
+                    OpKind::Fc { .. } => s.n_fc += 1,
+                    _ => {}
+                }
+            }
+            let in_shapes: Vec<Shape> =
+                op.inputs.iter().map(|&i| self.ops[i].out_shape).collect();
+            s.postproc_ops += op.postproc_ops(&in_shapes);
+        }
+        s.n_ops = self.ops.len();
+        s
+    }
+
+    /// One-line-per-op textual summary (debugging, `ciminus zoo`).
+    pub fn describe(&self) -> String {
+        let mut out = format!("network `{}` ({} ops)\n", self.name, self.ops.len());
+        for op in &self.ops {
+            let dims = self
+                .mvm_dims(op.id)
+                .map(|d| {
+                    format!(
+                        " W[{}x{}]{} vecs={}",
+                        d.rows,
+                        d.cols,
+                        if d.groups > 1 {
+                            format!(" x{}grp", d.groups)
+                        } else {
+                            String::new()
+                        },
+                        d.n_vectors
+                    )
+                })
+                .unwrap_or_default();
+            out.push_str(&format!(
+                "  [{:>3}] {:<10} {:<24} out={:?}{}\n",
+                op.id,
+                kind_label(&op.kind),
+                op.name,
+                op.out_shape,
+                dims
+            ));
+        }
+        out
+    }
+}
+
+/// Whole-network aggregate counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NetworkStats {
+    pub n_ops: usize,
+    pub n_conv: usize,
+    pub n_dwconv: usize,
+    pub n_fc: usize,
+    /// Dense MACs per inference.
+    pub macs: u64,
+    /// Dense weight parameters.
+    pub params: u64,
+    /// Post-processing element ops per inference.
+    pub postproc_ops: u64,
+}
+
+/// Per-layer sparsity assignment: which MVM ops get which FlexBlock
+/// description. Ops absent from the map run dense.
+pub type LayerSparsity = BTreeMap<OpId, crate::sparsity::flexblock::FlexBlock>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Network {
+        let mut n = Network::new("tiny");
+        let x = n.input(Shape::Chw(3, 8, 8));
+        let c1 = n.conv("c1", x, 3, 16, 3, 1, 1);
+        let r1 = n.relu("r1", c1);
+        let c2 = n.conv("c2", r1, 16, 16, 3, 1, 1);
+        let a = n.add("res", c2, r1);
+        let g = n.gap("gap", a);
+        let _f = n.fc("fc", g, 16, 10);
+        n.infer_shapes().unwrap();
+        n
+    }
+
+    #[test]
+    fn shapes_flow() {
+        let n = tiny();
+        assert_eq!(n.ops.last().unwrap().out_shape, Shape::Flat(10));
+        assert_eq!(n.ops[1].out_shape, Shape::Chw(16, 8, 8));
+    }
+
+    #[test]
+    fn mvm_ops_listed() {
+        let n = tiny();
+        let mvm = n.mvm_ops();
+        assert_eq!(mvm.len(), 3); // c1, c2, fc
+        let d = n.mvm_dims(mvm[0]).unwrap();
+        assert_eq!(d.rows, 27);
+        assert_eq!(d.cols, 16);
+    }
+
+    #[test]
+    fn stats_counts() {
+        let n = tiny();
+        let s = n.stats();
+        assert_eq!(s.n_conv, 2);
+        assert_eq!(s.n_fc, 1);
+        assert_eq!(
+            s.params,
+            (27 * 16 + 16 * 9 * 16 + 16 * 10) as u64
+        );
+        assert!(s.macs > 0);
+    }
+
+    #[test]
+    fn rejects_non_topological() {
+        let mut n = Network::new("bad");
+        let x = n.input(Shape::Chw(3, 8, 8));
+        // manually create a forward reference
+        let id = n.conv("c", x, 3, 8, 3, 1, 1);
+        n.ops[id].inputs = vec![id + 1];
+        n.ops.push(Op {
+            id: id + 1,
+            name: "ghost".into(),
+            kind: OpKind::Relu,
+            inputs: vec![x],
+            out_shape: Shape::Flat(0),
+        });
+        assert!(n.infer_shapes().is_err());
+    }
+
+    #[test]
+    fn rejects_multiple_inputs() {
+        let mut n = Network::new("bad2");
+        n.input(Shape::Chw(3, 8, 8));
+        n.input(Shape::Chw(3, 8, 8));
+        assert!(n.infer_shapes().is_err());
+    }
+
+    #[test]
+    fn consumers_map() {
+        let n = tiny();
+        let cons = n.consumers();
+        // relu r1 feeds c2 and the residual add
+        assert_eq!(cons[2].len(), 2);
+    }
+
+    #[test]
+    fn describe_contains_all_ops() {
+        let n = tiny();
+        let d = n.describe();
+        for op in &n.ops {
+            assert!(d.contains(&op.name), "{d}");
+        }
+    }
+}

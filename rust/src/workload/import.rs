@@ -1,0 +1,227 @@
+//! JSON model-graph interchange.
+//!
+//! The paper imports workloads from ONNX; `onnx` is unavailable offline,
+//! so CIMinus defines an equivalent JSON schema (op type + dimensions +
+//! edges) emitted by `python/compile/models.py::export_graph` and parsed
+//! here. Export is also implemented for round-tripping and tooling.
+//!
+//! Schema: `{"name": str, "ops": [op...]}` where each op is
+//! `{"name": str, "kind": str, "inputs": [int], ...kind-specific fields}`.
+//! Op order must be topological; ids are implicit positions.
+
+use super::graph::Network;
+use super::op::{OpKind, PoolKind, Shape};
+use crate::util::json::Json;
+
+/// Parse a network from its JSON description.
+pub fn network_from_json(j: &Json) -> anyhow::Result<Network> {
+    let name = j.req_str("name")?;
+    let mut net = Network::new(name);
+    for (i, op_j) in j.req_arr("ops")?.iter().enumerate() {
+        let op_name = op_j.req_str("name")?;
+        let kind_s = op_j.req_str("kind")?;
+        let inputs: Vec<usize> = match op_j.get("inputs") {
+            Some(Json::Arr(a)) => a
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("op `{op_name}`: inputs must be non-negative ints"))
+                })
+                .collect::<anyhow::Result<_>>()?,
+            None if kind_s == "input" => vec![],
+            _ => anyhow::bail!("op `{op_name}`: missing `inputs` array"),
+        };
+        let kind = match kind_s {
+            "input" => {
+                let shape = op_j.req_arr("shape")?;
+                if shape.len() != 3 {
+                    anyhow::bail!("input `{op_name}`: shape must be [c,h,w]");
+                }
+                let dims: Vec<usize> = shape
+                    .iter()
+                    .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape dim")))
+                    .collect::<anyhow::Result<_>>()?;
+                let id = net.input(Shape::Chw(dims[0], dims[1], dims[2]));
+                net.ops[id].name = op_name.to_string();
+                continue;
+            }
+            "conv2d" => OpKind::Conv2d {
+                in_ch: op_j.req_usize("in_ch")?,
+                out_ch: op_j.req_usize("out_ch")?,
+                kh: op_j.req_usize("kh")?,
+                kw: op_j.req_usize("kw")?,
+                stride: op_j.opt_usize("stride", 1),
+                pad: op_j.opt_usize("pad", 0),
+                groups: op_j.opt_usize("groups", 1),
+            },
+            "fc" => OpKind::Fc {
+                in_features: op_j.req_usize("in_features")?,
+                out_features: op_j.req_usize("out_features")?,
+            },
+            "pool" => OpKind::Pool {
+                kind: match op_j.opt_str("pool", "max") {
+                    "max" => PoolKind::Max,
+                    "avg" => PoolKind::Avg,
+                    other => anyhow::bail!("op `{op_name}`: unknown pool kind `{other}`"),
+                },
+                k: op_j.req_usize("k")?,
+                stride: op_j.req_usize("stride")?,
+            },
+            "gap" => OpKind::GlobalAvgPool,
+            "relu" => OpKind::Relu,
+            "add" => OpKind::Add,
+            "bn" => OpKind::BatchNorm,
+            "flatten" => OpKind::Flatten,
+            other => anyhow::bail!("op `{op_name}` (#{i}): unknown kind `{other}`"),
+        };
+        let id = net.ops.len();
+        net.ops.push(super::op::Op {
+            id,
+            name: op_name.to_string(),
+            kind,
+            inputs,
+            out_shape: Shape::Flat(0),
+        });
+    }
+    net.infer_shapes()?;
+    Ok(net)
+}
+
+/// Load a network from a JSON file.
+pub fn network_from_file(path: &std::path::Path) -> anyhow::Result<Network> {
+    network_from_json(&Json::parse_file(path)?)
+}
+
+/// Serialize a network to the interchange schema.
+pub fn network_to_json(net: &Network) -> Json {
+    let ops: Vec<Json> = net
+        .ops
+        .iter()
+        .map(|op| {
+            let mut o = Json::obj();
+            o.set("name", Json::Str(op.name.clone()));
+            let inputs = Json::Arr(op.inputs.iter().map(|&i| Json::Num(i as f64)).collect());
+            match &op.kind {
+                OpKind::Input => {
+                    o.set("kind", Json::Str("input".into()));
+                    if let Shape::Chw(c, h, w) = op.out_shape {
+                        o.set(
+                            "shape",
+                            Json::Arr(vec![
+                                Json::Num(c as f64),
+                                Json::Num(h as f64),
+                                Json::Num(w as f64),
+                            ]),
+                        );
+                    }
+                }
+                OpKind::Conv2d {
+                    in_ch,
+                    out_ch,
+                    kh,
+                    kw,
+                    stride,
+                    pad,
+                    groups,
+                } => {
+                    o.set("kind", Json::Str("conv2d".into()));
+                    o.set("inputs", inputs);
+                    o.set("in_ch", Json::Num(*in_ch as f64));
+                    o.set("out_ch", Json::Num(*out_ch as f64));
+                    o.set("kh", Json::Num(*kh as f64));
+                    o.set("kw", Json::Num(*kw as f64));
+                    o.set("stride", Json::Num(*stride as f64));
+                    o.set("pad", Json::Num(*pad as f64));
+                    o.set("groups", Json::Num(*groups as f64));
+                }
+                OpKind::Fc {
+                    in_features,
+                    out_features,
+                } => {
+                    o.set("kind", Json::Str("fc".into()));
+                    o.set("inputs", inputs);
+                    o.set("in_features", Json::Num(*in_features as f64));
+                    o.set("out_features", Json::Num(*out_features as f64));
+                }
+                OpKind::Pool { kind, k, stride } => {
+                    o.set("kind", Json::Str("pool".into()));
+                    o.set("inputs", inputs);
+                    o.set(
+                        "pool",
+                        Json::Str(match kind {
+                            PoolKind::Max => "max".into(),
+                            PoolKind::Avg => "avg".into(),
+                        }),
+                    );
+                    o.set("k", Json::Num(*k as f64));
+                    o.set("stride", Json::Num(*stride as f64));
+                }
+                simple => {
+                    let label = match simple {
+                        OpKind::GlobalAvgPool => "gap",
+                        OpKind::Relu => "relu",
+                        OpKind::Add => "add",
+                        OpKind::BatchNorm => "bn",
+                        OpKind::Flatten => "flatten",
+                        _ => unreachable!(),
+                    };
+                    o.set("kind", Json::Str(label.into()));
+                    o.set("inputs", inputs);
+                }
+            }
+            o
+        })
+        .collect();
+    let mut root = Json::obj();
+    root.set("name", Json::Str(net.name.clone()));
+    root.set("ops", Json::Arr(ops));
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn roundtrip_all_zoo_models() {
+        for name in zoo::ZOO_NAMES {
+            let net = zoo::by_name(name, 32, 100).unwrap();
+            let j = network_to_json(&net);
+            let net2 = network_from_json(&j).unwrap();
+            assert_eq!(net.ops.len(), net2.ops.len(), "{name}");
+            for (a, b) in net.ops.iter().zip(&net2.ops) {
+                assert_eq!(a.kind, b.kind, "{name}/{}", a.name);
+                assert_eq!(a.inputs, b.inputs);
+                assert_eq!(a.out_shape, b.out_shape);
+            }
+            assert_eq!(net.stats(), net2.stats(), "{name}");
+        }
+    }
+
+    #[test]
+    fn parse_minimal() {
+        let src = r#"{
+            "name": "m",
+            "ops": [
+                {"name": "x", "kind": "input", "shape": [3, 8, 8]},
+                {"name": "c", "kind": "conv2d", "inputs": [0],
+                 "in_ch": 3, "out_ch": 4, "kh": 3, "kw": 3, "stride": 1, "pad": 1},
+                {"name": "g", "kind": "gap", "inputs": [1]},
+                {"name": "f", "kind": "fc", "inputs": [2], "in_features": 4, "out_features": 2}
+            ]
+        }"#;
+        let net = network_from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(net.ops.len(), 4);
+        assert_eq!(net.ops[3].out_shape, Shape::Flat(2));
+    }
+
+    #[test]
+    fn rejects_bad_kind_and_missing_fields() {
+        let bad_kind = r#"{"name":"m","ops":[{"name":"x","kind":"wat","inputs":[]}]}"#;
+        assert!(network_from_json(&Json::parse(bad_kind).unwrap()).is_err());
+        let missing = r#"{"name":"m","ops":[{"name":"x","kind":"input","shape":[3,8,8]},
+            {"name":"c","kind":"conv2d","inputs":[0],"in_ch":3}]}"#;
+        assert!(network_from_json(&Json::parse(missing).unwrap()).is_err());
+    }
+}

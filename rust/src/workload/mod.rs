@@ -1,0 +1,11 @@
+//! Workload description layer (Sec. IV-C ①): DNN operators, DAG
+//! construction and verification, JSON interchange, and the built-in
+//! model zoo with the paper's evaluation networks.
+
+pub mod graph;
+pub mod import;
+pub mod op;
+pub mod zoo;
+
+pub use graph::{LayerSparsity, Network, NetworkStats};
+pub use op::{MvmDims, Op, OpId, OpKind, Shape};

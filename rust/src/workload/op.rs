@@ -1,0 +1,428 @@
+//! DNN operator definitions.
+//!
+//! CIMinus models workloads as DAGs of [`Op`]s (Sec. IV-C "Workload
+//! Description"). MVM-based operators (convolutions, fully-connected
+//! layers) are the ones mapped onto CIM macros; everything else is routed
+//! to the post-processing units by the mapping (Sec. IV-C ②).
+
+/// Feature tensor shape flowing along DAG edges (batch dim is implicit:
+/// CIM inference is modeled per-sample, as in the paper's evaluations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    /// Channels × height × width feature map.
+    Chw(usize, usize, usize),
+    /// Flat vector (after Flatten / for FC layers).
+    Flat(usize),
+}
+
+impl Shape {
+    pub fn numel(&self) -> usize {
+        match *self {
+            Shape::Chw(c, h, w) => c * h * w,
+            Shape::Flat(n) => n,
+        }
+    }
+}
+
+/// Pooling flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Operator kind with its static parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Graph input placeholder.
+    Input,
+    /// 2-D convolution. `groups == in_ch == out_ch` models depthwise.
+    Conv2d {
+        in_ch: usize,
+        out_ch: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    },
+    /// Fully-connected layer.
+    Fc { in_features: usize, out_features: usize },
+    /// Spatial pooling.
+    Pool {
+        kind: PoolKind,
+        k: usize,
+        stride: usize,
+    },
+    /// Global average pooling → Flat(c).
+    GlobalAvgPool,
+    /// Element-wise ReLU.
+    Relu,
+    /// Element-wise addition (residual); takes two inputs.
+    Add,
+    /// Batch normalization (folded at inference; modeled as post-processing).
+    BatchNorm,
+    /// Reshape CHW → Flat.
+    Flatten,
+}
+
+/// Dimensions of the reshaped 2-D weight matrix of an MVM op plus the
+/// number of input vectors streamed through it (Sec. III-A).
+///
+/// Orientation follows the paper's weight-stationary convention: matrix
+/// *rows* (M) are the flattened input dimensions (`C_in/groups · Kh · Kw`)
+/// unrolled along the CIM array row direction (inputs broadcast across a
+/// row); matrix *columns* (N) are output channels accumulated along the
+/// bitline direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MvmDims {
+    /// Weight-matrix rows M (input-patch length).
+    pub rows: usize,
+    /// Weight-matrix columns N (output channels / features).
+    pub cols: usize,
+    /// Number of input vectors per inference (im2col columns; 1 for FC).
+    pub n_vectors: usize,
+    /// Independent weight groups sharing nothing (depthwise: `groups`).
+    pub groups: usize,
+}
+
+impl MvmDims {
+    /// Dense multiply-accumulate count per inference.
+    pub fn macs(&self) -> u64 {
+        self.rows as u64 * self.cols as u64 * self.n_vectors as u64 * self.groups as u64
+    }
+
+    /// Dense weight parameter count.
+    pub fn params(&self) -> u64 {
+        self.rows as u64 * self.cols as u64 * self.groups as u64
+    }
+}
+
+/// Identifier of an op inside its [`super::graph::Network`].
+pub type OpId = usize;
+
+/// A node in the workload DAG.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub id: OpId,
+    pub name: String,
+    pub kind: OpKind,
+    /// Producer ops. `Input` has none.
+    pub inputs: Vec<OpId>,
+    /// Inferred output shape (filled by `Network::infer_shapes`).
+    pub out_shape: Shape,
+}
+
+impl Op {
+    /// Whether this op is executed on CIM macros (true) or post-processing
+    /// units (false).
+    pub fn is_mvm(&self) -> bool {
+        matches!(self.kind, OpKind::Conv2d { .. } | OpKind::Fc { .. })
+    }
+
+    /// Compute the output shape given input shapes; errors on mismatch.
+    pub fn infer_shape(&self, ins: &[Shape]) -> anyhow::Result<Shape> {
+        use OpKind::*;
+        let one = |ins: &[Shape]| -> anyhow::Result<Shape> {
+            if ins.len() != 1 {
+                anyhow::bail!("op `{}` expects 1 input, got {}", self.name, ins.len());
+            }
+            Ok(ins[0])
+        };
+        match &self.kind {
+            Input => Ok(self.out_shape),
+            Conv2d {
+                in_ch,
+                out_ch,
+                kh,
+                kw,
+                stride,
+                pad,
+                groups,
+            } => {
+                let s = one(ins)?;
+                let (c, h, w) = match s {
+                    Shape::Chw(c, h, w) => (c, h, w),
+                    _ => anyhow::bail!("conv `{}` requires CHW input", self.name),
+                };
+                if c != *in_ch {
+                    anyhow::bail!(
+                        "conv `{}` expects {in_ch} input channels, got {c}",
+                        self.name
+                    );
+                }
+                if in_ch % groups != 0 || out_ch % groups != 0 {
+                    anyhow::bail!("conv `{}`: groups {groups} must divide channels", self.name);
+                }
+                if h + 2 * pad < *kh || w + 2 * pad < *kw {
+                    anyhow::bail!("conv `{}`: kernel larger than padded input", self.name);
+                }
+                let oh = (h + 2 * pad - kh) / stride + 1;
+                let ow = (w + 2 * pad - kw) / stride + 1;
+                Ok(Shape::Chw(*out_ch, oh, ow))
+            }
+            Fc {
+                in_features,
+                out_features,
+            } => {
+                let s = one(ins)?;
+                let n = s.numel();
+                if n != *in_features {
+                    anyhow::bail!(
+                        "fc `{}` expects {in_features} features, got {n}",
+                        self.name
+                    );
+                }
+                Ok(Shape::Flat(*out_features))
+            }
+            Pool { k, stride, .. } => {
+                let s = one(ins)?;
+                let (c, h, w) = match s {
+                    Shape::Chw(c, h, w) => (c, h, w),
+                    _ => anyhow::bail!("pool `{}` requires CHW input", self.name),
+                };
+                if h < *k || w < *k {
+                    anyhow::bail!("pool `{}`: window {k} larger than input {h}x{w}", self.name);
+                }
+                Ok(Shape::Chw(c, (h - k) / stride + 1, (w - k) / stride + 1))
+            }
+            GlobalAvgPool => {
+                let s = one(ins)?;
+                match s {
+                    Shape::Chw(c, _, _) => Ok(Shape::Flat(c)),
+                    _ => anyhow::bail!("gap `{}` requires CHW input", self.name),
+                }
+            }
+            Relu | BatchNorm => one(ins),
+            Flatten => Ok(Shape::Flat(one(ins)?.numel())),
+            Add => {
+                if ins.len() != 2 {
+                    anyhow::bail!("add `{}` expects 2 inputs, got {}", self.name, ins.len());
+                }
+                if ins[0] != ins[1] {
+                    anyhow::bail!(
+                        "add `{}` shape mismatch: {:?} vs {:?}",
+                        self.name,
+                        ins[0],
+                        ins[1]
+                    );
+                }
+                Ok(ins[0])
+            }
+        }
+    }
+
+    /// The reshaped weight-matrix dims if this is an MVM op.
+    ///
+    /// Requires shapes to be inferred (uses input shape for conv spatial
+    /// dims), so it takes the producer's shape.
+    pub fn mvm_dims(&self, input_shape: Shape) -> Option<MvmDims> {
+        match &self.kind {
+            OpKind::Conv2d {
+                in_ch,
+                out_ch,
+                kh,
+                kw,
+                stride,
+                pad,
+                groups,
+            } => {
+                let (_, h, w) = match input_shape {
+                    Shape::Chw(c, h, w) => (c, h, w),
+                    _ => return None,
+                };
+                let oh = (h + 2 * pad - kh) / stride + 1;
+                let ow = (w + 2 * pad - kw) / stride + 1;
+                Some(MvmDims {
+                    rows: (in_ch / groups) * kh * kw,
+                    cols: out_ch / groups,
+                    n_vectors: oh * ow,
+                    groups: *groups,
+                })
+            }
+            OpKind::Fc {
+                in_features,
+                out_features,
+            } => Some(MvmDims {
+                rows: *in_features,
+                cols: *out_features,
+                n_vectors: 1,
+                groups: 1,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Element-wise work for post-processing ops (ops per inference).
+    pub fn postproc_ops(&self, input_shapes: &[Shape]) -> u64 {
+        match &self.kind {
+            OpKind::Relu | OpKind::BatchNorm | OpKind::Flatten => {
+                input_shapes.first().map(|s| s.numel() as u64).unwrap_or(0)
+            }
+            OpKind::Add => input_shapes.first().map(|s| s.numel() as u64).unwrap_or(0),
+            OpKind::Pool { k, .. } => {
+                // window reads per output element
+                self.out_shape.numel() as u64 * (k * k) as u64
+            }
+            OpKind::GlobalAvgPool => input_shapes.first().map(|s| s.numel() as u64).unwrap_or(0),
+            _ => 0,
+        }
+    }
+}
+
+/// Short human label for op kinds (reports, traces).
+pub fn kind_label(kind: &OpKind) -> &'static str {
+    match kind {
+        OpKind::Input => "input",
+        OpKind::Conv2d { groups, .. } if *groups > 1 => "dwconv",
+        OpKind::Conv2d { .. } => "conv",
+        OpKind::Fc { .. } => "fc",
+        OpKind::Pool { .. } => "pool",
+        OpKind::GlobalAvgPool => "gap",
+        OpKind::Relu => "relu",
+        OpKind::Add => "add",
+        OpKind::BatchNorm => "bn",
+        OpKind::Flatten => "flatten",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(in_ch: usize, out_ch: usize, k: usize, stride: usize, pad: usize) -> Op {
+        Op {
+            id: 0,
+            name: "c".into(),
+            kind: OpKind::Conv2d {
+                in_ch,
+                out_ch,
+                kh: k,
+                kw: k,
+                stride,
+                pad,
+                groups: 1,
+            },
+            inputs: vec![],
+            out_shape: Shape::Flat(0),
+        }
+    }
+
+    #[test]
+    fn conv_shape_inference() {
+        let c = conv(3, 64, 3, 1, 1);
+        let out = c.infer_shape(&[Shape::Chw(3, 32, 32)]).unwrap();
+        assert_eq!(out, Shape::Chw(64, 32, 32));
+        let c2 = conv(64, 128, 3, 2, 1);
+        let out2 = c2.infer_shape(&[Shape::Chw(64, 32, 32)]).unwrap();
+        assert_eq!(out2, Shape::Chw(128, 16, 16));
+    }
+
+    #[test]
+    fn conv_shape_errors() {
+        let c = conv(3, 64, 3, 1, 1);
+        assert!(c.infer_shape(&[Shape::Chw(4, 32, 32)]).is_err());
+        assert!(c.infer_shape(&[Shape::Flat(10)]).is_err());
+        assert!(c.infer_shape(&[]).is_err());
+    }
+
+    #[test]
+    fn mvm_dims_conv() {
+        let c = conv(64, 128, 3, 1, 1);
+        let d = c.mvm_dims(Shape::Chw(64, 16, 16)).unwrap();
+        assert_eq!(d.rows, 64 * 9);
+        assert_eq!(d.cols, 128);
+        assert_eq!(d.n_vectors, 256);
+        assert_eq!(d.macs(), (64 * 9) as u64 * 128 * 256);
+    }
+
+    #[test]
+    fn mvm_dims_depthwise() {
+        let c = Op {
+            id: 0,
+            name: "dw".into(),
+            kind: OpKind::Conv2d {
+                in_ch: 32,
+                out_ch: 32,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                groups: 32,
+            },
+            inputs: vec![],
+            out_shape: Shape::Flat(0),
+        };
+        let d = c.mvm_dims(Shape::Chw(32, 8, 8)).unwrap();
+        assert_eq!(d.rows, 9); // 1 channel per group
+        assert_eq!(d.cols, 1);
+        assert_eq!(d.groups, 32);
+        assert_eq!(d.params(), 9 * 32);
+    }
+
+    #[test]
+    fn fc_dims_and_shape() {
+        let f = Op {
+            id: 0,
+            name: "fc".into(),
+            kind: OpKind::Fc {
+                in_features: 512,
+                out_features: 100,
+            },
+            inputs: vec![],
+            out_shape: Shape::Flat(0),
+        };
+        assert_eq!(f.infer_shape(&[Shape::Flat(512)]).unwrap(), Shape::Flat(100));
+        // FC also accepts CHW that flattens to the right size
+        assert_eq!(
+            f.infer_shape(&[Shape::Chw(512, 1, 1)]).unwrap(),
+            Shape::Flat(100)
+        );
+        let d = f.mvm_dims(Shape::Flat(512)).unwrap();
+        assert_eq!((d.rows, d.cols, d.n_vectors), (512, 100, 1));
+    }
+
+    #[test]
+    fn add_requires_matching_shapes() {
+        let a = Op {
+            id: 0,
+            name: "add".into(),
+            kind: OpKind::Add,
+            inputs: vec![],
+            out_shape: Shape::Flat(0),
+        };
+        assert!(a
+            .infer_shape(&[Shape::Chw(8, 4, 4), Shape::Chw(8, 4, 4)])
+            .is_ok());
+        assert!(a
+            .infer_shape(&[Shape::Chw(8, 4, 4), Shape::Chw(4, 4, 4)])
+            .is_err());
+    }
+
+    #[test]
+    fn pool_and_gap() {
+        let p = Op {
+            id: 0,
+            name: "p".into(),
+            kind: OpKind::Pool {
+                kind: PoolKind::Max,
+                k: 2,
+                stride: 2,
+            },
+            inputs: vec![],
+            out_shape: Shape::Flat(0),
+        };
+        assert_eq!(
+            p.infer_shape(&[Shape::Chw(16, 8, 8)]).unwrap(),
+            Shape::Chw(16, 4, 4)
+        );
+        let g = Op {
+            id: 0,
+            name: "g".into(),
+            kind: OpKind::GlobalAvgPool,
+            inputs: vec![],
+            out_shape: Shape::Flat(0),
+        };
+        assert_eq!(g.infer_shape(&[Shape::Chw(16, 4, 4)]).unwrap(), Shape::Flat(16));
+    }
+}

@@ -1,0 +1,144 @@
+//! Mini model variants for the *accuracy* axis of the paper's experiments.
+//!
+//! The full-size models (resnet50/vgg16/mobilenetv2) give the cost model
+//! its layer geometry, but measuring pruned-model accuracy requires
+//! trained weights. The paper trains on CIFAR-100/ImageNet; this
+//! reproduction substitutes SynthCIFAR-trained mini networks with the
+//! same structural features (residual adds, FC-heavy classifier,
+//! depthwise convs — see DESIGN.md §3).
+//!
+//! IMPORTANT: these definitions must stay byte-for-byte consistent with
+//! `python/compile/models.py`, which trains the same graphs in JAX and
+//! exports their weights. `integration_runtime.rs` asserts the parameter
+//! layout matches the artifact manifest.
+
+use crate::workload::graph::Network;
+use crate::workload::op::{OpId, Shape};
+
+/// SynthCIFAR input resolution and class count shared with python/compile.
+pub const MINI_PX: usize = 16;
+pub const MINI_CLASSES: usize = 10;
+
+fn basic_block(n: &mut Network, x: OpId, in_ch: usize, out_ch: usize, stride: usize, tag: &str) -> OpId {
+    let c1 = n.conv(&format!("{tag}.conv1"), x, in_ch, out_ch, 3, stride, 1);
+    let r1 = n.relu(&format!("{tag}.relu1"), c1);
+    let c2 = n.conv(&format!("{tag}.conv2"), r1, out_ch, out_ch, 3, 1, 1);
+    let short = if stride != 1 || in_ch != out_ch {
+        n.conv(&format!("{tag}.down"), x, in_ch, out_ch, 1, stride, 0)
+    } else {
+        x
+    };
+    let a = n.add(&format!("{tag}.add"), c2, short);
+    n.relu(&format!("{tag}.relu2"), a)
+}
+
+/// ResNet-mini: 3×16×16 → stem(16) → 2×block(16) → 2×block(32, /2) → GAP → FC(10).
+/// Residual structure mirrors ResNet50's role in the experiments.
+pub fn resnet_mini() -> Network {
+    let mut n = Network::new("resnet_mini");
+    let x = n.input(Shape::Chw(3, MINI_PX, MINI_PX));
+    let c0 = n.conv("stem", x, 3, 16, 3, 1, 1);
+    let mut h = n.relu("stem_relu", c0);
+    h = basic_block(&mut n, h, 16, 16, 1, "layer1.0");
+    h = basic_block(&mut n, h, 16, 16, 1, "layer1.1");
+    h = basic_block(&mut n, h, 16, 32, 2, "layer2.0");
+    h = basic_block(&mut n, h, 32, 32, 1, "layer2.1");
+    let g = n.gap("gap", h);
+    n.fc("fc", g, 32, MINI_CLASSES);
+    n.infer_shapes().expect("resnet_mini is well-formed");
+    n
+}
+
+/// VGG-mini: two conv blocks then an FC-heavy classifier (512→128→10),
+/// mirroring VGG16's FC-dominated parameter profile.
+pub fn vgg_mini() -> Network {
+    let mut n = Network::new("vgg_mini");
+    let x = n.input(Shape::Chw(3, MINI_PX, MINI_PX));
+    let c1 = n.conv("conv1_1", x, 3, 16, 3, 1, 1);
+    let r1 = n.relu("relu1_1", c1);
+    let c2 = n.conv("conv1_2", r1, 16, 16, 3, 1, 1);
+    let r2 = n.relu("relu1_2", c2);
+    let p1 = n.maxpool("pool1", r2, 2, 2);
+    let c3 = n.conv("conv2_1", p1, 16, 32, 3, 1, 1);
+    let r3 = n.relu("relu2_1", c3);
+    let c4 = n.conv("conv2_2", r3, 32, 32, 3, 1, 1);
+    let r4 = n.relu("relu2_2", c4);
+    let p2 = n.maxpool("pool2", r4, 2, 2);
+    let f = n.flatten("flatten", p2);
+    let f1 = n.fc("fc1", f, 32 * 4 * 4, 128);
+    let rf = n.relu("relu_fc1", f1);
+    n.fc("fc2", rf, 128, MINI_CLASSES);
+    n.infer_shapes().expect("vgg_mini is well-formed");
+    n
+}
+
+/// MobileNet-mini: stem + two inverted-residual blocks (with depthwise
+/// convs) + head, mirroring MobileNetV2's depthwise-dominated structure.
+pub fn mobilenet_mini() -> Network {
+    let mut n = Network::new("mobilenet_mini");
+    let x = n.input(Shape::Chw(3, MINI_PX, MINI_PX));
+    let c0 = n.conv("stem", x, 3, 16, 3, 1, 1);
+    let mut h = n.relu("stem_relu", c0);
+    // block1: expand 16→32, dw, project →16, residual
+    let e1 = n.conv("block1.expand", h, 16, 32, 1, 1, 0);
+    let re1 = n.relu("block1.expand_relu", e1);
+    let d1 = n.dwconv("block1.dw", re1, 32, 3, 1, 1);
+    let rd1 = n.relu("block1.dw_relu", d1);
+    let p1 = n.conv("block1.project", rd1, 32, 16, 1, 1, 0);
+    h = n.add("block1.add", p1, h);
+    // block2: expand 16→32, dw stride 2, project →32 (no residual)
+    let e2 = n.conv("block2.expand", h, 16, 32, 1, 1, 0);
+    let re2 = n.relu("block2.expand_relu", e2);
+    let d2 = n.dwconv("block2.dw", re2, 32, 3, 2, 1);
+    let rd2 = n.relu("block2.dw_relu", d2);
+    h = n.conv("block2.project", rd2, 32, 32, 1, 1, 0);
+    // head
+    let ch = n.conv("head", h, 32, 64, 1, 1, 0);
+    let rh = n.relu("head_relu", ch);
+    let g = n.gap("gap", rh);
+    n.fc("classifier", g, 64, MINI_CLASSES);
+    n.infer_shapes().expect("mobilenet_mini is well-formed");
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minis_are_well_formed() {
+        for net in [resnet_mini(), vgg_mini(), mobilenet_mini()] {
+            assert_eq!(net.ops.last().unwrap().out_shape, Shape::Flat(MINI_CLASSES));
+            assert!(net.stats().macs > 0);
+        }
+    }
+
+    #[test]
+    fn vgg_mini_is_fc_heavy() {
+        let n = vgg_mini();
+        let (mut fc, mut conv) = (0u64, 0u64);
+        for id in n.mvm_ops() {
+            let p = n.mvm_dims(id).unwrap().params();
+            if matches!(n.ops[id].kind, crate::workload::op::OpKind::Fc { .. }) {
+                fc += p;
+            } else {
+                conv += p;
+            }
+        }
+        assert!(fc * 2 > conv, "fc={fc} conv={conv}");
+    }
+
+    #[test]
+    fn mobilenet_mini_has_depthwise() {
+        let n = mobilenet_mini();
+        assert_eq!(n.stats().n_dwconv, 2);
+    }
+
+    #[test]
+    fn resnet_mini_param_count_is_small() {
+        let n = resnet_mini();
+        let p = n.stats().params;
+        assert!(p < 100_000, "mini model stays mini: {p}");
+        assert!(p > 10_000);
+    }
+}

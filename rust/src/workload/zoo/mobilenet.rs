@@ -1,0 +1,121 @@
+//! MobileNetV2 workload definition. The depthwise convolutions are the
+//! paper's problem child: their tiny reshaped weight matrices (9×1 per
+//! group) map poorly onto CIM arrays and pruning them destroys accuracy
+//! (Fig. 9(b)), so the use-case restricts pruning to standard convs.
+
+use crate::workload::graph::Network;
+use crate::workload::op::{OpId, Shape};
+
+/// Inverted residual block: 1×1 expand → 3×3 depthwise → 1×1 project,
+/// with a residual add when stride == 1 and channels match.
+fn inverted_residual(
+    n: &mut Network,
+    x: OpId,
+    in_ch: usize,
+    out_ch: usize,
+    stride: usize,
+    expand: usize,
+    tag: &str,
+) -> OpId {
+    let mid = in_ch * expand;
+    let mut h = x;
+    if expand != 1 {
+        let c = n.conv(&format!("{tag}.expand"), h, in_ch, mid, 1, 1, 0);
+        let b = n.bn(&format!("{tag}.expand_bn"), c);
+        h = n.relu(&format!("{tag}.expand_relu"), b);
+    }
+    let dw = n.dwconv(&format!("{tag}.dw"), h, mid, 3, stride, 1);
+    let bdw = n.bn(&format!("{tag}.dw_bn"), dw);
+    let rdw = n.relu(&format!("{tag}.dw_relu"), bdw);
+    let proj = n.conv(&format!("{tag}.project"), rdw, mid, out_ch, 1, 1, 0);
+    let bproj = n.bn(&format!("{tag}.project_bn"), proj);
+    if stride == 1 && in_ch == out_ch {
+        n.add(&format!("{tag}.add"), bproj, x)
+    } else {
+        bproj
+    }
+}
+
+/// MobileNetV2 (width 1.0). For small inputs (CIFAR) the stem stride and
+/// the first two stage strides are reduced, the standard CIFAR adaptation.
+pub fn mobilenetv2(input_px: usize, classes: usize) -> Network {
+    let mut n = Network::new(&format!("mobilenetv2_{input_px}px"));
+    let x = n.input(Shape::Chw(3, input_px, input_px));
+    let small = input_px < 64;
+    // (expand, out_ch, repeats, stride)
+    let cfg: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, if small { 1 } else { 2 }),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let stem_stride = if small { 1 } else { 2 };
+    let c0 = n.conv("stem", x, 3, 32, 3, stem_stride, 1);
+    let b0 = n.bn("stem_bn", c0);
+    let mut h = n.relu("stem_relu", b0);
+    let mut in_ch = 32;
+    for (bi, &(t, c, reps, s)) in cfg.iter().enumerate() {
+        for r in 0..reps {
+            let stride = if r == 0 { s } else { 1 };
+            h = inverted_residual(
+                &mut n,
+                h,
+                in_ch,
+                c,
+                stride,
+                t,
+                &format!("block{}.{}", bi + 1, r),
+            );
+            in_ch = c;
+        }
+    }
+    let ch = n.conv("head", h, 320, 1280, 1, 1, 0);
+    let bh = n.bn("head_bn", ch);
+    let rh = n.relu("head_relu", bh);
+    let g = n.gap("gap", rh);
+    n.fc("classifier", g, 1280, classes);
+    n.infer_shapes().expect("mobilenetv2 is well-formed");
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mobilenetv2_imagenet_params() {
+        let n = mobilenetv2(224, 1000);
+        let s = n.stats();
+        let m = s.params as f64 / 1e6;
+        // torchvision mobilenet_v2: 3.50 M params (paper quotes 3.4 M)
+        assert!((3.2..3.7).contains(&m), "params = {m} M");
+        let g = s.macs as f64 / 1e9;
+        // ≈ 0.3 GMACs
+        assert!((0.25..0.40).contains(&g), "macs = {g} G");
+    }
+
+    #[test]
+    fn has_depthwise_layers() {
+        let n = mobilenetv2(32, 100);
+        let s = n.stats();
+        assert_eq!(s.n_dwconv, 17); // one per inverted residual block
+        assert!(s.n_conv > 30);
+    }
+
+    #[test]
+    fn depthwise_mvm_dims_are_tiny() {
+        let n = mobilenetv2(32, 100);
+        for id in n.mvm_ops() {
+            if let crate::workload::op::OpKind::Conv2d { groups, .. } = n.ops[id].kind {
+                if groups > 1 {
+                    let d = n.mvm_dims(id).unwrap();
+                    assert_eq!(d.rows, 9, "depthwise rows per group");
+                    assert_eq!(d.cols, 1);
+                }
+            }
+        }
+    }
+}

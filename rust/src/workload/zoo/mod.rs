@@ -1,0 +1,64 @@
+//! Built-in workload definitions ("model zoo"): the full-size networks
+//! the paper evaluates (exact layer geometry) plus mini variants with
+//! trained-weight artifacts for accuracy experiments.
+
+mod mini;
+mod mobilenet;
+mod resnet;
+mod vgg;
+
+pub use mini::{mobilenet_mini, resnet_mini, vgg_mini, MINI_CLASSES, MINI_PX};
+pub use mobilenet::mobilenetv2;
+pub use resnet::{resnet18, resnet34, resnet50};
+pub use vgg::{vgg11, vgg16, vgg19};
+
+use crate::workload::graph::Network;
+
+/// All zoo entries: (name, default constructor).
+pub const ZOO_NAMES: [&str; 10] = [
+    "resnet18",
+    "resnet34",
+    "resnet50",
+    "vgg11",
+    "vgg16",
+    "vgg19",
+    "mobilenetv2",
+    "resnet_mini",
+    "vgg_mini",
+    "mobilenet_mini",
+];
+
+/// Look up a zoo network by name. Full-size models take
+/// `input_px`/`classes`; minis ignore them (fixed 16 px / 10 classes).
+pub fn by_name(name: &str, input_px: usize, classes: usize) -> anyhow::Result<Network> {
+    Ok(match name {
+        "resnet18" => resnet18(input_px, classes),
+        "resnet34" => resnet34(input_px, classes),
+        "resnet50" => resnet50(input_px, classes),
+        "vgg11" => vgg11(input_px, classes),
+        "vgg16" => vgg16(input_px, classes),
+        "vgg19" => vgg19(input_px, classes),
+        "mobilenetv2" => mobilenetv2(input_px, classes),
+        "resnet_mini" => resnet_mini(),
+        "vgg_mini" => vgg_mini(),
+        "mobilenet_mini" => mobilenet_mini(),
+        other => anyhow::bail!(
+            "unknown zoo model `{other}` (available: {})",
+            ZOO_NAMES.join(", ")
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_covers_all() {
+        for name in ZOO_NAMES {
+            let n = by_name(name, 32, 100).unwrap();
+            assert!(!n.ops.is_empty(), "{name}");
+        }
+        assert!(by_name("nope", 32, 100).is_err());
+    }
+}

@@ -1,0 +1,191 @@
+//! ResNet-18 / ResNet-50 workload definitions with exact layer
+//! dimensions. The cost model needs layer geometry only (weights live in
+//! masks / artifacts), so these builders produce the full-size networks
+//! used by the paper's evaluations (ResNet18 on CIFAR-100 for MARS
+//! validation, ResNet50 on CIFAR-100/ImageNet for the use-cases).
+
+use crate::workload::graph::Network;
+use crate::workload::op::{OpId, Shape};
+
+/// Stem: ImageNet inputs (>= 64 px) get 7×7/2 + maxpool; small inputs
+/// (CIFAR) get the standard 3×3/1 CIFAR-ResNet stem.
+fn stem(n: &mut Network, x: OpId, input_px: usize, out_ch: usize) -> OpId {
+    if input_px >= 64 {
+        let c = n.conv("conv1", x, 3, out_ch, 7, 2, 3);
+        let b = n.bn("bn1", c);
+        let r = n.relu("relu1", b);
+        n.maxpool("maxpool", r, 3, 2)
+    } else {
+        let c = n.conv("conv1", x, 3, out_ch, 3, 1, 1);
+        let b = n.bn("bn1", c);
+        n.relu("relu1", b)
+    }
+}
+
+/// Basic residual block (two 3×3 convs), ResNet-18/34 style.
+fn basic_block(
+    n: &mut Network,
+    x: OpId,
+    in_ch: usize,
+    out_ch: usize,
+    stride: usize,
+    tag: &str,
+) -> OpId {
+    let c1 = n.conv(&format!("{tag}.conv1"), x, in_ch, out_ch, 3, stride, 1);
+    let b1 = n.bn(&format!("{tag}.bn1"), c1);
+    let r1 = n.relu(&format!("{tag}.relu1"), b1);
+    let c2 = n.conv(&format!("{tag}.conv2"), r1, out_ch, out_ch, 3, 1, 1);
+    let b2 = n.bn(&format!("{tag}.bn2"), c2);
+    let short = if stride != 1 || in_ch != out_ch {
+        let sc = n.conv(&format!("{tag}.downsample"), x, in_ch, out_ch, 1, stride, 0);
+        n.bn(&format!("{tag}.downsample_bn"), sc)
+    } else {
+        x
+    };
+    let a = n.add(&format!("{tag}.add"), b2, short);
+    n.relu(&format!("{tag}.relu2"), a)
+}
+
+/// Bottleneck residual block (1×1 → 3×3 → 1×1, expansion 4), ResNet-50 style.
+fn bottleneck(
+    n: &mut Network,
+    x: OpId,
+    in_ch: usize,
+    mid_ch: usize,
+    stride: usize,
+    tag: &str,
+) -> OpId {
+    let out_ch = mid_ch * 4;
+    let c1 = n.conv(&format!("{tag}.conv1"), x, in_ch, mid_ch, 1, 1, 0);
+    let b1 = n.bn(&format!("{tag}.bn1"), c1);
+    let r1 = n.relu(&format!("{tag}.relu1"), b1);
+    let c2 = n.conv(&format!("{tag}.conv2"), r1, mid_ch, mid_ch, 3, stride, 1);
+    let b2 = n.bn(&format!("{tag}.bn2"), c2);
+    let r2 = n.relu(&format!("{tag}.relu2"), b2);
+    let c3 = n.conv(&format!("{tag}.conv3"), r2, mid_ch, out_ch, 1, 1, 0);
+    let b3 = n.bn(&format!("{tag}.bn3"), c3);
+    let short = if stride != 1 || in_ch != out_ch {
+        let sc = n.conv(&format!("{tag}.downsample"), x, in_ch, out_ch, 1, stride, 0);
+        n.bn(&format!("{tag}.downsample_bn"), sc)
+    } else {
+        x
+    };
+    let a = n.add(&format!("{tag}.add"), b3, short);
+    n.relu(&format!("{tag}.relu3"), a)
+}
+
+/// ResNet-18 for `input_px`×`input_px` RGB inputs and `classes` outputs.
+pub fn resnet18(input_px: usize, classes: usize) -> Network {
+    let mut n = Network::new(&format!("resnet18_{input_px}px"));
+    let x = n.input(Shape::Chw(3, input_px, input_px));
+    let mut h = stem(&mut n, x, input_px, 64);
+    let cfg = [(64usize, 2usize), (128, 2), (256, 2), (512, 2)];
+    let mut in_ch = 64;
+    for (si, &(ch, blocks)) in cfg.iter().enumerate() {
+        for b in 0..blocks {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            h = basic_block(&mut n, h, in_ch, ch, stride, &format!("layer{}.{}", si + 1, b));
+            in_ch = ch;
+        }
+    }
+    let g = n.gap("gap", h);
+    n.fc("fc", g, 512, classes);
+    n.infer_shapes().expect("resnet18 is well-formed");
+    n
+}
+
+/// ResNet-34 for `input_px`×`input_px` RGB inputs and `classes` outputs.
+pub fn resnet34(input_px: usize, classes: usize) -> Network {
+    let mut n = Network::new(&format!("resnet34_{input_px}px"));
+    let x = n.input(Shape::Chw(3, input_px, input_px));
+    let mut h = stem(&mut n, x, input_px, 64);
+    let cfg = [(64usize, 3usize), (128, 4), (256, 6), (512, 3)];
+    let mut in_ch = 64;
+    for (si, &(ch, blocks)) in cfg.iter().enumerate() {
+        for b in 0..blocks {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            h = basic_block(&mut n, h, in_ch, ch, stride, &format!("layer{}.{}", si + 1, b));
+            in_ch = ch;
+        }
+    }
+    let g = n.gap("gap", h);
+    n.fc("fc", g, 512, classes);
+    n.infer_shapes().expect("resnet34 is well-formed");
+    n
+}
+
+/// ResNet-50 for `input_px`×`input_px` RGB inputs and `classes` outputs.
+pub fn resnet50(input_px: usize, classes: usize) -> Network {
+    let mut n = Network::new(&format!("resnet50_{input_px}px"));
+    let x = n.input(Shape::Chw(3, input_px, input_px));
+    let mut h = stem(&mut n, x, input_px, 64);
+    let cfg = [(64usize, 3usize), (128, 4), (256, 6), (512, 3)];
+    let mut in_ch = 64;
+    for (si, &(mid, blocks)) in cfg.iter().enumerate() {
+        for b in 0..blocks {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            h = bottleneck(&mut n, h, in_ch, mid, stride, &format!("layer{}.{}", si + 1, b));
+            in_ch = mid * 4;
+        }
+    }
+    let g = n.gap("gap", h);
+    n.fc("fc", g, 2048, classes);
+    n.infer_shapes().expect("resnet50 is well-formed");
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::op::Shape;
+
+    #[test]
+    fn resnet18_imagenet_params() {
+        let n = resnet18(224, 1000);
+        let s = n.stats();
+        // torchvision resnet18: 11.69 M params total; conv+fc (no bn) ≈ 11.68 M
+        let m = s.params as f64 / 1e6;
+        assert!((11.0..12.0).contains(&m), "params = {m} M");
+        // ≈ 1.82 GMACs
+        let g = s.macs as f64 / 1e9;
+        assert!((1.6..2.0).contains(&g), "macs = {g} G");
+    }
+
+    #[test]
+    fn resnet50_imagenet_params() {
+        let n = resnet50(224, 1000);
+        let s = n.stats();
+        let m = s.params as f64 / 1e6;
+        // torchvision resnet50: 25.56 M total; conv+fc ≈ 25.5 M
+        assert!((24.5..26.0).contains(&m), "params = {m} M");
+        let g = s.macs as f64 / 1e9;
+        // ≈ 4.1 GMACs
+        assert!((3.7..4.5).contains(&g), "macs = {g} G");
+    }
+
+    #[test]
+    fn resnet34_imagenet_params() {
+        let n = resnet34(224, 1000);
+        let m = n.stats().params as f64 / 1e6;
+        // torchvision resnet34: 21.80 M params
+        assert!((20.5..22.5).contains(&m), "params = {m} M");
+    }
+
+    #[test]
+    fn resnet50_cifar_shapes() {
+        let n = resnet50(32, 100);
+        assert_eq!(n.ops.last().unwrap().out_shape, Shape::Flat(100));
+        // CIFAR stem: no downsample before layer1 → final maps 4x4 before GAP
+        let gap_in = n.input_shape(n.ops.len() - 2).unwrap();
+        assert_eq!(gap_in, Shape::Chw(2048, 4, 4));
+    }
+
+    #[test]
+    fn resnet18_layer_count() {
+        let n = resnet18(32, 100);
+        let s = n.stats();
+        // 1 stem + 16 block convs + 3 downsample convs = 20 convs, 1 fc
+        assert_eq!(s.n_conv, 20);
+        assert_eq!(s.n_fc, 1);
+    }
+}

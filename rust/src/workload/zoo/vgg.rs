@@ -1,0 +1,139 @@
+//! VGG-16 workload definition. VGG is the paper's FC-heavy model: the
+//! three classifier layers dominate the parameter count, which drives the
+//! weight-duplication finding in Fig. 11 (duplication hurts FC-heavy
+//! models) and the "pruning FC layers hurts accuracy" note on Fig. 9(b).
+
+use crate::workload::graph::Network;
+use crate::workload::op::Shape;
+
+fn vgg_from_cfg(name: &str, input_px: usize, classes: usize, cfg: &[&[usize]]) -> Network {
+    let mut n = Network::new(&format!("{name}_{input_px}px"));
+    let x = n.input(Shape::Chw(3, input_px, input_px));
+    let mut h = x;
+    let mut in_ch = 3;
+    let mut px = input_px;
+    for (bi, block) in cfg.iter().enumerate() {
+        for (ci, &ch) in block.iter().enumerate() {
+            let c = n.conv(&format!("conv{}_{}", bi + 1, ci + 1), h, in_ch, ch, 3, 1, 1);
+            let b = n.bn(&format!("bn{}_{}", bi + 1, ci + 1), c);
+            h = n.relu(&format!("relu{}_{}", bi + 1, ci + 1), b);
+            in_ch = ch;
+        }
+        h = n.maxpool(&format!("pool{}", bi + 1), h, 2, 2);
+        px /= 2;
+    }
+    let flat = n.flatten("flatten", h);
+    let feat = 512 * px * px;
+    let f1 = n.fc("fc1", flat, feat, 4096);
+    let r1 = n.relu("relu_fc1", f1);
+    let f2 = n.fc("fc2", r1, 4096, 4096);
+    let r2 = n.relu("relu_fc2", f2);
+    n.fc("fc3", r2, 4096, classes);
+    n.infer_shapes().expect("vgg is well-formed");
+    n
+}
+
+/// VGG-16 (configuration D) for `input_px`×`input_px` RGB inputs.
+///
+/// For 224 px inputs the classifier is the ImageNet 25088→4096→4096→C;
+/// for small (CIFAR) inputs the feature map flattens to 512 but the two
+/// 4096-wide hidden FC layers are kept, matching common CIFAR-VGG16
+/// variants and preserving the FC-heavy parameter profile.
+pub fn vgg16(input_px: usize, classes: usize) -> Network {
+    vgg_from_cfg(
+        "vgg16",
+        input_px,
+        classes,
+        &[
+            &[64, 64],
+            &[128, 128],
+            &[256, 256, 256],
+            &[512, 512, 512],
+            &[512, 512, 512],
+        ],
+    )
+}
+
+/// VGG-11 (configuration A): the shallow end of the family.
+pub fn vgg11(input_px: usize, classes: usize) -> Network {
+    vgg_from_cfg(
+        "vgg11",
+        input_px,
+        classes,
+        &[&[64], &[128], &[256, 256], &[512, 512], &[512, 512]],
+    )
+}
+
+/// VGG-19 (configuration E): the deep end of the family.
+pub fn vgg19(input_px: usize, classes: usize) -> Network {
+    vgg_from_cfg(
+        "vgg19",
+        input_px,
+        classes,
+        &[
+            &[64, 64],
+            &[128, 128],
+            &[256, 256, 256, 256],
+            &[512, 512, 512, 512],
+            &[512, 512, 512, 512],
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_imagenet_params() {
+        let n = vgg16(224, 1000);
+        let s = n.stats();
+        let m = s.params as f64 / 1e6;
+        // torchvision vgg16: 138.36 M params
+        assert!((135.0..140.0).contains(&m), "params = {m} M");
+        let g = s.macs as f64 / 1e9;
+        // ≈ 15.5 GMACs
+        assert!((14.5..16.5).contains(&g), "macs = {g} G");
+    }
+
+    #[test]
+    fn vgg16_is_fc_heavy() {
+        let n = vgg16(32, 100);
+        let mut conv_params = 0u64;
+        let mut fc_params = 0u64;
+        for id in n.mvm_ops() {
+            let d = n.mvm_dims(id).unwrap();
+            if matches!(n.ops[id].kind, crate::workload::op::OpKind::Fc { .. }) {
+                fc_params += d.params();
+            } else {
+                conv_params += d.params();
+            }
+        }
+        assert!(
+            fc_params > conv_params,
+            "fc={fc_params} conv={conv_params}: VGG classifier must dominate"
+        );
+    }
+
+    #[test]
+    fn vgg16_layer_counts() {
+        let n = vgg16(32, 100);
+        let s = n.stats();
+        assert_eq!(s.n_conv, 13);
+        assert_eq!(s.n_fc, 3);
+    }
+
+    #[test]
+    fn vgg_family_depths() {
+        assert_eq!(vgg11(32, 10).stats().n_conv, 8);
+        assert_eq!(vgg19(32, 10).stats().n_conv, 16);
+        // vgg19 ≈ 143.7 M params on ImageNet
+        let m = vgg19(224, 1000).stats().params as f64 / 1e6;
+        assert!((140.0..147.0).contains(&m), "params = {m} M");
+        // family ordering by compute
+        let a = vgg11(32, 10).stats().macs;
+        let b = vgg16(32, 10).stats().macs;
+        let c = vgg19(32, 10).stats().macs;
+        assert!(a < b && b < c);
+    }
+}

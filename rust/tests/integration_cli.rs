@@ -1,0 +1,85 @@
+//! Integration: the CLI surface (in-process, no subprocess spawning).
+
+fn run(args: &[&str]) -> i32 {
+    ciminus::cli::run(args.iter().map(|s| s.to_string())).expect("cli runs")
+}
+
+#[test]
+fn help_and_zoo() {
+    assert_eq!(run(&["help"]), 0);
+    assert_eq!(run(&["zoo"]), 0);
+    assert_eq!(run(&["zoo", "resnet18"]), 0);
+}
+
+#[test]
+fn simulate_patterns_and_strategies() {
+    assert_eq!(
+        run(&["simulate", "--model", "resnet_mini", "--pattern", "dense"]),
+        0
+    );
+    assert_eq!(
+        run(&[
+            "simulate",
+            "--model",
+            "vgg_mini",
+            "--pattern",
+            "hybrid:2:16",
+            "--ratio",
+            "0.7",
+            "--strategy",
+            "dp",
+            "--rearrange",
+            "--detail"
+        ]),
+        0
+    );
+    assert_eq!(
+        run(&[
+            "simulate",
+            "--model",
+            "resnet_mini",
+            "--arch",
+            "mars",
+            "--pattern",
+            "rb:16",
+            "--no-input-sparsity"
+        ]),
+        0
+    );
+}
+
+#[test]
+fn simulate_bad_input_errors() {
+    let r = ciminus::cli::run(
+        ["simulate", "--model", "resnet_mini", "--pattern", "wat"]
+            .iter()
+            .map(|s| s.to_string()),
+    );
+    assert!(r.is_err());
+    let r2 = ciminus::cli::run(
+        ["simulate", "--model", "no_such_model"]
+            .iter()
+            .map(|s| s.to_string()),
+    );
+    assert!(r2.is_err());
+}
+
+#[test]
+fn explore_fig12_small() {
+    assert_eq!(
+        run(&["explore", "--study", "fig12", "--model", "resnet_mini"]),
+        0
+    );
+}
+
+#[test]
+fn report_static_tables() {
+    let out = std::env::temp_dir().join("ciminus_cli_report");
+    assert_eq!(
+        run(&["report", "--out", out.to_str().unwrap()]),
+        0
+    );
+    assert!(out.join("tab1.csv").exists());
+    assert!(out.join("tab2.csv").exists());
+    std::fs::remove_dir_all(&out).ok();
+}

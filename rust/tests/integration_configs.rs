@@ -1,0 +1,56 @@
+//! The shipped example configs in configs/ must load and simulate.
+
+use ciminus::hw::arch::Architecture;
+use ciminus::sim::engine::simulate_network_default;
+use ciminus::sparsity::flexblock::FlexBlock;
+use ciminus::util::json::Json;
+use ciminus::workload::import;
+use std::path::Path;
+
+#[test]
+fn example_arch_config_loads_and_simulates() {
+    let arch = Architecture::from_json(
+        &Json::parse_file(Path::new("configs/custom_arch_example.json")).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(arch.name, "example_custom");
+    assert_eq!(arch.org.n_macros(), 8);
+    assert_eq!(arch.cim.rows, 512);
+    assert!(arch.global_in_buf.ping_pong);
+    assert_eq!(arch.energy.cim_cell.dynamic_pj, 0.005);
+    let net = ciminus::workload::zoo::resnet_mini();
+    let rep = simulate_network_default(&arch, &net, Some(&FlexBlock::row_wise(0.7))).unwrap();
+    assert!(rep.total_cycles > 0);
+}
+
+#[test]
+fn example_net_config_loads_and_simulates() {
+    let net = import::network_from_file(Path::new("configs/custom_net_example.json")).unwrap();
+    assert_eq!(net.name, "custom_cnn");
+    assert_eq!(net.mvm_ops().len(), 3);
+    let arch = ciminus::hw::presets::usecase_arch(4, (2, 2));
+    let rep = simulate_network_default(&arch, &net, Some(&FlexBlock::hybrid(2, 16, 0.8))).unwrap();
+    assert!(rep.total_cycles > 0);
+    assert!(rep.mean_utilization > 0.0);
+}
+
+#[test]
+fn cli_accepts_config_files() {
+    let code = ciminus::cli::run(
+        [
+            "simulate",
+            "--arch",
+            "configs/custom_arch_example.json",
+            "--model",
+            "configs/custom_net_example.json",
+            "--pattern",
+            "row_block:16",
+            "--ratio",
+            "0.6",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    )
+    .unwrap();
+    assert_eq!(code, 0);
+}

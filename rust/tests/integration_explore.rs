@@ -1,0 +1,141 @@
+//! Integration: exploration studies reproduce the paper's findings in
+//! direction (the "shape" contract of DESIGN.md §6).
+
+use ciminus::explore::input_study;
+use ciminus::explore::mapping_study;
+use ciminus::explore::sparsity_study;
+use ciminus::workload::zoo;
+
+#[test]
+fn finding1_efficiency_accuracy_tradeoff_shape() {
+    // cost side of Finding 1: coarse > fine in speedup at fixed ratio
+    let net = zoo::resnet_mini();
+    let pts = sparsity_study::run_fig8(&net, &[0.8], 0).unwrap();
+    let by = |name: &str| {
+        pts.iter()
+            .find(|p| p.pattern == name)
+            .unwrap_or_else(|| panic!("{name} missing"))
+    };
+    let row_wise = by("Row-wise");
+    let hybrid = by("1:2+Row-block(16)");
+    assert!(
+        row_wise.speedup >= hybrid.speedup,
+        "coarse {} < fine {}",
+        row_wise.speedup,
+        hybrid.speedup
+    );
+    // everything should still beat dense
+    for p in &pts {
+        assert!(p.speedup > 1.0, "{}: {}", p.pattern, p.speedup);
+    }
+}
+
+#[test]
+fn fig9a_misaligned_blocks_fragment() {
+    // block sizes that are not multiples of the array dims lose speedup
+    let net = zoo::resnet50(32, 100);
+    let pts = sparsity_study::run_fig9a(&net, 0).unwrap();
+    let rb = |w: usize| {
+        pts.iter()
+            .find(|p| p.pattern == format!("Row-block({w})"))
+            .unwrap()
+    };
+    // aligned 16/32 vs misaligned 24/48: aligned at least as good
+    let aligned = rb(16).speedup.max(rb(32).speedup);
+    let misaligned = rb(24).speedup.min(rb(48).speedup);
+    assert!(
+        aligned >= misaligned * 0.98,
+        "aligned {aligned} vs misaligned {misaligned}"
+    );
+}
+
+#[test]
+fn fig10_input_sparsity_helps_dense_models() {
+    let nets = [zoo::resnet_mini(), zoo::vgg_mini()];
+    let refs: Vec<&_> = nets.iter().collect();
+    let pts = input_study::run_dense_models(&refs, 0.55, 0).unwrap();
+    for p in &pts {
+        assert!(
+            p.speedup_from_input > 1.0,
+            "{}: {}",
+            p.label,
+            p.speedup_from_input
+        );
+        assert!(p.energy_saving_from_input > 1.0);
+    }
+}
+
+#[test]
+fn fig11_duplication_helps_resnet_hurts_vgg_relatively() {
+    // Finding 2 shape: duplication gains more utilization on Conv-heavy
+    // ResNet than on FC-heavy VGG.
+    let r50 = zoo::resnet50(32, 100);
+    let v16 = zoo::vgg16(32, 100);
+    let pts = mapping_study::run_fig11(&[&r50, &v16], 0).unwrap();
+    let util_gain = |model: &str| -> f64 {
+        let sp: f64 = pts
+            .iter()
+            .filter(|p| p.model.starts_with(model) && p.strategy == "spatial")
+            .map(|p| p.utilization)
+            .sum();
+        let dp: f64 = pts
+            .iter()
+            .filter(|p| p.model.starts_with(model) && p.strategy == "duplicate")
+            .map(|p| p.utilization)
+            .sum();
+        dp / sp
+    };
+    let resnet_gain = util_gain("resnet50");
+    let vgg_gain = util_gain("vgg16");
+    assert!(
+        resnet_gain > vgg_gain,
+        "resnet util gain {resnet_gain:.2} <= vgg {vgg_gain:.2}"
+    );
+    assert!(resnet_gain > 1.1, "duplication helps resnet: {resnet_gain:.2}");
+}
+
+#[test]
+fn fig12_rearrangement_utilization_up_buffer_cost_up() {
+    let r50 = zoo::resnet50(32, 100);
+    let pts = mapping_study::run_fig12(&r50, 0).unwrap();
+    for strat in ["spatial", "duplicate"] {
+        let base = pts
+            .iter()
+            .find(|p| p.strategy == strat && !p.rearranged)
+            .unwrap();
+        let rearr = pts
+            .iter()
+            .find(|p| p.strategy == strat && p.rearranged)
+            .unwrap();
+        assert!(rearr.utilization >= base.utilization - 1e-9, "{strat}");
+        // weight-buffer traffic rises with the shuffle
+        use ciminus::hw::units::UnitKind;
+        let wb_base = base.report.counters.reads_of(UnitKind::WeightBuf)
+            + base.report.counters.writes_of(UnitKind::WeightBuf);
+        let wb_rearr = rearr.report.counters.reads_of(UnitKind::WeightBuf)
+            + rearr.report.counters.writes_of(UnitKind::WeightBuf);
+        assert!(
+            wb_rearr >= wb_base,
+            "{strat}: rearranged buffer traffic {wb_rearr} < base {wb_base}"
+        );
+    }
+}
+
+#[test]
+fn validation_scenarios_within_sane_band() {
+    // full Fig. 6 run: errors are finite and the direction (speedup > 1,
+    // saving > 1) matches every published point
+    let points = ciminus::validate::run_validation().unwrap();
+    assert_eq!(points.len(), 8);
+    for p in &points {
+        assert!(
+            p.estimated > 1.0,
+            "{} {} {}: estimated {}",
+            p.design,
+            p.workload,
+            p.metric,
+            p.estimated
+        );
+        assert!(p.err_pct().is_finite());
+    }
+}

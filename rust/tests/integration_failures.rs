@@ -1,0 +1,119 @@
+//! Failure injection: corrupted artifacts, inconsistent configs, and
+//! malformed inputs must produce errors, not wrong numbers.
+
+use ciminus::hw::arch::Architecture;
+use ciminus::runtime::Artifacts;
+use ciminus::util::json::Json;
+use std::fs;
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ciminus_fail_{tag}_{}", std::process::id()));
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_detected() {
+    let d = tmpdir("nomanifest");
+    assert!(!Artifacts::available(&d));
+    assert!(Artifacts::load(&d).is_err());
+    fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn corrupt_manifest_rejected() {
+    let d = tmpdir("corrupt");
+    fs::write(d.join("manifest.json"), "{not json").unwrap();
+    assert!(Artifacts::load(&d).is_err());
+    fs::write(d.join("manifest.json"), r#"{"img": 16}"#).unwrap();
+    let err = Artifacts::load(&d).unwrap_err().to_string();
+    assert!(err.contains("models"), "{err}");
+    fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn truncated_weights_blob_rejected() {
+    let d = tmpdir("truncated");
+    let manifest = r#"{
+        "format_version": 1, "img": 16, "classes": 10,
+        "fwd_batch": 4, "acts_batch": 2, "eval_n": 8,
+        "models": {"m": {
+            "params": [{"name": "fc", "rows": 4, "cols": 4, "groups": 1,
+                        "w_offset": 0, "b_offset": 16}],
+            "total_floats": 20,
+            "weights_sha": "x",
+            "dense_eval_acc": 0.5,
+            "taps": ["fc"],
+            "fwd_hlo": "f.hlo.txt", "acts_hlo": "a.hlo.txt",
+            "weights_bin": "w.bin", "graph_json": "g.json"
+        }}
+    }"#;
+    fs::write(d.join("manifest.json"), manifest).unwrap();
+    // 10 floats instead of 20
+    fs::write(d.join("w.bin"), vec![0u8; 40]).unwrap();
+    let err = Artifacts::load(&d).unwrap_err().to_string();
+    assert!(err.contains("mismatch"), "{err}");
+    fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn misaligned_binary_rejected() {
+    let d = tmpdir("misaligned");
+    let manifest = r#"{
+        "format_version": 1, "img": 16, "classes": 10,
+        "fwd_batch": 4, "acts_batch": 2, "eval_n": 8,
+        "models": {"m": {
+            "params": [], "total_floats": 0, "weights_sha": "x",
+            "dense_eval_acc": 0.5, "taps": [],
+            "fwd_hlo": "f.hlo.txt", "acts_hlo": "a.hlo.txt",
+            "weights_bin": "w.bin", "graph_json": "g.json"
+        }}
+    }"#;
+    fs::write(d.join("manifest.json"), manifest).unwrap();
+    fs::write(d.join("w.bin"), vec![0u8; 7]).unwrap(); // not /4
+    let err = Artifacts::load(&d).unwrap_err().to_string();
+    assert!(err.contains("aligned"), "{err}");
+    fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn invalid_architecture_configs_rejected() {
+    for bad in [
+        r#"{"macro": {"rows": 0}}"#,
+        r#"{"macro": {"rows": 100, "sub_rows": 64}}"#,
+        r#"{"org": [0, 4]}"#,
+        r#"{"org": [2, 2, 2]}"#,
+        r#"{"clock_ghz": -1}"#,
+        r#"{"input_bits": 99}"#,
+        r#"{"energy": {"mux": {"dynamic_pj": -5}}}"#,
+    ] {
+        let j = Json::parse(bad).unwrap();
+        assert!(
+            Architecture::from_json(&j).is_err(),
+            "config accepted but invalid: {bad}"
+        );
+    }
+}
+
+#[test]
+fn runtime_missing_hlo_file_errors() {
+    let rt = match ciminus::runtime::Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(_) => return, // no PJRT in this environment
+    };
+    assert!(rt.load_hlo(std::path::Path::new("/no/such/file.hlo.txt")).is_err());
+}
+
+#[test]
+fn garbage_hlo_text_errors() {
+    let rt = match ciminus::runtime::Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(_) => return,
+    };
+    let d = tmpdir("badhlo");
+    let p = d.join("bad.hlo.txt");
+    fs::write(&p, "this is not hlo").unwrap();
+    assert!(rt.load_hlo(&p).is_err());
+    fs::remove_dir_all(&d).ok();
+}

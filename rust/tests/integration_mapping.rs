@@ -1,0 +1,158 @@
+//! Integration: mapping legality across architectures × workloads ×
+//! sparsity patterns, and strategy/rearrangement effects.
+
+use ciminus::hw::presets;
+use ciminus::mapping::duplication::{Strategy, StrategyPolicy};
+use ciminus::mapping::planner::{plan, MappingOptions};
+use ciminus::pruning::workflow::PruningWorkflow;
+use ciminus::sparsity::flexblock::FlexBlock;
+use ciminus::util::proptest::{check, ensure};
+use ciminus::workload::zoo;
+
+#[test]
+fn every_zoo_model_maps_on_every_preset() {
+    let archs = [
+        presets::mars(),
+        presets::sdp(),
+        presets::usecase_arch(4, (2, 2)),
+        presets::usecase_arch(16, (4, 4)),
+    ];
+    for name in zoo::ZOO_NAMES {
+        let net = zoo::by_name(name, 32, 100).unwrap();
+        for arch in &archs {
+            let p = plan(arch, &net, None, MappingOptions::default())
+                .unwrap_or_else(|e| panic!("{name} on {}: {e}", arch.name));
+            assert_eq!(p.ops.len(), net.mvm_ops().len());
+            for m in p.ops.values() {
+                assert!(m.tiling.utilization > 0.0, "{name}/{}", m.name);
+                assert!(m.tiling.utilization <= 1.0 + 1e-9);
+                m.loopnest.validate(&arch.org).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_mapping_conserves_work() {
+    // every round's occupancy summed over rounds ≥ nnz of each layer
+    // (duplication may multiply it; spatial keeps it exact)
+    check("work_conservation", 30, 0x30B, |g| {
+        let ratio = g.f64_in(0.5, 0.9);
+        let fb = match g.usize_in(0, 2) {
+            0 => FlexBlock::row_wise(ratio),
+            1 => FlexBlock::row_block(16, ratio),
+            _ => FlexBlock::hybrid(2, 16, ratio.max(0.55)),
+        };
+        let net = zoo::resnet_mini();
+        let arch = presets::usecase_arch(4, (2, 2));
+        let wf = PruningWorkflow {
+            seed: g.rng.next_u64(),
+            ..Default::default()
+        };
+        let prune = wf.run_uniform(&net, &fb, None).map_err(|e| e.to_string())?;
+        let p = plan(
+            &arch,
+            &net,
+            Some(&prune),
+            MappingOptions {
+                policy: StrategyPolicy::Fixed(Strategy::Spatial),
+                ..Default::default()
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        for m in p.ops.values() {
+            let mapped: u64 = m
+                .tiling
+                .rounds
+                .iter()
+                .map(|r| r.occupied_cells())
+                .sum();
+            // physical occupancy covers at least the compressed payload
+            let payload: usize = m.layout.row_lengths.iter().sum();
+            ensure(
+                mapped >= payload as u64,
+                format!("{}: mapped {mapped} < payload {payload}", m.name),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn duplication_improves_utilization_on_small_conv_layers() {
+    let net = zoo::resnet50(32, 100);
+    let arch = presets::usecase_arch(16, (4, 4));
+    let wf = PruningWorkflow::default();
+    let prune = wf
+        .run_uniform(&net, &FlexBlock::row_wise(0.8), None)
+        .unwrap();
+    let sp = plan(
+        &arch,
+        &net,
+        Some(&prune),
+        MappingOptions {
+            policy: StrategyPolicy::Fixed(Strategy::Spatial),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let dp = plan(
+        &arch,
+        &net,
+        Some(&prune),
+        MappingOptions {
+            policy: StrategyPolicy::Fixed(Strategy::Duplicate),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(
+        dp.mean_utilization() > sp.mean_utilization(),
+        "dup {} <= sp {}",
+        dp.mean_utilization(),
+        sp.mean_utilization()
+    );
+}
+
+#[test]
+fn rearrangement_never_hurts_utilization() {
+    let net = zoo::resnet50(32, 100);
+    let arch = presets::usecase_arch(16, (4, 4));
+    let wf = PruningWorkflow::default();
+    for fb in [FlexBlock::row_block(16, 0.8), FlexBlock::hybrid(2, 16, 0.8)] {
+        let prune = wf.run_uniform(&net, &fb, None).unwrap();
+        let base = plan(&arch, &net, Some(&prune), MappingOptions::default()).unwrap();
+        let rearr = plan(
+            &arch,
+            &net,
+            Some(&prune),
+            MappingOptions {
+                rearrange: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            rearr.mean_utilization() >= base.mean_utilization() - 1e-9,
+            "{}: {} < {}",
+            fb.name,
+            rearr.mean_utilization(),
+            base.mean_utilization()
+        );
+    }
+}
+
+#[test]
+fn verification_rejects_missing_hw_support() {
+    // Sec. IV-B functional verification: needs indexing/routing hardware
+    let net = zoo::resnet_mini();
+    let wf = PruningWorkflow::default();
+    let prune_intra = wf
+        .run_uniform(&net, &FlexBlock::intra(2, 0.5), None)
+        .unwrap();
+    let mut arch = presets::usecase_arch(4, (2, 2));
+    arch.sparsity.weight_routing = false;
+    let err = plan(&arch, &net, Some(&prune_intra), MappingOptions::default())
+        .expect_err("intra without routing must fail verification");
+    assert!(err.to_string().contains("routing"), "{err}");
+}

@@ -1,0 +1,152 @@
+//! Integration: end-to-end simulation invariants across the stack.
+
+use ciminus::hw::presets;
+use ciminus::hw::units::UnitKind;
+use ciminus::sim::engine::simulate_network_default;
+use ciminus::sparsity::flexblock::FlexBlock;
+use ciminus::util::proptest::{check, ensure};
+use ciminus::workload::zoo;
+
+#[test]
+fn efficiency_ordering_coarse_beats_fine() {
+    // Fig. 8's headline: coarse full-dimension patterns are more
+    // efficient than fine-grained hybrids at the same overall sparsity.
+    // In our cycle model the gap is carried by *energy* (mux routing,
+    // index traffic, reduced input skipping); latency can tie because
+    // hybrids also compress both matrix dimensions.
+    let net = zoo::resnet50(32, 100);
+    let dense_arch = presets::usecase_dense_baseline(4, (2, 2));
+    let dense = simulate_network_default(&dense_arch, &net, None).unwrap();
+    let arch = presets::usecase_arch(4, (2, 2));
+    let coarse =
+        simulate_network_default(&arch, &net, Some(&FlexBlock::row_wise(0.8))).unwrap();
+    let fine =
+        simulate_network_default(&arch, &net, Some(&FlexBlock::hybrid(2, 16, 0.8))).unwrap();
+    let e_coarse = coarse.energy_saving_vs(&dense);
+    let e_fine = fine.energy_saving_vs(&dense);
+    // near-tie is acceptable (hybrids also compress both dims); what must
+    // hold is that the fine pattern never *beats* coarse by a margin —
+    // its mux/index/skip overheads keep it at or below coarse + ε
+    // (EXPERIMENTS.md §Fig8 documents the divergence from the paper's
+    // larger gap).
+    assert!(
+        e_coarse > e_fine * 0.93,
+        "coarse saving {e_coarse:.2} far below fine {e_fine:.2}"
+    );
+    assert!(fine.speedup_vs(&dense) > 1.0);
+    assert!(coarse.speedup_vs(&dense) > 1.0);
+    // the fine pattern skips fewer input bits (broadcast groups widen)...
+    assert!(fine.mean_skip_ratio <= coarse.mean_skip_ratio + 1e-12);
+    // ...pays mux routing energy the coarse pattern does not...
+    use ciminus::hw::units::UnitKind;
+    assert!(fine.counters.compute_of(UnitKind::Mux) > 0);
+    assert_eq!(coarse.counters.compute_of(UnitKind::Mux), 0);
+    // ...and stores strictly more index state (Eq. 8)
+    assert!(fine.index_bytes > coarse.index_bytes);
+}
+
+#[test]
+fn prop_sparse_never_slower_than_dense_same_arch() {
+    check("sparse_wins", 12, 0x51A, |g| {
+        let ratio = g.f64_in(0.55, 0.9);
+        let fb = match g.usize_in(0, 2) {
+            0 => FlexBlock::row_wise(ratio),
+            1 => FlexBlock::channel_wise(ratio),
+            _ => FlexBlock::hybrid_row_wise(2, ratio),
+        };
+        let net = zoo::resnet_mini();
+        let arch = presets::usecase_arch(4, (2, 2));
+        let dense = simulate_network_default(&arch, &net, None).map_err(|e| e.to_string())?;
+        let sparse =
+            simulate_network_default(&arch, &net, Some(&fb)).map_err(|e| e.to_string())?;
+        ensure(
+            sparse.total_cycles <= dense.total_cycles,
+            format!(
+                "{} @{ratio:.2}: sparse {} > dense {}",
+                fb.name, sparse.total_cycles, dense.total_cycles
+            ),
+        )
+    });
+}
+
+#[test]
+fn energy_conservation_dynamic_plus_static() {
+    let net = zoo::vgg_mini();
+    let arch = presets::usecase_arch(4, (2, 2));
+    let r = simulate_network_default(&arch, &net, None).unwrap();
+    let sum = r.energy.dynamic_total() + r.energy.static_pj;
+    assert!((sum - r.energy.total_pj).abs() < 1e-6 * r.energy.total_pj);
+}
+
+#[test]
+fn pipeline_latency_at_least_compute() {
+    // Eq. 3 lower bound: total latency ≥ Σ compute cycles of any op chain
+    let net = zoo::resnet_mini();
+    let arch = presets::usecase_arch(4, (2, 2));
+    let r = simulate_network_default(&arch, &net, None).unwrap();
+    let max_op = r.ops.iter().map(|o| o.cycles).max().unwrap();
+    assert!(r.total_cycles >= max_op);
+}
+
+#[test]
+fn sdp_architecture_skips_more_than_mars() {
+    // SDP's 1-row sub-arrays make zero-bit skipping far more effective
+    // than MARS's 64-row groups (Sec. III-B / our model).
+    let net = zoo::resnet18(32, 100);
+    let mars = simulate_network_default(&presets::mars(), &net, None).unwrap();
+    let sdp = simulate_network_default(&presets::sdp(), &net, None).unwrap();
+    assert!(
+        sdp.mean_skip_ratio > mars.mean_skip_ratio,
+        "SDP {} <= MARS {}",
+        sdp.mean_skip_ratio,
+        mars.mean_skip_ratio
+    );
+}
+
+#[test]
+fn index_memory_energy_only_with_sparsity() {
+    let net = zoo::resnet_mini();
+    let arch = presets::usecase_arch(4, (2, 2));
+    let dense = simulate_network_default(&arch, &net, None).unwrap();
+    assert_eq!(dense.counters.reads_of(UnitKind::IndexMem), 0);
+    let sparse =
+        simulate_network_default(&arch, &net, Some(&FlexBlock::row_wise(0.8))).unwrap();
+    assert!(sparse.counters.reads_of(UnitKind::IndexMem) > 0);
+}
+
+#[test]
+fn depthwise_layers_underutilize_arrays() {
+    // MobileNet's depthwise convs map poorly (Fig. 9(b) driver)
+    let net = zoo::mobilenet_mini();
+    let arch = presets::usecase_arch(4, (2, 2));
+    let r = simulate_network_default(&arch, &net, None).unwrap();
+    let dw = r
+        .ops
+        .iter()
+        .find(|o| o.kind == "dwconv")
+        .expect("has depthwise");
+    let conv = r
+        .ops
+        .iter()
+        .filter(|o| o.kind == "conv")
+        .max_by(|a, b| a.utilization.partial_cmp(&b.utilization).unwrap())
+        .unwrap();
+    assert!(
+        dw.utilization < conv.utilization,
+        "dw {} >= conv {}",
+        dw.utilization,
+        conv.utilization
+    );
+}
+
+#[test]
+fn bigger_networks_cost_more() {
+    let arch = presets::usecase_arch(4, (2, 2));
+    let mini = simulate_network_default(&arch, &zoo::resnet_mini(), None).unwrap();
+    let r18 = simulate_network_default(&arch, &zoo::resnet18(32, 100), None).unwrap();
+    let r50 = simulate_network_default(&arch, &zoo::resnet50(32, 100), None).unwrap();
+    assert!(mini.total_cycles < r18.total_cycles);
+    assert!(r18.total_cycles < r50.total_cycles);
+    assert!(mini.energy.total_pj < r18.energy.total_pj);
+    assert!(r18.energy.total_pj < r50.energy.total_pj);
+}

@@ -1,0 +1,127 @@
+//! Integration + property tests across the sparsity stack:
+//! FlexBlock → mask → compression → index accounting invariants.
+
+use ciminus::sparsity::compress::compress;
+use ciminus::sparsity::flexblock::FlexBlock;
+use ciminus::sparsity::index::index_storage;
+use ciminus::sparsity::mask::{mask_stats, random_mask, LayerCtx};
+use ciminus::util::proptest::{check, ensure};
+use ciminus::util::rng::Pcg32;
+
+fn arbitrary_flexblock(g: &mut ciminus::util::proptest::Gen) -> FlexBlock {
+    let r = g.f64_in(0.2, 0.9);
+    match g.usize_in(0, 7) {
+        0 => FlexBlock::row_wise(r),
+        1 => FlexBlock::row_block(*g.choose(&[8, 16, 32]), r),
+        2 => FlexBlock::column_wise(r),
+        3 => FlexBlock::channel_wise(r),
+        4 => FlexBlock::column_block(*g.choose(&[4, 8, 16]), r),
+        5 => FlexBlock::intra(*g.choose(&[2, 4]), 0.5),
+        6 => FlexBlock::hybrid(2, 16, r.max(0.55)),
+        _ => FlexBlock::hybrid_row_wise(2, r.max(0.55)),
+    }
+}
+
+#[test]
+fn prop_compressed_footprint_never_exceeds_original() {
+    check("footprint", 120, 0xA11CE, |g| {
+        let rows = g.usize_in(2, 64) * 4;
+        let cols = g.usize_in(1, 16) * 8;
+        let fb = arbitrary_flexblock(g);
+        let ctx = LayerCtx {
+            per_channel: *g.choose(&[1, 9]),
+        };
+        let mut rng = g.rng.fork(1);
+        let mask = random_mask(&fb, rows, cols, ctx, &mut rng);
+        let l = compress(&fb, &mask, ctx);
+        ensure(
+            l.comp_rows <= rows.max(1),
+            format!("{}: comp_rows {} > {rows}", fb.name, l.comp_rows),
+        )?;
+        ensure(
+            l.comp_cols <= cols,
+            format!("{}: comp_cols {} > {cols}", fb.name, l.comp_cols),
+        )
+    });
+}
+
+#[test]
+fn prop_mask_respects_flexblock_sparsity_level() {
+    check("structure", 80, 0xBEEF, |g| {
+        let fb = arbitrary_flexblock(g);
+        // rows a multiple of 36 = lcm(4, 9) so symbolic per-channel blocks
+        // tile exactly (partial edge blocks skew realized sparsity)
+        let rows = g.usize_in(1, 8) * 36;
+        let cols = g.usize_in(2, 8) * 16;
+        let ctx = LayerCtx { per_channel: 9 };
+        let mut rng = g.rng.fork(2);
+        let mask = random_mask(&fb, rows, cols, ctx, &mut rng);
+        let s = mask_stats(&mask);
+        let want = fb.overall_sparsity();
+        ensure(
+            (s.sparsity - want).abs() < 0.2,
+            format!("{}: sparsity {} vs {}", fb.name, s.sparsity, want),
+        )
+    });
+}
+
+#[test]
+fn prop_index_storage_bounded() {
+    check("index_bound", 80, 0xCAFE, |g| {
+        let fb = arbitrary_flexblock(g);
+        let rows = g.usize_in(4, 32) * 4;
+        let cols = g.usize_in(2, 8) * 8;
+        let ctx = LayerCtx { per_channel: 9 };
+        let mut rng = g.rng.fork(3);
+        let mask = random_mask(&fb, rows, cols, ctx, &mut rng);
+        let l = compress(&fb, &mask, ctx);
+        let idx = index_storage(&fb, &l, ctx);
+        // elem indices never exceed nnz; block indices never exceed grid
+        ensure(
+            idx.n_elem_indices <= l.nnz,
+            format!("{}: elem idx {} > nnz {}", fb.name, idx.n_elem_indices, l.nnz),
+        )?;
+        ensure(
+            idx.n_block_indices <= (rows * cols) as u64,
+            format!("{}: block idx", fb.name),
+        )
+    });
+}
+
+#[test]
+fn prop_higher_ratio_never_increases_footprint() {
+    check("ratio_monotone", 40, 0xD00D, |g| {
+        let rows = 256;
+        let cols = 64;
+        let ctx = LayerCtx::fc();
+        let lo_r = g.f64_in(0.2, 0.5);
+        let hi_r = lo_r + 0.3;
+        let seed = g.rng.next_u64();
+        let lo = FlexBlock::row_wise(lo_r);
+        let hi = FlexBlock::row_wise(hi_r);
+        let ml = random_mask(&lo, rows, cols, ctx, &mut Pcg32::new(seed));
+        let mh = random_mask(&hi, rows, cols, ctx, &mut Pcg32::new(seed));
+        let fl = compress(&lo, &ml, ctx);
+        let fh = compress(&hi, &mh, ctx);
+        ensure(
+            fh.comp_rows <= fl.comp_rows,
+            format!("rows {} > {}", fh.comp_rows, fl.comp_rows),
+        )
+    });
+}
+
+#[test]
+fn hybrid_index_overhead_exceeds_pure_fullblock() {
+    // the paper's "finer granularity → more indexing overhead"
+    let ctx = LayerCtx::fc();
+    let mut rng = Pcg32::new(5);
+    let rows = 512;
+    let cols = 128;
+    let coarse = FlexBlock::row_wise(0.8);
+    let fine = FlexBlock::hybrid(2, 16, 0.8);
+    let cm = random_mask(&coarse, rows, cols, ctx, &mut rng);
+    let fm = random_mask(&fine, rows, cols, ctx, &mut rng);
+    let ci = index_storage(&coarse, &compress(&coarse, &cm, ctx), ctx);
+    let fi = index_storage(&fine, &compress(&fine, &fm, ctx), ctx);
+    assert!(fi.total_bits() > ci.total_bits());
+}

@@ -1,0 +1,67 @@
+//! Integration: workload DAGs ↔ JSON interchange ↔ artifact graphs.
+
+use ciminus::util::json::Json;
+use ciminus::workload::{import, zoo};
+
+#[test]
+fn zoo_networks_all_verify_and_roundtrip() {
+    for name in zoo::ZOO_NAMES {
+        for px in [32, 224] {
+            if name.ends_with("_mini") && px != 32 {
+                continue; // minis are fixed-size; constructor ignores px
+            }
+            let net = zoo::by_name(name, px, 100).unwrap();
+            let j = import::network_to_json(&net);
+            let net2 = import::network_from_json(&j).unwrap();
+            assert_eq!(net.stats(), net2.stats(), "{name}@{px}");
+            assert_eq!(net.mvm_ops(), net2.mvm_ops(), "{name}@{px}");
+        }
+    }
+}
+
+#[test]
+fn artifact_graphs_match_zoo_minis() {
+    // the Python exporter and the rust zoo must describe the same DAG
+    let dir = ciminus::runtime::Artifacts::default_dir();
+    if !ciminus::runtime::Artifacts::available(&dir) {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    for name in ["resnet_mini", "vgg_mini", "mobilenet_mini"] {
+        let path = dir.join(format!("graph_{name}.json"));
+        let imported = import::network_from_file(&path).unwrap();
+        let native = zoo::by_name(name, 16, 10).unwrap();
+        assert_eq!(
+            imported.stats(),
+            native.stats(),
+            "{name}: python-exported graph != rust zoo"
+        );
+        // MVM op names must match exactly (the pruning contract)
+        let mvm_names = |n: &ciminus::workload::graph::Network| -> Vec<String> {
+            n.mvm_ops().iter().map(|&i| n.ops[i].name.clone()).collect()
+        };
+        assert_eq!(mvm_names(&imported), mvm_names(&native), "{name}");
+    }
+}
+
+#[test]
+fn imported_network_rejects_cycles_and_bad_shapes() {
+    let cyclic = r#"{"name":"c","ops":[
+        {"name":"x","kind":"input","shape":[3,8,8]},
+        {"name":"a","kind":"relu","inputs":[2]},
+        {"name":"b","kind":"relu","inputs":[1]}
+    ]}"#;
+    assert!(import::network_from_json(&Json::parse(cyclic).unwrap()).is_err());
+    let bad_shape = r#"{"name":"b","ops":[
+        {"name":"x","kind":"input","shape":[3,8,8]},
+        {"name":"f","kind":"fc","inputs":[0],"in_features":10,"out_features":2}
+    ]}"#;
+    assert!(import::network_from_json(&Json::parse(bad_shape).unwrap()).is_err());
+}
+
+#[test]
+fn macs_scale_with_input_resolution() {
+    let small = zoo::resnet18(32, 100).stats().macs;
+    let big = zoo::resnet18(224, 100).stats().macs;
+    assert!(big > small * 2, "{big} vs {small}");
+}
