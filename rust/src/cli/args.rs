@@ -19,12 +19,7 @@ impl Args {
             if let Some(key) = a.strip_prefix("--") {
                 if let Some((k, v)) = key.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = iter.next().unwrap();
+                } else if let Some(v) = iter.next_if(|n| !n.starts_with("--")) {
                     out.flags.insert(key.to_string(), v);
                 } else {
                     out.flags.insert(key.to_string(), "true".to_string());
@@ -59,6 +54,23 @@ impl Args {
             Some(v) => v
                 .parse()
                 .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    /// Comma-separated float list, e.g. `--rates 0,0.01,0.05`.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> anyhow::Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse().map_err(|_| {
+                        anyhow::anyhow!("--{key} expects comma-separated numbers, got `{s}`")
+                    })
+                })
+                .collect(),
         }
     }
 
@@ -102,5 +114,20 @@ mod tests {
     fn trailing_flag() {
         let a = parse(&["--verbose"]);
         assert!(a.bool("verbose"));
+    }
+
+    #[test]
+    fn float_lists() {
+        let a = parse(&["--rates", "0, 0.01,0.05"]);
+        assert_eq!(a.f64_list_or("rates", &[9.0]).unwrap(), vec![0.0, 0.01, 0.05]);
+        assert_eq!(a.f64_list_or("missing", &[9.0]).unwrap(), vec![9.0]);
+        assert!(parse(&["--rates", "0,abc"]).f64_list_or("rates", &[]).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag_keeps_both() {
+        let a = parse(&["--json", "--arch", "mars"]);
+        assert!(a.bool("json"));
+        assert_eq!(a.str_or("arch", "x"), "mars");
     }
 }

@@ -1,11 +1,12 @@
 //! The `ciminus` command-line interface: simulate | validate | explore |
-//! prune | profile | zoo | report.
+//! faults | prune | profile | zoo | report.
 
 pub mod args;
 pub mod pattern;
 
-use crate::explore::{input_study, mapping_study, sparsity_study};
+use crate::explore::{fault_study, input_study, mapping_study, sparsity_study};
 use crate::hw::arch::Architecture;
+use crate::hw::faults::FaultSpatial;
 use crate::hw::presets;
 use crate::mapping::duplication::{Strategy, StrategyPolicy};
 use crate::mapping::planner::{plan, MappingOptions};
@@ -15,7 +16,7 @@ use crate::sim::engine::{simulate, SimOptions};
 use crate::sim::input_sparsity::InputProfiles;
 use crate::util::json::Json;
 use crate::workload::{graph::Network, import, zoo};
-use anyhow::Result;
+use anyhow::{Context, Result};
 use args::Args;
 use pattern::parse_pattern;
 
@@ -30,6 +31,10 @@ commands:
             [--no-input-sparsity] [--detail]
   validate                         Fig. 6 validation vs MARS/SDP
   explore   --study fig8|fig9|fig10|fig11|fig12 [--model M] [--threads N]
+  faults    --arch <preset|file>[,...] [--model M] [--pattern P --ratio R]
+            [--rates r1,r2,...] [--spatial uniform|row|column|cluster]
+            [--seed N] [--json] [--threads N]
+                                   fault-injection resilience curves
   prune     --model <mini> --pattern P --ratio R [--artifacts DIR]
                                    PJRT accuracy eval of pruned artifacts
   profile   --model <mini> [--artifacts DIR]
@@ -47,7 +52,10 @@ patterns: row_wise | row_block[:w] | column_wise | channel_wise |
 
 fn load_arch(spec: &str) -> Result<Architecture> {
     if spec.ends_with(".json") {
-        Architecture::from_json(&Json::parse_file(std::path::Path::new(spec))?)
+        let j = Json::parse_file(std::path::Path::new(spec))
+            .with_context(|| format!("reading architecture file `{spec}`"))?;
+        Architecture::from_json(&j)
+            .with_context(|| format!("parsing architecture from `{spec}`"))
     } else {
         presets::by_name(spec)
     }
@@ -56,6 +64,7 @@ fn load_arch(spec: &str) -> Result<Architecture> {
 fn load_net(spec: &str) -> Result<Network> {
     if spec.ends_with(".json") {
         import::network_from_file(std::path::Path::new(spec))
+            .with_context(|| format!("loading network from `{spec}`"))
     } else {
         zoo::by_name(spec, 32, 100)
     }
@@ -74,6 +83,7 @@ pub fn run<I: IntoIterator<Item = String>>(raw: I) -> Result<i32> {
         "simulate" => cmd_simulate(&a),
         "validate" => cmd_validate(&a),
         "explore" => cmd_explore(&a),
+        "faults" => cmd_faults(&a),
         "prune" => cmd_prune(&a),
         "profile" => cmd_profile(&a),
         "report" => cmd_report(&a),
@@ -227,6 +237,42 @@ fn cmd_explore(a: &Args) -> Result<i32> {
             println!("{}", crate::report::rearrange_table(&pts).render());
         }
         other => anyhow::bail!("unknown study `{other}`"),
+    }
+    Ok(0)
+}
+
+fn cmd_faults(a: &Args) -> Result<i32> {
+    let net = load_net(a.str_or("model", "resnet_mini"))?;
+    let ratio = a.f64_or("ratio", 0.8)?;
+    let fb = parse_pattern(a.str_or("pattern", "dense"), ratio)?;
+    let rates = a.f64_list_or("rates", &fault_study::DEFAULT_RATES)?;
+    let spatial = FaultSpatial::parse(a.str_or("spatial", "uniform"))?;
+    let seed = a.usize_or("seed", 0xC1A0)? as u64;
+    let threads = a.usize_or("threads", 0)?;
+    let fb_opt = (!fb.is_dense()).then_some(&fb);
+    let mut all_points = Vec::new();
+    for spec in a.str_or("arch", "usecase4,mars").split(',') {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            continue;
+        }
+        let arch = load_arch(spec)?;
+        let pts =
+            fault_study::run_resilience(&arch, &net, fb_opt, &rates, spatial, seed, threads)?;
+        if !a.bool("json") {
+            println!(
+                "{}",
+                crate::report::fault_table(
+                    &format!("Fault resilience: {} on {} [{}]", net.name, arch.name, fb.name),
+                    &pts
+                )
+                .render()
+            );
+        }
+        all_points.extend(pts);
+    }
+    if a.bool("json") {
+        println!("{}", fault_study::points_to_json(&all_points).pretty());
     }
     Ok(0)
 }
@@ -421,6 +467,16 @@ mod tests {
             run(vec!["zoo".to_string(), "vgg_mini".to_string()]).unwrap(),
             0
         );
+    }
+
+    #[test]
+    fn faults_command_runs() {
+        let args = ["faults", "--model", "resnet_mini", "--arch", "usecase4", "--rates", "0,0.05"];
+        assert_eq!(run(args.iter().map(|s| s.to_string())).unwrap(), 0);
+        let args = [
+            "faults", "--model", "resnet_mini", "--arch", "usecase4", "--rates", "0", "--json",
+        ];
+        assert_eq!(run(args.iter().map(|s| s.to_string())).unwrap(), 0);
     }
 
     #[test]

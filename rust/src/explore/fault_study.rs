@@ -1,0 +1,244 @@
+//! Fault-resilience exploration: sweep fault density × sparsity pattern
+//! on a preset architecture and report the graceful-degradation curve —
+//! latency/energy overhead, surviving capacity and extra rounds vs. the
+//! fault-free chip. The scenario axis no ideal-hardware framework
+//! covers: how much performance a mapped sparse workload loses as the
+//! silicon degrades, and at what fault density the chip stops being
+//! usable at all.
+
+use super::sweep::parallel_map;
+use crate::hw::arch::Architecture;
+use crate::hw::faults::{FaultModel, FaultSpatial};
+use crate::mapping::planner::{plan, MappingOptions};
+use crate::pruning::workflow::{PrunePlan, PruningWorkflow};
+use crate::sim::engine::{simulate, SimOptions};
+use crate::sim::input_sparsity::InputProfiles;
+use crate::sim::report::SimReport;
+use crate::sparsity::flexblock::FlexBlock;
+use crate::util::json::Json;
+use crate::workload::graph::Network;
+
+/// Default fault-rate axis for resilience curves (0 anchors the
+/// fault-free baseline point).
+pub const DEFAULT_RATES: [f64; 6] = [0.0, 0.001, 0.005, 0.02, 0.05, 0.1];
+
+/// One point of a resilience curve.
+#[derive(Debug, Clone)]
+pub struct ResiliencePoint {
+    pub arch: String,
+    pub pattern: String,
+    pub spatial: String,
+    pub fault_rate: f64,
+    pub usable_macros: usize,
+    pub total_macros: usize,
+    /// Fraction of weight capacity lost to faults.
+    pub capacity_loss: f64,
+    /// Extra temporal rounds forced by the degradation.
+    pub extra_rounds: u64,
+    pub cycles: u64,
+    pub energy_pj: f64,
+    /// Latency relative to the fault-free chip (1.0 at rate 0).
+    pub latency_overhead: f64,
+    /// Energy relative to the fault-free chip (1.0 at rate 0).
+    pub energy_overhead: f64,
+    /// `false` when the chip was unusable at this fault density (the
+    /// cliff edge of the curve; overheads are meaningless there).
+    pub usable: bool,
+}
+
+fn simulate_arch(
+    arch: &Architecture,
+    net: &Network,
+    prune: Option<&PrunePlan>,
+    profiles: &InputProfiles,
+) -> anyhow::Result<SimReport> {
+    let mapping = plan(arch, net, prune, MappingOptions::default())?;
+    simulate(arch, net, &mapping, Some(profiles), SimOptions::default())
+}
+
+/// Sweep `rates` on `arch` (one spatial distribution, one sparsity
+/// pattern) and return the resilience curve. The same pruning masks and
+/// activation profiles are reused across all points, so differences are
+/// purely fault-induced. Rates at which the chip is unusable yield
+/// points with `usable: false` instead of failing the whole sweep.
+pub fn run_resilience(
+    arch: &Architecture,
+    net: &Network,
+    fb: Option<&FlexBlock>,
+    rates: &[f64],
+    spatial: FaultSpatial,
+    seed: u64,
+    threads: usize,
+) -> anyhow::Result<Vec<ResiliencePoint>> {
+    let prune = match fb {
+        Some(fb) if !fb.is_dense() => {
+            Some(PruningWorkflow::default().run_uniform(net, fb, None)?)
+        }
+        _ => None,
+    };
+    let profiles = InputProfiles::synthetic(net, arch.input_bits, 0.55, 0xFA17);
+    let mut clean = arch.clone();
+    clean.faults = FaultModel::none();
+    let baseline = simulate_arch(&clean, net, prune.as_ref(), &profiles)?;
+    let pattern = fb.map(|f| f.name.clone()).unwrap_or_else(|| "Dense".into());
+
+    let results = parallel_map(rates.to_vec(), threads, |rate| {
+        let mut a = arch.clone();
+        a.faults = FaultModel::scaled(rate, spatial, seed);
+        let rep = simulate_arch(&a, net, prune.as_ref(), &profiles);
+        (rate, rep)
+    });
+
+    let mut out = Vec::with_capacity(results.len());
+    for (rate, rep) in results {
+        let point = match rep {
+            Ok(rep) => {
+                let (usable_macros, capacity_loss, extra_rounds) = match &rep.faults {
+                    Some(f) => (f.usable_macros, f.capacity_loss, f.extra_rounds()),
+                    None => (arch.org.n_macros(), 0.0, 0),
+                };
+                ResiliencePoint {
+                    arch: arch.name.clone(),
+                    pattern: pattern.clone(),
+                    spatial: spatial.label().into(),
+                    fault_rate: rate,
+                    usable_macros,
+                    total_macros: arch.org.n_macros(),
+                    capacity_loss,
+                    extra_rounds,
+                    cycles: rep.total_cycles,
+                    energy_pj: rep.energy.total_pj,
+                    latency_overhead: rep.total_cycles as f64
+                        / baseline.total_cycles.max(1) as f64,
+                    energy_overhead: rep.energy.total_pj / baseline.energy.total_pj.max(1e-12),
+                    usable: true,
+                }
+            }
+            // the cliff edge: chip unusable at this density
+            Err(_) => ResiliencePoint {
+                arch: arch.name.clone(),
+                pattern: pattern.clone(),
+                spatial: spatial.label().into(),
+                fault_rate: rate,
+                usable_macros: 0,
+                total_macros: arch.org.n_macros(),
+                capacity_loss: 1.0,
+                extra_rounds: 0,
+                cycles: 0,
+                energy_pj: 0.0,
+                latency_overhead: f64::INFINITY,
+                energy_overhead: f64::INFINITY,
+                usable: false,
+            },
+        };
+        out.push(point);
+    }
+    Ok(out)
+}
+
+/// Serialize a resilience curve as a JSON array (the `faults --json`
+/// output format).
+pub fn points_to_json(points: &[ResiliencePoint]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                let mut j = Json::obj();
+                j.set("arch", Json::Str(p.arch.clone()))
+                    .set("pattern", Json::Str(p.pattern.clone()))
+                    .set("spatial", Json::Str(p.spatial.clone()))
+                    .set("fault_rate", Json::Num(p.fault_rate))
+                    .set("usable_macros", Json::Num(p.usable_macros as f64))
+                    .set("total_macros", Json::Num(p.total_macros as f64))
+                    .set("capacity_loss", Json::Num(p.capacity_loss))
+                    .set("extra_rounds", Json::Num(p.extra_rounds as f64))
+                    .set("cycles", Json::Num(p.cycles as f64))
+                    .set("energy_pj", Json::Num(p.energy_pj))
+                    .set(
+                        "latency_overhead",
+                        if p.usable {
+                            Json::Num(p.latency_overhead)
+                        } else {
+                            Json::Null
+                        },
+                    )
+                    .set(
+                        "energy_overhead",
+                        if p.usable {
+                            Json::Num(p.energy_overhead)
+                        } else {
+                            Json::Null
+                        },
+                    )
+                    .set("usable", Json::Bool(p.usable));
+                j
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+    use crate::workload::zoo;
+
+    #[test]
+    fn curve_is_monotone_and_anchored() {
+        let arch = presets::usecase_arch(4, (2, 2));
+        let net = zoo::resnet_mini();
+        let pts = run_resilience(
+            &arch,
+            &net,
+            None,
+            &[0.0, 0.02, 0.1],
+            FaultSpatial::Uniform,
+            0xBEEF,
+            0,
+        )
+        .unwrap();
+        assert_eq!(pts.len(), 3);
+        assert!((pts[0].latency_overhead - 1.0).abs() < 1e-12, "rate 0 = baseline");
+        assert!((pts[0].energy_overhead - 1.0).abs() < 1e-12);
+        for w in pts.windows(2) {
+            assert!(
+                w[1].latency_overhead >= w[0].latency_overhead,
+                "latency overhead monotone: {} -> {}",
+                w[0].latency_overhead,
+                w[1].latency_overhead
+            );
+            assert!(w[1].capacity_loss >= w[0].capacity_loss);
+        }
+        assert!(pts[2].latency_overhead > 1.0, "10% faults cost something");
+    }
+
+    #[test]
+    fn unusable_rates_survive_as_cliff_points() {
+        let arch = presets::usecase_arch(4, (2, 2));
+        let net = zoo::resnet_mini();
+        // rate 1.0 with Row spatial quarantines every row of every macro
+        // (next_f64() < 1.0 always), so the chip is provably unusable.
+        let pts = run_resilience(&arch, &net, None, &[0.0, 1.0], FaultSpatial::Row, 1, 0).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert!(pts[0].usable);
+        assert!(!pts[1].usable, "fully-faulted chip is a cliff point");
+        assert!(!pts[1].latency_overhead.is_finite());
+        assert_eq!(pts[1].usable_macros, 0);
+    }
+
+    #[test]
+    fn json_serialization_roundtrips() {
+        let arch = presets::usecase_arch(4, (2, 2));
+        let net = zoo::resnet_mini();
+        let pts =
+            run_resilience(&arch, &net, None, &[0.0], FaultSpatial::Cluster, 2, 0).unwrap();
+        let j = points_to_json(&pts);
+        let text = j.pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.as_arr().unwrap().len(), 1);
+        assert_eq!(
+            back.as_arr().unwrap()[0].get("arch").unwrap().as_str(),
+            Some(arch.name.as_str())
+        );
+    }
+}

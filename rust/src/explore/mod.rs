@@ -2,6 +2,7 @@
 //! the study drivers behind Fig. 8–12.
 
 pub mod ablation_study;
+pub mod fault_study;
 pub mod input_study;
 pub mod mapping_study;
 pub mod search;

@@ -4,6 +4,7 @@
 use super::buffer::Buffer;
 use super::cim_macro::CimMacro;
 use super::energy::EnergyTable;
+use super::faults::FaultModel;
 use super::org::MacroOrg;
 use crate::util::json::Json;
 
@@ -69,6 +70,9 @@ pub struct Architecture {
     pub index_mem: Buffer,
     pub energy: EnergyTable,
     pub sparsity: SparsitySupport,
+    /// Injected silicon faults (the all-zero default is fault-free and
+    /// guaranteed not to perturb any result).
+    pub faults: FaultModel,
 }
 
 impl Architecture {
@@ -96,6 +100,7 @@ impl Architecture {
                 anyhow::bail!("buffer `{}` must have positive size and bandwidth", b.name);
             }
         }
+        self.faults.validate()?;
         Ok(())
     }
 
@@ -185,6 +190,9 @@ impl Architecture {
             a.sparsity.weight_routing = s.opt_bool("weight_routing", a.sparsity.weight_routing);
             a.sparsity.input_skipping = s.opt_bool("input_skipping", a.sparsity.input_skipping);
         }
+        if let Some(f) = j.get("faults") {
+            a.faults = FaultModel::from_json(f)?;
+        }
         a.validate()?;
         Ok(a)
     }
@@ -232,6 +240,24 @@ mod tests {
         assert!(a.global_in_buf.ping_pong);
         assert!(!a.sparsity.input_skipping);
         assert_eq!(a.org.n_macros(), 4);
+    }
+
+    #[test]
+    fn json_faults_overlay() {
+        let j = Json::parse(
+            r#"{"faults": {"seed": 9, "stuck_cell_rate": 0.01, "spatial": "cluster"}}"#,
+        )
+        .unwrap();
+        let a = Architecture::from_json(&j).unwrap();
+        assert_eq!(a.faults.seed, 9);
+        assert_eq!(a.faults.spatial, crate::hw::faults::FaultSpatial::Cluster);
+        assert!(!a.faults.is_zero());
+        // default architectures are fault-free
+        let clean = Architecture::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(clean.faults.is_zero());
+        // out-of-range rates rejected
+        let bad = Json::parse(r#"{"faults": {"dead_macro_rate": 2.0}}"#).unwrap();
+        assert!(Architecture::from_json(&bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,448 @@
+//! Fault injection for CIM macros: a deterministic, seedable model of
+//! the silicon-degradation mechanisms that matter for SRAM-based CIM —
+//! stuck-at weight cells (with uniform / row / column / cluster spatial
+//! distributions), dead ADC/mux columns, and whole-macro failures.
+//!
+//! The model is *capacity-oriented*: faults are reduced to per-macro
+//! rectangular damage (quarantined rows + lost columns + dead macros),
+//! the repair granularity real designs use (spare rows/columns, macro
+//! disable fuses). The mapping planner consumes the resulting
+//! [`FaultMap`] to shrink the usable geometry and spill work into extra
+//! rounds; the simulator charges the repair-write traffic.
+//!
+//! Determinism contract: for a fixed seed, the fault set grows
+//! monotonically with each rate — every macro consumes a *fixed* number
+//! of RNG draws regardless of the rates, and each draw is compared
+//! against a threshold monotone in the rate. Raising a rate can only
+//! convert healthy draws to faulty ones, never the reverse. This is what
+//! makes resilience curves monotone and reproducible.
+
+use super::cim_macro::CimMacro;
+use super::org::MacroOrg;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Stream-id base for fault instantiation, so fault draws never collide
+/// with mask-generation or sweep streams derived from the same seed.
+const FAULT_STREAM: u64 = 0xFA_017_5EED;
+
+/// Spatial distribution of stuck-at weight cells.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSpatial {
+    /// Independent cell faults; a row is quarantined if any cell in it
+    /// is stuck (p_row = 1 - (1-p)^cols).
+    Uniform,
+    /// Whole-row defects (wordline driver / row periphery): each row is
+    /// quarantined with probability p.
+    Row,
+    /// Column-correlated defects (bitline / ADC drift): each column is
+    /// lost with probability p, on top of `dead_column_rate`.
+    Column,
+    /// Clustered blobs at sub-array granularity: one defect takes out a
+    /// sub-array, quarantining its whole row group
+    /// (p_group = 1 - (1-p)^(cols/sub_cols)).
+    Cluster,
+}
+
+impl FaultSpatial {
+    pub fn parse(s: &str) -> anyhow::Result<FaultSpatial> {
+        Ok(match s {
+            "uniform" => FaultSpatial::Uniform,
+            "row" => FaultSpatial::Row,
+            "column" => FaultSpatial::Column,
+            "cluster" => FaultSpatial::Cluster,
+            other => anyhow::bail!(
+                "unknown fault spatial distribution `{other}` (uniform|row|column|cluster)"
+            ),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultSpatial::Uniform => "uniform",
+            FaultSpatial::Row => "row",
+            FaultSpatial::Column => "column",
+            FaultSpatial::Cluster => "cluster",
+        }
+    }
+}
+
+/// Seedable fault model attached to an [`crate::hw::arch::Architecture`].
+/// All rates are probabilities in [0, 1]; the all-zero model is the
+/// fault-free default and is guaranteed not to perturb any result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultModel {
+    pub seed: u64,
+    /// Per-cell stuck-at probability (interpretation depends on
+    /// `spatial`; see [`FaultSpatial`]).
+    pub stuck_cell_rate: f64,
+    pub spatial: FaultSpatial,
+    /// Probability that a column's ADC/mux path is dead.
+    pub dead_column_rate: f64,
+    /// Probability that an entire macro is fused off.
+    pub dead_macro_rate: f64,
+}
+
+impl FaultModel {
+    /// The fault-free model (the default for every preset).
+    pub fn none() -> FaultModel {
+        FaultModel {
+            seed: 0,
+            stuck_cell_rate: 0.0,
+            spatial: FaultSpatial::Uniform,
+            dead_column_rate: 0.0,
+            dead_macro_rate: 0.0,
+        }
+    }
+
+    /// A single-knob model for resilience sweeps: stuck cells at `rate`,
+    /// dead columns at `rate/4`, dead macros at `rate/8` — all monotone
+    /// in `rate`, so the induced fault map grows with it.
+    pub fn scaled(rate: f64, spatial: FaultSpatial, seed: u64) -> FaultModel {
+        FaultModel {
+            seed,
+            stuck_cell_rate: rate,
+            spatial,
+            dead_column_rate: rate / 4.0,
+            dead_macro_rate: rate / 8.0,
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.stuck_cell_rate == 0.0 && self.dead_column_rate == 0.0 && self.dead_macro_rate == 0.0
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, r) in [
+            ("stuck_cell_rate", self.stuck_cell_rate),
+            ("dead_column_rate", self.dead_column_rate),
+            ("dead_macro_rate", self.dead_macro_rate),
+        ] {
+            if !(0.0..=1.0).contains(&r) || r.is_nan() {
+                anyhow::bail!("fault {name} must be in [0, 1], got {r}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse from the `"faults"` object of a JSON architecture config.
+    pub fn from_json(j: &Json) -> anyhow::Result<FaultModel> {
+        let fm = FaultModel {
+            seed: j.opt_usize("seed", 0) as u64,
+            stuck_cell_rate: j.opt_f64("stuck_cell_rate", 0.0),
+            spatial: FaultSpatial::parse(j.opt_str("spatial", "uniform"))?,
+            dead_column_rate: j.opt_f64("dead_column_rate", 0.0),
+            dead_macro_rate: j.opt_f64("dead_macro_rate", 0.0),
+        };
+        fm.validate()?;
+        Ok(fm)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("seed", Json::Num(self.seed as f64))
+            .set("stuck_cell_rate", Json::Num(self.stuck_cell_rate))
+            .set("spatial", Json::Str(self.spatial.label().into()))
+            .set("dead_column_rate", Json::Num(self.dead_column_rate))
+            .set("dead_macro_rate", Json::Num(self.dead_macro_rate));
+        j
+    }
+
+    /// Instantiate the concrete fault map for one chip: deterministic in
+    /// (seed, geometry), monotone in each rate (see module docs).
+    pub fn instantiate(&self, cim: &CimMacro, org: &MacroOrg) -> FaultMap {
+        let n = org.n_macros();
+        let mut macros = Vec::with_capacity(n);
+        for m in 0..n {
+            // independent per-macro stream: adding macros never perturbs
+            // the fault draws of existing ones
+            let mut rng = Pcg32::with_stream(
+                self.seed,
+                FAULT_STREAM ^ (m as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            let dead = rng.next_f64() < self.dead_macro_rate;
+            let mut lost_cols = 0usize;
+            for _ in 0..cim.cols {
+                if rng.next_f64() < self.dead_column_rate {
+                    lost_cols += 1;
+                }
+            }
+            let p = self.stuck_cell_rate;
+            let mut lost_rows = 0usize;
+            match self.spatial {
+                FaultSpatial::Uniform => {
+                    let p_row = 1.0 - (1.0 - p).powi(cim.cols as i32);
+                    for _ in 0..cim.rows {
+                        if rng.next_f64() < p_row {
+                            lost_rows += 1;
+                        }
+                    }
+                }
+                FaultSpatial::Row => {
+                    for _ in 0..cim.rows {
+                        if rng.next_f64() < p {
+                            lost_rows += 1;
+                        }
+                    }
+                }
+                FaultSpatial::Column => {
+                    for _ in 0..cim.cols {
+                        if rng.next_f64() < p {
+                            lost_cols += 1;
+                        }
+                    }
+                }
+                FaultSpatial::Cluster => {
+                    let groups = (cim.rows / cim.sub_rows.max(1)).max(1);
+                    let subs_per_group = (cim.cols / cim.sub_cols.max(1)).max(1);
+                    let p_group = 1.0 - (1.0 - p).powi(subs_per_group as i32);
+                    for _ in 0..groups {
+                        if rng.next_f64() < p_group {
+                            lost_rows += cim.sub_rows;
+                        }
+                    }
+                }
+            }
+            macros.push(MacroHealth {
+                dead,
+                lost_rows: lost_rows.min(cim.rows),
+                lost_cols: lost_cols.min(cim.cols),
+            });
+        }
+        FaultMap {
+            macros,
+            rows: cim.rows,
+            cols: cim.cols,
+            sub_rows: cim.sub_rows,
+            sub_cols: cim.sub_cols,
+        }
+    }
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        FaultModel::none()
+    }
+}
+
+/// One macro's rectangular damage summary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MacroHealth {
+    /// Whole macro fused off.
+    pub dead: bool,
+    /// Rows quarantined by stuck cells (spare-row repair granularity).
+    pub lost_rows: usize,
+    /// Columns lost to dead ADC/mux paths or column-correlated faults.
+    pub lost_cols: usize,
+}
+
+impl MacroHealth {
+    pub fn is_healthy(&self) -> bool {
+        !self.dead && self.lost_rows == 0 && self.lost_cols == 0
+    }
+}
+
+/// A concrete instantiation of a [`FaultModel`] on one chip.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultMap {
+    pub macros: Vec<MacroHealth>,
+    /// Full (fault-free) macro geometry the damage is relative to.
+    pub rows: usize,
+    pub cols: usize,
+    pub sub_rows: usize,
+    pub sub_cols: usize,
+}
+
+impl FaultMap {
+    /// No faults at all — guaranteed bit-identical behavior to the
+    /// fault-free path.
+    pub fn is_clean(&self) -> bool {
+        self.macros.iter().all(|h| h.is_healthy())
+    }
+
+    /// One macro's usable geometry, floored to sub-array multiples (the
+    /// sub-array is the adder-tree granularity; partial sub-arrays cannot
+    /// be salvaged). `None` when the macro is dead or the damage consumes
+    /// a full dimension — such a macro is fused off like a dead one, so a
+    /// single bad column in a one-sub-array-wide macro degrades the chip
+    /// by one macro instead of bricking it.
+    pub fn macro_geometry(&self, h: &MacroHealth) -> Option<(usize, usize)> {
+        if h.dead {
+            return None;
+        }
+        let good_r = (self.rows - h.lost_rows) / self.sub_rows * self.sub_rows;
+        let good_c = (self.cols - h.lost_cols) / self.sub_cols * self.sub_cols;
+        if good_r == 0 || good_c == 0 {
+            return None;
+        }
+        Some((good_r, good_c))
+    }
+
+    /// Macros that can still hold weights (non-zero usable geometry).
+    pub fn usable_macros(&self) -> usize {
+        self.macros
+            .iter()
+            .filter(|h| self.macro_geometry(h).is_some())
+            .count()
+    }
+
+    /// The common usable geometry across all usable macros (the
+    /// uniform-tile mapping abstraction needs one geometry, so the
+    /// weakest surviving macro governs). `(0, 0)` when no macro survives.
+    pub fn effective_geometry(&self) -> (usize, usize) {
+        let mut eff_r = usize::MAX;
+        let mut eff_c = usize::MAX;
+        let mut any = false;
+        for h in &self.macros {
+            if let Some((good_r, good_c)) = self.macro_geometry(h) {
+                any = true;
+                eff_r = eff_r.min(good_r);
+                eff_c = eff_c.min(good_c);
+            }
+        }
+        if !any {
+            return (0, 0);
+        }
+        (eff_r, eff_c)
+    }
+
+    /// Fraction of total weight capacity lost to faults, counting each
+    /// macro's floored usable geometry (what the mapping can actually
+    /// use). Monotone in the fault set: damage only shrinks per-macro
+    /// geometry, and crossing the fused-off threshold is one-way.
+    pub fn capacity_loss(&self) -> f64 {
+        let per = (self.rows * self.cols) as f64;
+        let total = per * self.macros.len() as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        let good: f64 = self
+            .macros
+            .iter()
+            .filter_map(|h| self.macro_geometry(h))
+            .map(|(r, c)| (r * c) as f64)
+            .sum();
+        1.0 - good / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    fn geom() -> (CimMacro, MacroOrg) {
+        let a = presets::usecase_arch(4, (2, 2));
+        (a.cim, a.org)
+    }
+
+    #[test]
+    fn zero_model_yields_clean_map() {
+        let (cim, org) = geom();
+        let m = FaultModel::none();
+        assert!(m.is_zero());
+        let map = m.instantiate(&cim, &org);
+        assert!(map.is_clean());
+        assert_eq!(map.usable_macros(), 4);
+        assert_eq!(map.effective_geometry(), (cim.rows, cim.cols));
+        assert_eq!(map.capacity_loss(), 0.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (cim, org) = geom();
+        let m = FaultModel::scaled(0.05, FaultSpatial::Uniform, 42);
+        assert_eq!(m.instantiate(&cim, &org), m.instantiate(&cim, &org));
+        let other = FaultModel::scaled(0.05, FaultSpatial::Uniform, 43);
+        assert_ne!(m.instantiate(&cim, &org), other.instantiate(&cim, &org));
+    }
+
+    #[test]
+    fn fault_map_grows_monotonically_with_rate() {
+        let (cim, org) = geom();
+        for spatial in [
+            FaultSpatial::Uniform,
+            FaultSpatial::Row,
+            FaultSpatial::Column,
+            FaultSpatial::Cluster,
+        ] {
+            let mut prev_loss = -1.0;
+            let mut prev_usable = usize::MAX;
+            for rate in [0.0, 0.005, 0.02, 0.08, 0.3] {
+                let map = FaultModel::scaled(rate, spatial, 7).instantiate(&cim, &org);
+                let loss = map.capacity_loss();
+                assert!(
+                    loss >= prev_loss,
+                    "{}: loss {loss} < {prev_loss} at rate {rate}",
+                    spatial.label()
+                );
+                assert!(map.usable_macros() <= prev_usable);
+                prev_loss = loss;
+                prev_usable = map.usable_macros();
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_quarantines_whole_row_groups() {
+        let (cim, org) = geom();
+        let map = FaultModel {
+            seed: 3,
+            stuck_cell_rate: 0.5,
+            spatial: FaultSpatial::Cluster,
+            dead_column_rate: 0.0,
+            dead_macro_rate: 0.0,
+        }
+        .instantiate(&cim, &org);
+        for h in &map.macros {
+            assert_eq!(h.lost_rows % cim.sub_rows, 0, "row-group granularity");
+        }
+        assert!(map.macros.iter().any(|h| h.lost_rows > 0));
+    }
+
+    #[test]
+    fn effective_geometry_is_subarray_aligned() {
+        let (cim, org) = geom();
+        let map = FaultModel::scaled(0.03, FaultSpatial::Uniform, 11).instantiate(&cim, &org);
+        let (r, c) = map.effective_geometry();
+        assert_eq!(r % cim.sub_rows, 0);
+        assert_eq!(c % cim.sub_cols, 0);
+        assert!(r < cim.rows, "uniform faults at 3% quarantine some rows");
+    }
+
+    #[test]
+    fn all_macros_dead_gives_zero_geometry() {
+        let (cim, org) = geom();
+        let map = FaultModel {
+            seed: 1,
+            stuck_cell_rate: 0.0,
+            spatial: FaultSpatial::Uniform,
+            dead_column_rate: 0.0,
+            dead_macro_rate: 1.0,
+        }
+        .instantiate(&cim, &org);
+        assert_eq!(map.usable_macros(), 0);
+        assert_eq!(map.effective_geometry(), (0, 0));
+        assert!((map.capacity_loss() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip_and_validation() {
+        let m = FaultModel::scaled(0.01, FaultSpatial::Cluster, 99);
+        let j = m.to_json();
+        let m2 = FaultModel::from_json(&j).unwrap();
+        assert_eq!(m, m2);
+        let bad = Json::parse(r#"{"stuck_cell_rate": 1.5}"#).unwrap();
+        assert!(FaultModel::from_json(&bad).is_err());
+        let bad_spatial = Json::parse(r#"{"spatial": "diagonal"}"#).unwrap();
+        assert!(FaultModel::from_json(&bad_spatial).is_err());
+    }
+
+    #[test]
+    fn spatial_parse_labels() {
+        for s in ["uniform", "row", "column", "cluster"] {
+            assert_eq!(FaultSpatial::parse(s).unwrap().label(), s);
+        }
+        assert!(FaultSpatial::parse("nope").is_err());
+    }
+}

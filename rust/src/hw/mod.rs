@@ -6,6 +6,7 @@ pub mod arch;
 pub mod buffer;
 pub mod cim_macro;
 pub mod energy;
+pub mod faults;
 pub mod org;
 pub mod presets;
 pub mod units;
@@ -14,5 +15,6 @@ pub use arch::{Architecture, SparsitySupport};
 pub use buffer::Buffer;
 pub use cim_macro::CimMacro;
 pub use energy::{EnergyTable, UnitEnergy};
+pub use faults::{FaultMap, FaultModel, FaultSpatial, MacroHealth};
 pub use org::MacroOrg;
 pub use units::{UnitCounts, UnitKind};

@@ -3,6 +3,7 @@
 //! Sec. VII-A.
 
 use super::arch::{Architecture, SparsitySupport};
+use super::faults::FaultModel;
 use super::buffer::Buffer;
 use super::cim_macro::CimMacro;
 use super::energy::EnergyTable;
@@ -32,6 +33,7 @@ pub fn mars() -> Architecture {
             weight_indexing: true,
             input_skipping: true,
         },
+        faults: FaultModel::none(),
     }
 }
 
@@ -56,6 +58,7 @@ pub fn sdp() -> Architecture {
         index_mem: Buffer::new("index_mem", 16 * 1024, 32, false).with_bandwidth(128.0),
         energy: EnergyTable::preset_28nm(),
         sparsity: SparsitySupport::full(),
+        faults: FaultModel::none(),
     }
 }
 
@@ -85,6 +88,7 @@ pub fn usecase_arch(n_macros: usize, org: (usize, usize)) -> Architecture {
         index_mem: Buffer::new("index_mem", 16 * 1024, 32, false),
         energy: EnergyTable::preset_28nm(),
         sparsity: SparsitySupport::full(),
+        faults: FaultModel::none(),
     }
 }
 

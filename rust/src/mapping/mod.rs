@@ -11,7 +11,9 @@ pub mod tiling;
 
 pub use duplication::{Strategy, StrategyPolicy};
 pub use loopnest::{Binding, Loop, LoopAxis, Loopnest};
-pub use planner::{plan, MappingOptions, MappingPlan, OpMapping};
+pub use planner::{
+    plan, plan_with_faults, FaultPlanSummary, MappingOptions, MappingPlan, OpMapping,
+};
 pub use rearrange::{rearrange, Rearranged};
 pub use reshape::Flattening;
 pub use tiling::{tile_op, MacroTile, OpTiling, Round};

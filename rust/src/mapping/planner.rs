@@ -7,8 +7,10 @@ use super::duplication::{Strategy, StrategyPolicy};
 use super::loopnest::{Binding, Loop, LoopAxis, Loopnest};
 use super::rearrange::rearrange;
 use super::reshape::Flattening;
-use super::tiling::{tile_op, OpTiling};
+use super::tiling::{mean_utilization, tile_op, MacroTile, OpTiling, Round};
 use crate::hw::arch::Architecture;
+use crate::hw::cim_macro::CimMacro;
+use crate::hw::faults::FaultMap;
 use crate::pruning::workflow::PrunePlan;
 use crate::sparsity::compress::{compress, CompressedLayout};
 use crate::sparsity::flexblock::FlexBlock;
@@ -51,7 +53,38 @@ pub struct OpMapping {
     pub strategy: Strategy,
     pub index: IndexStorage,
     pub rearrange_moved_bytes: u64,
+    /// Weight bytes relocated off faulty rows/columns/macros (repair
+    /// writes); 0 on the fault-free path.
+    pub fault_moved_bytes: u64,
     pub loopnest: Loopnest,
+}
+
+/// Degradation bookkeeping attached to a plan built against a faulty
+/// chip: what capacity was lost and what it cost the schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlanSummary {
+    pub total_macros: usize,
+    pub usable_macros: usize,
+    /// Fault-free macro geometry (rows, cols).
+    pub full_geometry: (usize, usize),
+    /// Common usable geometry after quarantine, sub-array aligned.
+    pub effective_geometry: (usize, usize),
+    /// Exact fraction of weight capacity lost (before alignment).
+    pub capacity_loss: f64,
+    /// Total rounds the same (layout, strategy) choices would need on
+    /// the fault-free chip.
+    pub baseline_rounds: u64,
+    /// Total rounds after degradation (shrunken tiles + spilled macros).
+    pub degraded_rounds: u64,
+    /// Total repair-write bytes across all ops.
+    pub repair_bytes: u64,
+}
+
+impl FaultPlanSummary {
+    /// Extra temporal rounds forced by the faults.
+    pub fn extra_rounds(&self) -> u64 {
+        self.degraded_rounds.saturating_sub(self.baseline_rounds)
+    }
 }
 
 /// Whole-network mapping.
@@ -59,6 +92,8 @@ pub struct OpMapping {
 pub struct MappingPlan {
     pub arch_name: String,
     pub ops: BTreeMap<OpId, OpMapping>,
+    /// Present when the plan was built against a damaged chip.
+    pub faults: Option<FaultPlanSummary>,
 }
 
 impl MappingPlan {
@@ -85,15 +120,130 @@ impl MappingPlan {
 }
 
 /// Build the mapping plan, verifying hardware support for every
-/// sparsity feature the workload needs.
+/// sparsity feature the workload needs. If the architecture carries a
+/// non-zero [`crate::hw::faults::FaultModel`], the concrete fault map is
+/// instantiated from its seed and the plan degrades gracefully around
+/// the damage (see [`plan_with_faults`]).
 pub fn plan(
     arch: &Architecture,
     net: &Network,
     prune: Option<&PrunePlan>,
     opts: MappingOptions,
 ) -> anyhow::Result<MappingPlan> {
+    let fmap = if arch.faults.is_zero() {
+        None
+    } else {
+        Some(arch.faults.instantiate(&arch.cim, &arch.org))
+    };
+    plan_with_faults(arch, net, prune, opts, fmap.as_ref())
+}
+
+/// The degraded usable hardware derived from a fault map.
+struct Degradation {
+    /// Architecture clone with the common usable macro geometry.
+    arch: Architecture,
+    usable_macros: usize,
+    capacity_loss: f64,
+    effective_geometry: (usize, usize),
+}
+
+/// Split rounds that schedule more tiles than there are surviving
+/// macros into `ceil(k/usable)` sub-rounds (spilling the overflow into
+/// extra temporal passes). Round totals (weight bytes, outputs, input
+/// rows) are conserved exactly: each chunk takes its occupancy-weighted
+/// share and the last chunk absorbs the rounding remainder.
+fn split_rounds(rounds: Vec<Round>, usable: usize) -> Vec<Round> {
+    let mut out = Vec::with_capacity(rounds.len());
+    for r in rounds {
+        let k = r.tiles.len();
+        if k <= usable {
+            out.push(r);
+            continue;
+        }
+        let total_occ = r.occupied_cells().max(1);
+        let n_chunks = k.div_ceil(usable);
+        let (mut rem_bytes, mut rem_out, mut rem_in) = (r.weight_bytes, r.outputs, r.input_rows);
+        let mut idx = 0usize;
+        for ci in 0..n_chunks {
+            let take = usable.min(k - idx);
+            let chunk: Vec<MacroTile> = r.tiles[idx..idx + take].to_vec();
+            idx += take;
+            let (bytes, outs, ins) = if ci + 1 == n_chunks {
+                (rem_bytes, rem_out, rem_in)
+            } else {
+                let occ: u64 = chunk.iter().map(|t| t.occupied).sum();
+                let b = r.weight_bytes * occ / total_occ;
+                let o = r.outputs * occ / total_occ;
+                let i = r.input_rows * occ / total_occ;
+                rem_bytes -= b;
+                rem_out -= o;
+                rem_in -= i;
+                (b, o, i)
+            };
+            out.push(Round {
+                tiles: chunk,
+                vectors_per_macro: r.vectors_per_macro,
+                weight_bytes: bytes,
+                outputs: outs,
+                input_rows: ins,
+            });
+        }
+    }
+    out
+}
+
+/// Build the mapping plan against an explicit fault map. `None` or a
+/// clean map takes exactly the fault-free path (bit-identical plans).
+///
+/// With faults present, every op is tiled against the common usable
+/// geometry (sub-array aligned minimum over surviving macros), rounds
+/// that need more macros than survive are split into extra temporal
+/// passes, utilization is re-scored against the *full* geometry so dead
+/// silicon registers as loss, and the weight bytes displaced from
+/// faulty regions are recorded as repair writes for the simulator.
+pub fn plan_with_faults(
+    arch: &Architecture,
+    net: &Network,
+    prune: Option<&PrunePlan>,
+    opts: MappingOptions,
+    faults: Option<&FaultMap>,
+) -> anyhow::Result<MappingPlan> {
     arch.validate()?;
-    let spatial_capacity_cells = (arch.org.n_macros() * arch.cim.capacity_words()) as f64;
+    let deg = match faults {
+        Some(f) if !f.is_clean() => {
+            let (eff_r, eff_c) = f.effective_geometry();
+            let usable = f.usable_macros();
+            if usable == 0 || eff_r == 0 || eff_c == 0 {
+                anyhow::bail!(
+                    "architecture `{}` is unusable under the injected faults: \
+                     {usable}/{} macros alive, effective array {eff_r}x{eff_c} \
+                     (full {}x{})",
+                    arch.name,
+                    arch.org.n_macros(),
+                    arch.cim.rows,
+                    arch.cim.cols
+                );
+            }
+            let mut darch = arch.clone();
+            darch.cim = CimMacro::new(eff_r, eff_c, arch.cim.sub_rows, arch.cim.sub_cols);
+            darch.validate()?;
+            Some(Degradation {
+                arch: darch,
+                usable_macros: usable,
+                capacity_loss: f.capacity_loss(),
+                effective_geometry: (eff_r, eff_c),
+            })
+        }
+        _ => None,
+    };
+    let tile_arch: &Architecture = deg.as_ref().map(|d| &d.arch).unwrap_or(arch);
+    let spatial_capacity_cells = match &deg {
+        Some(d) => (d.usable_macros * tile_arch.cim.capacity_words()) as f64,
+        None => (arch.org.n_macros() * arch.cim.capacity_words()) as f64,
+    };
+    let mut baseline_rounds = 0u64;
+    let mut degraded_rounds = 0u64;
+    let mut repair_bytes = 0u64;
     let mut ops = BTreeMap::new();
     for id in net.mvm_ops() {
         let dims = net
@@ -150,7 +300,29 @@ pub fn plan(
         let fit = (layout.comp_rows * layout.comp_cols) as f64 * dims.groups as f64
             / spatial_capacity_cells;
         let strategy = opts.policy.resolve(&dims, fit);
-        let tiling = tile_op(arch, &dims, &layout, strategy);
+        let mut tiling = tile_op(tile_arch, &dims, &layout, strategy);
+        let mut fault_moved = 0u64;
+        if let Some(d) = &deg {
+            // what the same choices would have cost on the healthy chip
+            baseline_rounds += tile_op(arch, &dims, &layout, strategy).rounds.len() as u64;
+            // spill tiles that no longer have a live macro into extra rounds
+            tiling.rounds = split_rounds(std::mem::take(&mut tiling.rounds), d.usable_macros);
+            // score occupancy against the FULL geometry: dead macros and
+            // quarantined rows register as utilization loss
+            tiling.utilization = mean_utilization(
+                &tiling.rounds,
+                arch.org.n_macros(),
+                arch.cim.rows,
+                arch.cim.cols,
+            );
+            degraded_rounds += tiling.rounds.len() as u64;
+            // weights displaced from faulty cells are re-staged through
+            // the weight buffer: charge the lost-capacity share of this
+            // op's weight traffic as repair writes
+            let op_weight_bytes: u64 = tiling.rounds.iter().map(|r| r.weight_bytes).sum();
+            fault_moved = (op_weight_bytes as f64 * d.capacity_loss).ceil() as u64;
+            repair_bytes += fault_moved;
+        }
         let index = index_storage(&fb, &layout, ctx);
 
         // ---- loopnest description ----
@@ -212,6 +384,7 @@ pub fn plan(
                 strategy,
                 index,
                 rearrange_moved_bytes: moved,
+                fault_moved_bytes: fault_moved,
                 loopnest,
             },
         );
@@ -219,6 +392,16 @@ pub fn plan(
     Ok(MappingPlan {
         arch_name: arch.name.clone(),
         ops,
+        faults: deg.as_ref().map(|d| FaultPlanSummary {
+            total_macros: arch.org.n_macros(),
+            usable_macros: d.usable_macros,
+            full_geometry: (arch.cim.rows, arch.cim.cols),
+            effective_geometry: d.effective_geometry,
+            capacity_loss: d.capacity_loss,
+            baseline_rounds,
+            degraded_rounds,
+            repair_bytes,
+        }),
     })
 }
 
@@ -333,6 +516,130 @@ mod tests {
             }
         }
         assert!(saw_conv_dup, "some conv got duplicated");
+    }
+
+    #[test]
+    fn clean_fault_map_matches_fault_free_plan() {
+        use crate::hw::faults::FaultModel;
+        let arch = presets::usecase_arch(4, (2, 2));
+        let net = zoo::resnet_mini();
+        let base = plan(&arch, &net, None, MappingOptions::default()).unwrap();
+        let clean = FaultModel::none().instantiate(&arch.cim, &arch.org);
+        let with = plan_with_faults(&arch, &net, None, MappingOptions::default(), Some(&clean))
+            .unwrap();
+        assert!(with.faults.is_none());
+        assert_eq!(base.ops.len(), with.ops.len());
+        for (a, b) in base.ops.values().zip(with.ops.values()) {
+            assert_eq!(a.tiling, b.tiling, "{}", a.name);
+            assert_eq!(b.fault_moved_bytes, 0);
+        }
+    }
+
+    #[test]
+    fn faulty_plan_spills_and_records_overhead() {
+        use crate::hw::faults::MacroHealth;
+        let arch = presets::usecase_arch(4, (2, 2));
+        let net = zoo::resnet_mini();
+        let base = plan(&arch, &net, None, MappingOptions::default()).unwrap();
+        // Hand-built damage: one macro fused off and one with only 96
+        // usable rows. The weakest survivor drags the common geometry to
+        // 96x32 — below resnet_mini's largest layer (288 rows) — so the
+        // plan must split rows into extra rounds, not just lose capacity.
+        let healthy = MacroHealth {
+            dead: false,
+            lost_rows: 0,
+            lost_cols: 0,
+        };
+        let fmap = FaultMap {
+            macros: vec![
+                MacroHealth { dead: true, ..healthy },
+                MacroHealth {
+                    lost_rows: arch.cim.rows - 96,
+                    ..healthy
+                },
+                healthy,
+                healthy,
+            ],
+            rows: arch.cim.rows,
+            cols: arch.cim.cols,
+            sub_rows: arch.cim.sub_rows,
+            sub_cols: arch.cim.sub_cols,
+        };
+        let degraded =
+            plan_with_faults(&arch, &net, None, MappingOptions::default(), Some(&fmap)).unwrap();
+        let f = degraded.faults.as_ref().expect("degradation recorded");
+        assert_eq!(f.total_macros, 4);
+        assert_eq!(f.usable_macros, 3);
+        assert_eq!(f.full_geometry, (arch.cim.rows, arch.cim.cols));
+        assert_eq!(f.effective_geometry, (96, arch.cim.cols));
+        let cell = |r: usize, c: usize| (r * c) as f64;
+        let expected_loss = 1.0
+            - (cell(96, arch.cim.cols) + 2.0 * cell(arch.cim.rows, arch.cim.cols))
+                / (4.0 * cell(arch.cim.rows, arch.cim.cols));
+        assert!((f.capacity_loss - expected_loss).abs() < 1e-12);
+        // 288-row convs fit one round on the healthy chip but need >= 2
+        // at 96 effective rows: the degradation must cost extra rounds.
+        assert!(
+            f.extra_rounds() > 0,
+            "degraded {} vs baseline {}",
+            f.degraded_rounds,
+            f.baseline_rounds
+        );
+        assert!(f.repair_bytes > 0);
+        let rounds = |p: &MappingPlan| -> usize {
+            p.ops.values().map(|m| m.tiling.rounds.len()).sum()
+        };
+        assert!(rounds(&degraded) > rounds(&base));
+        // occupancy is conserved but spread over strictly more rounds and
+        // re-scored against the FULL geometry, so dead silicon must
+        // register as a utilization drop
+        assert!(degraded.mean_utilization() < base.mean_utilization());
+    }
+
+    #[test]
+    fn unusable_chip_is_rejected() {
+        use crate::hw::faults::{FaultModel, FaultSpatial};
+        let mut arch = presets::usecase_arch(4, (2, 2));
+        arch.faults = FaultModel {
+            seed: 1,
+            stuck_cell_rate: 0.0,
+            spatial: FaultSpatial::Uniform,
+            dead_column_rate: 0.0,
+            dead_macro_rate: 1.0,
+        };
+        let net = zoo::resnet_mini();
+        let err = plan(&arch, &net, None, MappingOptions::default()).unwrap_err();
+        assert!(err.to_string().contains("unusable"), "{err}");
+    }
+
+    #[test]
+    fn split_rounds_conserves_totals() {
+        let t = MacroTile {
+            rows_used: 8,
+            cols_used: 8,
+            occupied: 64,
+        };
+        let r = Round {
+            tiles: vec![t; 7],
+            vectors_per_macro: 10,
+            weight_bytes: 448,
+            outputs: 560,
+            input_rows: 56,
+        };
+        let split = split_rounds(vec![r.clone()], 3);
+        assert_eq!(split.len(), 3); // ceil(7/3)
+        assert_eq!(split.iter().map(|x| x.tiles.len()).sum::<usize>(), 7);
+        assert_eq!(split.iter().map(|x| x.weight_bytes).sum::<u64>(), r.weight_bytes);
+        assert_eq!(split.iter().map(|x| x.outputs).sum::<u64>(), r.outputs);
+        assert_eq!(split.iter().map(|x| x.input_rows).sum::<u64>(), r.input_rows);
+        for s in &split {
+            assert!(s.tiles.len() <= 3);
+            assert_eq!(s.vectors_per_macro, 10);
+        }
+        // rounds already fitting are untouched
+        let untouched = split_rounds(vec![r.clone()], 7);
+        assert_eq!(untouched.len(), 1);
+        assert_eq!(untouched[0], r);
     }
 
     #[test]

@@ -291,7 +291,10 @@ fn tile_grouped(
     }
 }
 
-fn mean_utilization(rounds: &[Round], n_macros: usize, r: usize, c: usize) -> f64 {
+/// Mean occupancy of `rounds` against a grid of `n_macros` arrays of
+/// `r`×`c` cells. Public so the planner can re-score degraded schedules
+/// against the *full* (fault-free) geometry.
+pub fn mean_utilization(rounds: &[Round], n_macros: usize, r: usize, c: usize) -> f64 {
     if rounds.is_empty() {
         return 0.0;
     }

@@ -1,6 +1,7 @@
 //! Report emitters: turn study results into the paper's tables/series
 //! (ASCII + CSV). Shared by the bench binaries and `ciminus report`.
 
+use crate::explore::fault_study::ResiliencePoint;
 use crate::explore::input_study::InputSparsityPoint;
 use crate::explore::mapping_study::{MappingPoint, RearrangePoint};
 use crate::explore::sparsity_study::SparsityPoint;
@@ -152,6 +153,38 @@ pub fn mapping_table(points: &[MappingPoint]) -> Table {
             p.latency_cycles.to_string(),
             fmt_f(p.utilization * 100.0, 1),
         ]);
+    }
+    t
+}
+
+/// Fault-resilience curve: degradation vs. injected fault density.
+pub fn fault_table(title: &str, points: &[ResiliencePoint]) -> Table {
+    let mut t = Table::new(&[
+        "rate", "spatial", "macros", "cap_loss%", "+rounds", "latency_ovh", "energy_ovh",
+    ])
+    .with_title(title);
+    for p in points {
+        if p.usable {
+            t.row(vec![
+                fmt_f(p.fault_rate, 4),
+                p.spatial.clone(),
+                format!("{}/{}", p.usable_macros, p.total_macros),
+                fmt_f(p.capacity_loss * 100.0, 1),
+                p.extra_rounds.to_string(),
+                fmt_f(p.latency_overhead, 3),
+                fmt_f(p.energy_overhead, 3),
+            ]);
+        } else {
+            t.row(vec![
+                fmt_f(p.fault_rate, 4),
+                p.spatial.clone(),
+                format!("0/{}", p.total_macros),
+                "100.0".into(),
+                "-".into(),
+                "unusable".into(),
+                "unusable".into(),
+            ]);
+        }
     }
     t
 }

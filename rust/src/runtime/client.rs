@@ -1,9 +1,18 @@
 //! PJRT runtime wrapper: loads AOT HLO-text artifacts and executes them
 //! on the CPU PJRT client via the `xla` crate. This is the only bridge
 //! between the rust coordinator and the (build-time-only) Python world.
+//!
+//! The `xla` dependency is optional: without the `pjrt` cargo feature
+//! (the default), this module compiles to a stub whose constructors
+//! report the runtime as unavailable. Everything that does not need live
+//! inference — planning, simulation, exploration, fault studies — works
+//! identically either way; only `Runtime::cpu()` callers see the error.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::path::Path;
+
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 /// A host-side tensor argument: flat f32 data + dims.
 #[derive(Debug, Clone)]
@@ -26,10 +35,12 @@ impl ArrayArg {
 }
 
 /// Wrapper over the PJRT CPU client.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
@@ -63,11 +74,13 @@ impl Runtime {
 }
 
 /// A compiled executable ready to run.
+#[cfg(feature = "pjrt")]
 pub struct LoadedExec {
     exe: xla::PjRtLoadedExecutable,
     pub name: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl LoadedExec {
     /// Execute with f32 array inputs; returns all tuple outputs as flat
     /// f32 vectors (artifacts are lowered with return_tuple=True).
@@ -94,6 +107,48 @@ impl LoadedExec {
     }
 }
 
+/// Stub runtime compiled when the `pjrt` feature is off: construction
+/// fails with a clear message instead of a missing-symbol build error.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        anyhow::bail!(
+            "PJRT runtime unavailable: ciminus was built without the `pjrt` \
+             feature (rebuild with `cargo build --features pjrt`)"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn load_hlo(&self, path: &Path) -> Result<LoadedExec> {
+        anyhow::bail!(
+            "cannot load `{}`: ciminus was built without the `pjrt` feature",
+            path.display()
+        )
+    }
+}
+
+/// Stub executable handle matching the `pjrt` API surface.
+#[cfg(not(feature = "pjrt"))]
+pub struct LoadedExec {
+    pub name: String,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl LoadedExec {
+    pub fn run_f32(&self, _inputs: &[ArrayArg]) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!(
+            "cannot execute `{}`: ciminus was built without the `pjrt` feature",
+            self.name
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     // PJRT execution is covered by rust/tests/integration_runtime.rs,
@@ -105,5 +160,12 @@ mod tests {
     fn array_arg_validates_dims() {
         assert!(ArrayArg::new(vec![0.0; 6], vec![2, 3]).is_ok());
         assert!(ArrayArg::new(vec![0.0; 5], vec![2, 3]).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let err = Runtime::cpu().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

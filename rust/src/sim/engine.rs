@@ -103,6 +103,23 @@ pub fn simulate(
                 op_cycles += shuffle_cycles;
             }
 
+            // Fault-repair overhead: weights displaced off faulty
+            // rows/columns/macros are re-staged through the weight
+            // buffer (read + write per byte), paid once per op like
+            // rearrangement.
+            if m.fault_moved_bytes > 0 {
+                let acc = arch.weight_buf.accesses_for(m.fault_moved_bytes);
+                counters.add_read(UnitKind::WeightBuf, acc);
+                counters.add_write(UnitKind::WeightBuf, acc);
+                let repair_cycles = 2 * arch.weight_buf.transfer_cycles(m.fault_moved_bytes);
+                steps.push(StepLat {
+                    load: repair_cycles,
+                    comp: 0,
+                    wb: 0,
+                });
+                op_cycles += repair_cycles;
+            }
+
             for round in &m.tiling.rounds {
                 let vecs = round.vectors_per_macro as u64;
                 // ---- latency components ----
@@ -304,6 +321,7 @@ pub fn simulate(
         },
         index_bytes: index_bytes_total,
         stage_totals,
+        faults: mapping.faults.clone(),
     })
 }
 

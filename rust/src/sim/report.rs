@@ -3,6 +3,7 @@
 
 use super::access::Counters;
 use super::energy::EnergyBreakdown;
+use crate::mapping::planner::FaultPlanSummary;
 use crate::util::table::{fmt_cycles, fmt_energy_pj, Table};
 use crate::workload::op::OpId;
 
@@ -42,6 +43,9 @@ pub struct SimReport {
     /// Pre-overlap stage totals (Σ over pipeline steps) — the Eq. 3
     /// inputs, useful for diagnosing load- vs compute-bound workloads.
     pub stage_totals: (u64, u64, u64),
+    /// Degradation summary when the mapping was built against a faulty
+    /// chip; `None` on the fault-free path.
+    pub faults: Option<FaultPlanSummary>,
 }
 
 impl SimReport {
@@ -86,6 +90,21 @@ impl SimReport {
             fmt_cycles(c),
             fmt_cycles(w)
         ));
+        if let Some(f) = &self.faults {
+            s.push_str(&format!(
+                "faults  : {}/{} macros usable, array {}x{} of {}x{}, \
+                 capacity loss {:.1}%, +{} rounds, repair {} B\n",
+                f.usable_macros,
+                f.total_macros,
+                f.effective_geometry.0,
+                f.effective_geometry.1,
+                f.full_geometry.0,
+                f.full_geometry.1,
+                f.capacity_loss * 100.0,
+                f.extra_rounds(),
+                f.repair_bytes
+            ));
+        }
         s
     }
 
@@ -147,6 +166,7 @@ mod tests {
             mean_skip_ratio: 0.0,
             index_bytes: 0,
             stage_totals: (0, cycles, 0),
+            faults: None,
         }
     }
 

@@ -158,6 +158,7 @@ impl Json {
         let mut p = Parser {
             bytes: text.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -276,9 +277,16 @@ fn write_str(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Maximum container nesting the recursive-descent parser accepts.
+/// Adversarial inputs like `"[".repeat(1 << 20)` must produce a
+/// [`JsonError`], not a stack overflow; 128 levels is far beyond any
+/// config/interchange file this crate reads.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -287,6 +295,17 @@ impl<'a> Parser<'a> {
             pos: self.pos,
             msg: msg.to_string(),
         }
+    }
+
+    /// Enter one container level; errors beyond [`MAX_DEPTH`]. Matched by
+    /// a `depth -= 1` on each successful container exit (error paths
+    /// abort the whole parse, so they need no unwind).
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
     }
 
     fn skip_ws(&mut self) {
@@ -334,11 +353,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'[')?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(out));
         }
         loop {
@@ -349,6 +370,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(out));
                 }
                 _ => return Err(self.err("expected `,` or `]` in array")),
@@ -357,11 +379,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'{')?;
         let mut out = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(out));
         }
         loop {
@@ -377,6 +401,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(out));
                 }
                 _ => return Err(self.err("expected `,` or `}` in object")),
@@ -563,5 +588,80 @@ mod tests {
         let j = Json::parse("1099511627776").unwrap(); // 2^40
         assert_eq!(j.as_usize(), Some(1 << 40));
         assert_eq!(j.to_string(), "1099511627776");
+    }
+
+    #[test]
+    fn deep_nesting_is_an_error_not_a_crash() {
+        // would overflow the stack without the MAX_DEPTH guard
+        let e = Json::parse(&"[".repeat(10_000)).unwrap_err();
+        assert!(e.msg.contains("nesting too deep"), "{}", e.msg);
+        assert!(Json::parse(&"{\"a\":".repeat(10_000)).is_err());
+        // mixed nesting hits the guard too
+        assert!(Json::parse(&"[{\"a\":".repeat(5_000)).is_err());
+        // depth within the limit still parses
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
+        // the guard counts *nesting*, not total container count
+        let wide = format!("[{}1]", "[1],".repeat(500));
+        assert!(Json::parse(&wide).is_ok());
+    }
+
+    use crate::util::proptest::{check, ensure, Gen};
+
+    /// Random JSON value with container nesting ≤ depth. Numbers are kept
+    /// integral so serialize→parse is exact.
+    fn gen_json(g: &mut Gen, depth: usize) -> Json {
+        let top = if depth == 0 { 3 } else { 5 };
+        match g.usize_in(0, top) {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool_with(0.5)),
+            2 => Json::Num(g.usize_in(0, 10_000) as f64 - 5_000.0),
+            3 => Json::Str(g.ascii_string(12)),
+            4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| gen_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize_in(0, 4))
+                    .map(|_| (g.ascii_string(6), gen_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn prop_valid_values_roundtrip() {
+        check("json_roundtrip", 300, 0x10AD, |g| {
+            let v = gen_json(g, 4);
+            let compact = Json::parse(&v.to_string())
+                .map_err(|e| format!("compact reparse failed: {e}"))?;
+            ensure(compact == v, "compact roundtrip changed value")?;
+            let pretty = Json::parse(&v.pretty())
+                .map_err(|e| format!("pretty reparse failed: {e}"))?;
+            ensure(pretty == v, "pretty roundtrip changed value")
+        });
+    }
+
+    #[test]
+    fn prop_garbage_input_returns_err_never_panics() {
+        // structural characters, escapes, digits, unicode — the grammar's
+        // trouble spots; any panic fails the test by unwinding
+        check("json_garbage", 800, 0xBAD, |g| {
+            let s = g.string_from("{}[]\",:.eE+-0123456789truefalsenull \\\t\u{8}é😀", 48);
+            let _ = Json::parse(&s);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_truncated_documents_never_panic() {
+        check("json_truncate", 300, 0x72C, |g| {
+            let v = gen_json(g, 4);
+            let full = v.to_string();
+            let prefix = g.prefix_of(&full);
+            let _ = Json::parse(&prefix);
+            // a *proper* prefix of a container document is always invalid
+            if prefix.len() < full.len() && matches!(v, Json::Arr(_) | Json::Obj(_)) {
+                ensure(Json::parse(&prefix).is_err(), "proper prefix parsed as valid")?;
+            }
+            Ok(())
+        });
     }
 }

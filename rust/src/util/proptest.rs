@@ -48,6 +48,32 @@ impl Gen {
     pub fn weights(&mut self, n: usize) -> Vec<f32> {
         (0..n).map(|_| (self.rng.next_f32() - 0.5) * 4.0).collect()
     }
+
+    /// Printable-ASCII string of length ≤ `max_len` (includes `"` and
+    /// `\`, so it exercises escaping paths).
+    pub fn ascii_string(&mut self, max_len: usize) -> String {
+        let n = self.usize_in(0, max_len);
+        (0..n)
+            .map(|_| self.usize_in(0x20, 0x7E) as u8 as char)
+            .collect()
+    }
+
+    /// String of length ≤ `max_len` drawn uniformly from `charset`.
+    pub fn string_from(&mut self, charset: &str, max_len: usize) -> String {
+        let chars: Vec<char> = charset.chars().collect();
+        let n = self.usize_in(0, max_len);
+        (0..n).map(|_| *self.choose(&chars)).collect()
+    }
+
+    /// Random prefix of `s`, cut at a char boundary (possibly empty or
+    /// the whole string) — the truncated-input fuzz primitive.
+    pub fn prefix_of(&mut self, s: &str) -> String {
+        let mut cut = self.usize_in(0, s.len());
+        while !s.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        s[..cut].to_string()
+    }
 }
 
 /// Outcome of a property: Ok(()) or an explanation of the violation.
@@ -136,6 +162,19 @@ mod tests {
             let n = g.usize_in(1, 500);
             let d = g.divisor_of(n);
             ensure(n % d == 0, format!("{d} does not divide {n}"))
+        });
+    }
+
+    #[test]
+    fn string_generators_respect_bounds() {
+        check("strings", 200, 7, |g| {
+            let s = g.ascii_string(16);
+            ensure(s.len() <= 16 && s.chars().all(|c| (' '..='~').contains(&c)), "ascii")?;
+            let t = g.string_from("ab", 8);
+            ensure(t.chars().all(|c| c == 'a' || c == 'b'), "charset")?;
+            let src = "héllo wörld";
+            let p = g.prefix_of(src);
+            ensure(src.starts_with(&p), format!("`{p}` not a prefix"))
         });
     }
 

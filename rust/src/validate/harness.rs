@@ -24,9 +24,18 @@ pub struct ValidationPoint {
     pub estimated: f64,
 }
 
+/// Error cap returned when the reported value is (near) zero but the
+/// estimate is not — a finite sentinel that keeps `error_stats` /
+/// `correlation` well-defined instead of poisoning them with inf/NaN.
+pub const ERR_PCT_CAP: f64 = 999.0;
+
 impl ValidationPoint {
     pub fn err_pct(&self) -> f64 {
-        (self.estimated - self.reported).abs() / self.reported * 100.0
+        let diff = (self.estimated - self.reported).abs();
+        if self.reported.abs() < 1e-12 {
+            return if diff < 1e-12 { 0.0 } else { ERR_PCT_CAP };
+        }
+        (diff / self.reported.abs() * 100.0).min(ERR_PCT_CAP)
     }
 }
 
@@ -229,5 +238,25 @@ mod tests {
             estimated: 2.1,
         };
         assert!((p.err_pct() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn err_pct_is_finite_for_zero_reported() {
+        let mk = |reported: f64, estimated: f64| ValidationPoint {
+            design: "MARS",
+            workload: "vgg16".into(),
+            metric: "speedup",
+            reported,
+            estimated,
+        };
+        // zero vs zero: perfect agreement, not NaN
+        assert_eq!(mk(0.0, 0.0).err_pct(), 0.0);
+        // zero vs non-zero: capped sentinel, not inf
+        assert_eq!(mk(0.0, 2.0).err_pct(), ERR_PCT_CAP);
+        assert!(mk(0.0, 2.0).err_pct().is_finite());
+        // enormous relative error is capped too
+        assert_eq!(mk(1e-6, 1e6).err_pct(), ERR_PCT_CAP);
+        // negative reported values use the magnitude
+        assert!((mk(-2.0, -2.1).err_pct() - 5.0).abs() < 1e-9);
     }
 }
