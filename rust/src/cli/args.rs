@@ -57,6 +57,28 @@ impl Args {
         }
     }
 
+    /// Optional number: `None` when the flag is absent, an error when
+    /// it is present but malformed.
+    pub fn f64_opt(&self, key: &str) -> anyhow::Result<Option<f64>> {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| anyhow::anyhow!("--{key} expects a number, got `{v}`"))
+            })
+            .transpose()
+    }
+
+    /// Optional integer: `None` when the flag is absent, an error when
+    /// it is present but malformed.
+    pub fn usize_opt(&self, key: &str) -> anyhow::Result<Option<usize>> {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got `{v}`"))
+            })
+            .transpose()
+    }
+
     /// Comma-separated float list, e.g. `--rates 0,0.01,0.05`.
     pub fn f64_list_or(&self, key: &str, default: &[f64]) -> anyhow::Result<Vec<f64>> {
         match self.get(key) {
@@ -122,6 +144,17 @@ mod tests {
         assert_eq!(a.f64_list_or("rates", &[9.0]).unwrap(), vec![0.0, 0.01, 0.05]);
         assert_eq!(a.f64_list_or("missing", &[9.0]).unwrap(), vec![9.0]);
         assert!(parse(&["--rates", "0,abc"]).f64_list_or("rates", &[]).is_err());
+    }
+
+    #[test]
+    fn optional_accessors() {
+        let a = parse(&["--job-timeout", "2.5", "--max-failures", "3"]);
+        assert_eq!(a.f64_opt("job-timeout").unwrap(), Some(2.5));
+        assert_eq!(a.usize_opt("max-failures").unwrap(), Some(3));
+        assert_eq!(a.f64_opt("absent").unwrap(), None);
+        assert_eq!(a.usize_opt("absent").unwrap(), None);
+        assert!(parse(&["--job-timeout", "abc"]).f64_opt("job-timeout").is_err());
+        assert!(parse(&["--max-failures", "-1"]).usize_opt("max-failures").is_err());
     }
 
     #[test]

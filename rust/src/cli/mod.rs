@@ -4,7 +4,10 @@
 pub mod args;
 pub mod pattern;
 
-use crate::explore::{fault_study, input_study, mapping_study, sparsity_study};
+use crate::explore::{
+    ablation_study, executor, fault_study, input_study, mapping_study, sparsity_study,
+};
+use crate::explore::{Sweep, SweepConfig, SweepFailure};
 use crate::hw::arch::Architecture;
 use crate::hw::faults::FaultSpatial;
 use crate::hw::presets;
@@ -19,6 +22,17 @@ use crate::workload::{graph::Network, import, zoo};
 use anyhow::{Context, Result};
 use args::Args;
 use pattern::parse_pattern;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Process exit codes. `1` is reserved for hard errors: `main` prints
+/// the `anyhow` chain and exits 1 whenever a command returns `Err`.
+pub const EXIT_OK: i32 = 0;
+/// Bad invocation: unknown command/study or malformed flag value.
+pub const EXIT_USAGE: i32 = 2;
+/// The command completed but some sweep points failed (panic, timeout,
+/// error, abort); partial results were produced and reported.
+pub const EXIT_PARTIAL: i32 = 3;
 
 pub const USAGE: &str = "\
 ciminus — cost modeling for sparse DNN workloads on SRAM-based digital CIM
@@ -30,10 +44,11 @@ commands:
             [--pattern P --ratio R] [--strategy auto|sp|dp] [--rearrange]
             [--no-input-sparsity] [--detail]
   validate                         Fig. 6 validation vs MARS/SDP
-  explore   --study fig8|fig9|fig10|fig11|fig12 [--model M] [--threads N]
+  explore   --study fig8|fig9|fig10|fig11|fig12|ablation|smoke
+            [--model M] [sweep options]
   faults    --arch <preset|file>[,...] [--model M] [--pattern P --ratio R]
             [--rates r1,r2,...] [--spatial uniform|row|column|cluster]
-            [--seed N] [--json] [--threads N]
+            [--seed N] [--json] [sweep options]
                                    fault-injection resilience curves
   prune     --model <mini> --pattern P --ratio R [--artifacts DIR]
                                    PJRT accuracy eval of pruned artifacts
@@ -41,9 +56,20 @@ commands:
                                    PJRT activation bit-plane profiling
   report    --all [--out DIR]      regenerate all tables (ASCII + CSV)
   search    --model M [--macros N] [--max-sparsity S] [--min-util U]
-                                   Pareto design-space search
+            [sweep options]        Pareto design-space search
   trace     --model M [--arch A] [--pattern P --ratio R] [--limit N]
                                    per-round schedule + bound analysis
+
+sweep options (explore / faults / search):
+  --threads N        worker threads (0 = available parallelism)
+  --job-timeout S    per-job soft timeout in seconds; stuck jobs are
+                     reported as failures and the sweep continues
+  --retries N        retry transient job errors up to N times
+  --max-failures N   abort remaining jobs after N failures
+  --checkpoint PATH  append finished points to a JSONL journal
+  --resume           skip points already present in --checkpoint
+
+exit codes: 0 ok | 1 hard error | 2 usage error | 3 completed with failures
 
 patterns: row_wise | row_block[:w] | column_wise | channel_wise |
           column_block[:h] | intra:m | hybrid:m[:w] | hybrid_row_wise:m |
@@ -70,6 +96,62 @@ fn load_net(spec: &str) -> Result<Network> {
     }
 }
 
+/// Build the executor configuration from the shared sweep flags.
+fn sweep_config(a: &Args) -> Result<SweepConfig> {
+    let mut cfg = SweepConfig::with_threads(a.usize_or("threads", 0)?);
+    if let Some(secs) = a.f64_opt("job-timeout")? {
+        anyhow::ensure!(
+            secs.is_finite() && secs > 0.0,
+            "--job-timeout expects a positive number of seconds, got `{secs}`"
+        );
+        cfg.job_timeout = Some(Duration::from_secs_f64(secs));
+    }
+    cfg.max_retries = a.usize_or("retries", 0)? as u32;
+    cfg.max_failures = a.usize_opt("max-failures")?;
+    cfg.checkpoint = a.get("checkpoint").map(PathBuf::from);
+    cfg.resume = a.bool("resume");
+    anyhow::ensure!(
+        !cfg.resume || cfg.checkpoint.is_some(),
+        "--resume requires --checkpoint <path>"
+    );
+    Ok(cfg)
+}
+
+/// Aggregates one or more [`Sweep`]s run by a single command into a
+/// summary line and an exit code.
+#[derive(Default)]
+struct SweepAgg {
+    ok: usize,
+    resumed: usize,
+    failures: Vec<SweepFailure>,
+}
+
+impl SweepAgg {
+    fn add<P>(&mut self, sweep: &Sweep<P>) {
+        self.ok += sweep.total - sweep.failures.len();
+        self.resumed += sweep.resumed;
+        self.failures.extend(sweep.failures.iter().cloned());
+    }
+
+    /// Print the run summary and per-failure detail (to stderr, so
+    /// piped stdout data like `--json` output stays clean) and
+    /// translate into an exit code.
+    fn finish(self) -> i32 {
+        eprintln!(
+            "sweep: {}",
+            executor::summary_line(self.ok, &self.failures, self.resumed)
+        );
+        for f in &self.failures {
+            eprintln!("  failed {}: {}", f.key, f.error);
+        }
+        if self.failures.is_empty() {
+            EXIT_OK
+        } else {
+            EXIT_PARTIAL
+        }
+    }
+}
+
 /// Entry point used by `main.rs`; returns the process exit code.
 pub fn run<I: IntoIterator<Item = String>>(raw: I) -> Result<i32> {
     let a = Args::parse(raw);
@@ -77,7 +159,7 @@ pub fn run<I: IntoIterator<Item = String>>(raw: I) -> Result<i32> {
     match cmd {
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
-            Ok(0)
+            Ok(EXIT_OK)
         }
         "zoo" => cmd_zoo(&a),
         "simulate" => cmd_simulate(&a),
@@ -91,7 +173,7 @@ pub fn run<I: IntoIterator<Item = String>>(raw: I) -> Result<i32> {
         "trace" => cmd_trace(&a),
         other => {
             eprintln!("unknown command `{other}`\n{USAGE}");
-            Ok(2)
+            Ok(EXIT_USAGE)
         }
     }
 }
@@ -113,7 +195,7 @@ fn cmd_zoo(a: &Args) -> Result<i32> {
         println!("available workloads: {}", zoo::ZOO_NAMES.join(", "));
         println!("architecture presets: mars, sdp, usecase4, usecase16");
     }
-    Ok(0)
+    Ok(EXIT_OK)
 }
 
 fn cmd_simulate(a: &Args) -> Result<i32> {
@@ -149,7 +231,7 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
         println!("{}", rep.op_table().render());
         println!("{}", rep.energy_table().render());
     }
-    Ok(0)
+    Ok(EXIT_OK)
 }
 
 fn cmd_validate(_a: &Args) -> Result<i32> {
@@ -161,38 +243,46 @@ fn cmd_validate(_a: &Args) -> Result<i32> {
     println!("error margin: mean {mean:.2}%  max {max:.2}%  pearson r = {r:.3}");
     let bd = crate::validate::sdp_power_breakdown()?;
     println!("{}", crate::report::fig6c_table(&bd).render());
-    Ok(0)
+    Ok(EXIT_OK)
 }
 
+const STUDIES: &str = "fig8, fig9, fig10, fig11, fig12, ablation, smoke";
+
 fn cmd_explore(a: &Args) -> Result<i32> {
-    let threads = a.usize_or("threads", 0)?;
+    let cfg = sweep_config(a)?;
     let study = a.str_or("study", "fig8");
+    let mut agg = SweepAgg::default();
     match study {
         "fig8" => {
             let net = load_net(a.str_or("model", "resnet50"))?;
-            let pts = sparsity_study::run_fig8(&net, &sparsity_study::RATIOS, threads)?;
+            let sweep = sparsity_study::run_fig8_robust(&net, &sparsity_study::RATIOS, &cfg)?;
             println!(
                 "{}",
                 crate::report::sparsity_table(
                     &format!("Fig. 8: sparsity patterns on {}", net.name),
-                    &pts
+                    &sweep.points
                 )
                 .render()
             );
+            agg.add(&sweep);
         }
         "fig9" => {
             let net = load_net(a.str_or("model", "resnet50"))?;
-            let pts = sparsity_study::run_fig9a(&net, threads)?;
+            let sweep_a = sparsity_study::run_fig9a_robust(&net, &cfg)?;
             println!(
                 "{}",
-                crate::report::sparsity_table("Fig. 9(a): block sizes @80%", &pts).render()
+                crate::report::sparsity_table("Fig. 9(a): block sizes @80%", &sweep_a.points)
+                    .render()
             );
+            agg.add(&sweep_a);
             let r50 = zoo::resnet50(32, 100);
             let v16 = zoo::vgg16(32, 100);
             let mb = zoo::mobilenetv2(32, 100);
-            let pts_b = sparsity_study::run_fig9b(&[&r50, &v16, &mb], threads)?;
-            let flat: Vec<_> = pts_b
-                .into_iter()
+            let sweep_b = sparsity_study::run_fig9b_robust(&[&r50, &v16, &mb], &cfg)?;
+            let flat: Vec<_> = sweep_b
+                .points
+                .iter()
+                .cloned()
                 .map(|(m, mut p)| {
                     p.pattern = format!("{m}/{}", p.pattern);
                     p
@@ -202,54 +292,113 @@ fn cmd_explore(a: &Args) -> Result<i32> {
                 "{}",
                 crate::report::sparsity_table("Fig. 9(b): models @80%", &flat).render()
             );
+            agg.add(&sweep_b);
         }
         "fig10" => {
             let r50 = zoo::resnet50(32, 100);
             let v16 = zoo::vgg16(32, 100);
             let mb = zoo::mobilenetv2(32, 100);
-            let dense = input_study::run_dense_models(&[&r50, &v16, &mb], 0.55, threads)?;
+            let dense = input_study::run_dense_models_robust(&[&r50, &v16, &mb], 0.55, &cfg)?;
             println!(
                 "{}",
-                crate::report::input_sparsity_table("Fig. 10: dense models", &dense).render()
-            );
-            let pats = input_study::run_weight_patterns(&r50, threads)?;
-            println!(
-                "{}",
-                crate::report::input_sparsity_table("Fig. 10: weight patterns @80%", &pats)
+                crate::report::input_sparsity_table("Fig. 10: dense models", &dense.points)
                     .render()
             );
-            let ratios = input_study::run_ratio_sweep(&r50, &[0.5, 0.6, 0.7, 0.8, 0.9], threads)?;
+            agg.add(&dense);
+            let pats = input_study::run_weight_patterns_robust(&r50, &cfg)?;
             println!(
                 "{}",
-                crate::report::input_sparsity_table("Fig. 10: ratio sweep (row-wise)", &ratios)
-                    .render()
+                crate::report::input_sparsity_table(
+                    "Fig. 10: weight patterns @80%",
+                    &pats.points
+                )
+                .render()
             );
+            agg.add(&pats);
+            let ratios =
+                input_study::run_ratio_sweep_robust(&r50, &[0.5, 0.6, 0.7, 0.8, 0.9], &cfg)?;
+            println!(
+                "{}",
+                crate::report::input_sparsity_table(
+                    "Fig. 10: ratio sweep (row-wise)",
+                    &ratios.points
+                )
+                .render()
+            );
+            agg.add(&ratios);
         }
         "fig11" => {
             let r50 = zoo::resnet50(32, 100);
             let v16 = zoo::vgg16(32, 100);
-            let pts = mapping_study::run_fig11(&[&r50, &v16], threads)?;
-            println!("{}", crate::report::mapping_table(&pts).render());
+            let sweep = mapping_study::run_fig11_robust(&[&r50, &v16], &cfg)?;
+            println!("{}", crate::report::mapping_table(&sweep.points).render());
+            agg.add(&sweep);
         }
         "fig12" => {
+            if cfg.checkpoint.is_some() {
+                eprintln!(
+                    "note: fig12 points embed full simulation reports and are not \
+                     checkpointable; --checkpoint/--resume are ignored for this study"
+                );
+            }
+            let mut cfg = cfg.clone();
+            cfg.checkpoint = None;
+            cfg.resume = false;
             let net = load_net(a.str_or("model", "resnet50"))?;
-            let pts = mapping_study::run_fig12(&net, threads)?;
-            println!("{}", crate::report::rearrange_table(&pts).render());
+            let sweep = mapping_study::run_fig12_robust(&net, &cfg)?;
+            println!("{}", crate::report::rearrange_table(&sweep.points).render());
+            agg.add(&sweep);
         }
-        other => anyhow::bail!("unknown study `{other}`"),
+        "ablation" => {
+            let net = load_net(a.str_or("model", "resnet_mini"))?;
+            let sweep = ablation_study::run_all_robust(&net, &cfg)?;
+            let mut t = crate::util::table::Table::new(&[
+                "label", "cycles", "energy(uJ)", "skip%",
+            ])
+            .with_title("Modeling ablations");
+            for group in &sweep.points {
+                for p in group {
+                    t.row(vec![
+                        p.label.clone(),
+                        p.cycles.to_string(),
+                        format!("{:.3}", p.energy_pj / 1e6),
+                        format!("{:.1}", p.skip_ratio * 100.0),
+                    ]);
+                }
+            }
+            println!("{}", t.render());
+            agg.add(&sweep);
+        }
+        // a tiny built-in sweep with one panicking and one hanging job:
+        // exercises the full failure/checkpoint path without the
+        // simulator (used by CI and for demoing --resume)
+        "smoke" => {
+            let sweep = executor::smoke_sweep(&cfg)?;
+            println!(
+                "smoke sweep: {} of {} points completed",
+                sweep.points.len(),
+                sweep.total
+            );
+            agg.add(&sweep);
+        }
+        other => {
+            eprintln!("unknown study `{other}` (valid: {STUDIES})");
+            return Ok(EXIT_USAGE);
+        }
     }
-    Ok(0)
+    Ok(agg.finish())
 }
 
 fn cmd_faults(a: &Args) -> Result<i32> {
+    let cfg = sweep_config(a)?;
     let net = load_net(a.str_or("model", "resnet_mini"))?;
     let ratio = a.f64_or("ratio", 0.8)?;
     let fb = parse_pattern(a.str_or("pattern", "dense"), ratio)?;
     let rates = a.f64_list_or("rates", &fault_study::DEFAULT_RATES)?;
     let spatial = FaultSpatial::parse(a.str_or("spatial", "uniform"))?;
     let seed = a.usize_or("seed", 0xC1A0)? as u64;
-    let threads = a.usize_or("threads", 0)?;
     let fb_opt = (!fb.is_dense()).then_some(&fb);
+    let mut agg = SweepAgg::default();
     let mut all_points = Vec::new();
     for spec in a.str_or("arch", "usecase4,mars").split(',') {
         let spec = spec.trim();
@@ -257,24 +406,25 @@ fn cmd_faults(a: &Args) -> Result<i32> {
             continue;
         }
         let arch = load_arch(spec)?;
-        let pts =
-            fault_study::run_resilience(&arch, &net, fb_opt, &rates, spatial, seed, threads)?;
+        let sweep =
+            fault_study::run_resilience_robust(&arch, &net, fb_opt, &rates, spatial, seed, &cfg)?;
         if !a.bool("json") {
             println!(
                 "{}",
                 crate::report::fault_table(
                     &format!("Fault resilience: {} on {} [{}]", net.name, arch.name, fb.name),
-                    &pts
+                    &sweep.points
                 )
                 .render()
             );
         }
-        all_points.extend(pts);
+        all_points.extend(sweep.points.iter().cloned());
+        agg.add(&sweep);
     }
     if a.bool("json") {
         println!("{}", fault_study::points_to_json(&all_points).pretty());
     }
-    Ok(0)
+    Ok(agg.finish())
 }
 
 fn artifacts_from(a: &Args) -> Result<Artifacts> {
@@ -307,7 +457,7 @@ fn cmd_prune(a: &Args) -> Result<i32> {
         ev.dense_accuracy * 100.0,
         ev.weight_sparsity * 100.0
     );
-    Ok(0)
+    Ok(EXIT_OK)
 }
 
 fn cmd_profile(a: &Args) -> Result<i32> {
@@ -326,7 +476,7 @@ fn cmd_profile(a: &Args) -> Result<i32> {
             p.skip_ratio(32) * 100.0
         );
     }
-    Ok(0)
+    Ok(EXIT_OK)
 }
 
 fn cmd_report(a: &Args) -> Result<i32> {
@@ -358,25 +508,27 @@ fn cmd_report(a: &Args) -> Result<i32> {
         println!("{}", f12.render());
     }
     println!("CSV written to {}", out_dir.display());
-    Ok(0)
+    Ok(EXIT_OK)
 }
 
 fn cmd_search(a: &Args) -> Result<i32> {
-    use crate::explore::search::{search, Constraints};
+    use crate::explore::search::{candidates, search_robust, Constraints};
+    let cfg = sweep_config(a)?;
     let net = load_net(a.str_or("model", "resnet50"))?;
     let n_macros = a.usize_or("macros", 16)?;
     let cons = Constraints {
-        max_sparsity: a.get("max-sparsity").map(|v| v.parse()).transpose()?,
-        min_utilization: a.get("min-util").map(|v| v.parse()).transpose()?,
+        max_sparsity: a.f64_opt("max-sparsity")?,
+        min_utilization: a.f64_opt("min-util")?,
     };
     let ratios = [0.5, 0.7, 0.8, 0.9];
     println!(
         "searching {} candidates on {} macros...",
-        crate::explore::search::candidates(n_macros, &ratios).len(),
+        candidates(n_macros, &ratios).len(),
         n_macros
     );
-    let (all, pareto) = search(&net, n_macros, &ratios, cons, a.usize_or("threads", 0)?)?;
-    println!("{} feasible points, {} Pareto-optimal:\n", all.len(), pareto.len());
+    let (sweep, pareto) = search_robust(&net, n_macros, &ratios, cons, &cfg)?;
+    let feasible = sweep.points.iter().flatten().count();
+    println!("{} feasible points, {} Pareto-optimal:\n", feasible, pareto.len());
     let mut t = crate::util::table::Table::new(&[
         "pattern", "sparsity", "org", "strategy", "cycles", "energy(uJ)", "util%",
     ])
@@ -395,7 +547,9 @@ fn cmd_search(a: &Args) -> Result<i32> {
         ]);
     }
     println!("{}", t.render());
-    Ok(0)
+    let mut agg = SweepAgg::default();
+    agg.add(&sweep);
+    Ok(agg.finish())
 }
 
 fn cmd_trace(a: &Args) -> Result<i32> {
@@ -419,27 +573,27 @@ fn cmd_trace(a: &Args) -> Result<i32> {
     for (op, cyc) in t.hotspots(8) {
         println!("  {op:<26} {cyc}");
     }
-    Ok(0)
+    Ok(EXIT_OK)
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
+
+    fn run_args(args: &[&str]) -> Result<i32> {
+        run(args.iter().map(|s| s.to_string()))
+    }
 
     #[test]
     fn search_and_trace_commands_run() {
         assert_eq!(
-            run(["search", "--model", "resnet_mini", "--macros", "4"]
-                .iter()
-                .map(|s| s.to_string()))
-            .unwrap(),
+            run_args(&["search", "--model", "resnet_mini", "--macros", "4"]).unwrap(),
             0
         );
         assert_eq!(
-            run(["trace", "--model", "resnet_mini", "--pattern", "row_wise", "--limit", "5"]
-                .iter()
-                .map(|s| s.to_string()))
-            .unwrap(),
+            run_args(&["trace", "--model", "resnet_mini", "--pattern", "row_wise", "--limit", "5"])
+                .unwrap(),
             0
         );
     }
@@ -452,44 +606,115 @@ mod tests {
 
     #[test]
     fn help_runs() {
-        assert_eq!(run(vec!["help".to_string()]).unwrap(), 0);
+        assert_eq!(run_args(&["help"]).unwrap(), 0);
     }
 
     #[test]
     fn unknown_command_exit_code() {
-        assert_eq!(run(vec!["frobnicate".to_string()]).unwrap(), 2);
+        assert_eq!(run_args(&["frobnicate"]).unwrap(), EXIT_USAGE);
+    }
+
+    #[test]
+    fn unknown_study_exit_code() {
+        assert_eq!(
+            run_args(&["explore", "--study", "fig99"]).unwrap(),
+            EXIT_USAGE
+        );
     }
 
     #[test]
     fn zoo_lists() {
-        assert_eq!(run(vec!["zoo".to_string()]).unwrap(), 0);
-        assert_eq!(
-            run(vec!["zoo".to_string(), "vgg_mini".to_string()]).unwrap(),
-            0
-        );
+        assert_eq!(run_args(&["zoo"]).unwrap(), 0);
+        assert_eq!(run_args(&["zoo", "vgg_mini"]).unwrap(), 0);
     }
 
     #[test]
     fn faults_command_runs() {
         let args = ["faults", "--model", "resnet_mini", "--arch", "usecase4", "--rates", "0,0.05"];
-        assert_eq!(run(args.iter().map(|s| s.to_string())).unwrap(), 0);
+        assert_eq!(run_args(&args).unwrap(), 0);
         let args = [
             "faults", "--model", "resnet_mini", "--arch", "usecase4", "--rates", "0", "--json",
         ];
-        assert_eq!(run(args.iter().map(|s| s.to_string())).unwrap(), 0);
+        assert_eq!(run_args(&args).unwrap(), 0);
     }
 
     #[test]
     fn simulate_small_model() {
-        let args = vec![
-            "simulate".to_string(),
-            "--model".to_string(),
-            "resnet_mini".to_string(),
-            "--pattern".to_string(),
-            "row_wise".to_string(),
-            "--ratio".to_string(),
-            "0.8".to_string(),
+        let args = [
+            "simulate", "--model", "resnet_mini", "--pattern", "row_wise", "--ratio", "0.8",
         ];
-        assert_eq!(run(args).unwrap(), 0);
+        assert_eq!(run_args(&args).unwrap(), 0);
+    }
+
+    #[test]
+    fn sweep_config_parses_flags() {
+        let a = Args::parse(
+            [
+                "explore",
+                "--threads",
+                "4",
+                "--job-timeout",
+                "1.5",
+                "--retries",
+                "2",
+                "--max-failures",
+                "10",
+                "--checkpoint",
+                "/tmp/x.jsonl",
+                "--resume",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let cfg = sweep_config(&a).unwrap();
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.job_timeout, Some(Duration::from_millis(1500)));
+        assert_eq!(cfg.max_retries, 2);
+        assert_eq!(cfg.max_failures, Some(10));
+        assert!(cfg.resume);
+        assert_eq!(cfg.checkpoint.as_deref(), Some(std::path::Path::new("/tmp/x.jsonl")));
+    }
+
+    #[test]
+    fn sweep_config_rejects_bad_flags() {
+        let resume_only = Args::parse(["--resume"].iter().map(|s| s.to_string()));
+        assert!(sweep_config(&resume_only).is_err(), "--resume needs --checkpoint");
+        let bad_timeout = Args::parse(
+            ["--job-timeout", "-1"].iter().map(|s| s.to_string()),
+        );
+        assert!(sweep_config(&bad_timeout).is_err());
+    }
+
+    #[test]
+    fn smoke_study_reports_partial_failure_and_resumes() {
+        let dir = std::env::temp_dir().join(format!(
+            "ciminus-cli-smoke-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt = dir.join("smoke.jsonl");
+        let _ = std::fs::remove_file(&ckpt);
+        let ckpt_s = ckpt.to_str().unwrap();
+        let code = run_args(&[
+            "explore", "--study", "smoke", "--job-timeout", "0.3", "--checkpoint", ckpt_s,
+        ])
+        .unwrap();
+        assert_eq!(code, EXIT_PARTIAL, "panicking + hanging points fail the sweep");
+        let journal = std::fs::read_to_string(&ckpt).unwrap();
+        assert_eq!(
+            journal.lines().count(),
+            6,
+            "6 of 8 smoke points completed and were journaled:\n{journal}"
+        );
+        // resume: completed points replay from the journal, the bad two
+        // fail again, exit code is still partial
+        let code = run_args(&[
+            "explore", "--study", "smoke", "--job-timeout", "0.3", "--checkpoint", ckpt_s,
+            "--resume",
+        ])
+        .unwrap();
+        assert_eq!(code, EXIT_PARTIAL);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

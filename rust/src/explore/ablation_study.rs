@@ -7,6 +7,7 @@
 //! 2. buffer double-buffering: the Eq. 3 overlap terms on/off;
 //! 3. mapping policy: Auto vs forced spatial vs forced duplication.
 
+use super::executor::{run_sweep, Codec, Job, Sweep, SweepConfig};
 use crate::hw::presets;
 use crate::mapping::duplication::{Strategy, StrategyPolicy};
 use crate::mapping::planner::{plan, MappingOptions};
@@ -14,7 +15,9 @@ use crate::pruning::workflow::PruningWorkflow;
 use crate::sim::engine::{simulate, SimOptions};
 use crate::sim::input_sparsity::InputProfiles;
 use crate::sparsity::flexblock::FlexBlock;
+use crate::util::json::Json;
 use crate::workload::graph::Network;
+use std::sync::Arc;
 
 #[derive(Debug, Clone)]
 pub struct AblationPoint {
@@ -23,6 +26,44 @@ pub struct AblationPoint {
     pub energy_pj: f64,
     pub skip_ratio: f64,
 }
+
+fn point_to_json(p: &AblationPoint) -> Json {
+    let mut j = Json::obj();
+    j.set("label", Json::Str(p.label.clone()))
+        .set("cycles", Json::Num(p.cycles as f64))
+        .set("energy_pj", Json::Num(p.energy_pj))
+        .set("skip_ratio", Json::Num(p.skip_ratio));
+    j
+}
+
+fn point_from_json(j: &Json) -> anyhow::Result<AblationPoint> {
+    Ok(AblationPoint {
+        label: j.req_str("label")?.to_string(),
+        cycles: j.req_f64("cycles")? as u64,
+        energy_pj: j.req_f64("energy_pj")?,
+        skip_ratio: j.req_f64("skip_ratio")?,
+    })
+}
+
+fn group_to_json(pts: &[AblationPoint]) -> Json {
+    Json::Arr(pts.iter().map(point_to_json).collect())
+}
+
+fn group_from_json(j: &Json) -> anyhow::Result<Vec<AblationPoint>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("ablation group is not an array"))?
+        .iter()
+        .map(point_from_json)
+        .collect()
+}
+
+/// Checkpoint-journal codec for one ablation group (a `Vec` of points).
+pub fn ablation_codec() -> Codec<Vec<AblationPoint>> {
+    Codec::new(|g: &Vec<AblationPoint>| group_to_json(g), group_from_json)
+}
+
+/// The ablation groups `run_all_robust` sweeps, in report order.
+pub const GROUPS: [&str; 4] = ["subarray", "overlap", "policy", "bits"];
 
 /// Ablation 1: sub-array height ∈ {1, 8, 32} at fixed macro geometry.
 pub fn subarray_granularity(net: &Network) -> anyhow::Result<Vec<AblationPoint>> {
@@ -113,8 +154,34 @@ pub fn bit_width(net: &Network) -> anyhow::Result<Vec<AblationPoint>> {
     Ok(out)
 }
 
+/// All four ablation groups under the resilient executor: one job per
+/// group, each returning its group's point list. A crash in one group
+/// (e.g. an architecture invariant violated by an extreme knob value)
+/// no longer discards the other three.
+pub fn run_all_robust(net: &Network, cfg: &SweepConfig) -> anyhow::Result<Sweep<Vec<AblationPoint>>> {
+    let net = Arc::new(net.clone());
+    let jobs: Vec<Job<&'static str>> = GROUPS
+        .iter()
+        .map(|&g| Job {
+            key: format!("ablation:{g}"),
+            input: g,
+        })
+        .collect();
+    let report = run_sweep(jobs, cfg, Some(ablation_codec()), move |&group: &&'static str| {
+        match group {
+            "subarray" => subarray_granularity(&net),
+            "overlap" => pipeline_overlap(&net),
+            "policy" => policy_comparison(&net),
+            "bits" => bit_width(&net),
+            other => anyhow::bail!("unknown ablation group '{other}'"),
+        }
+    })?;
+    Ok(Sweep::from_report(report))
+}
+
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::workload::zoo;
 
@@ -151,5 +218,39 @@ mod tests {
         let auto = pts[0].cycles;
         let worst = pts.iter().skip(1).map(|p| p.cycles).max().unwrap();
         assert!(auto <= worst, "auto {auto} > worst fixed {worst}");
+    }
+
+    #[test]
+    fn robust_runner_covers_all_groups() {
+        let net = zoo::resnet_mini();
+        let sweep = run_all_robust(&net, &SweepConfig::default()).unwrap();
+        assert_eq!(sweep.total, GROUPS.len());
+        assert!(sweep.failures.is_empty(), "{:?}", sweep.failures);
+        let groups = sweep.strict().unwrap();
+        assert_eq!(groups.len(), GROUPS.len());
+        assert!(groups.iter().all(|g| !g.is_empty()));
+    }
+
+    #[test]
+    fn ablation_codec_roundtrips() {
+        let group = vec![
+            AblationPoint {
+                label: "sub_rows=1".into(),
+                cycles: 100,
+                energy_pj: 1.0,
+                skip_ratio: 0.5,
+            },
+            AblationPoint {
+                label: "sub_rows=8".into(),
+                cycles: 80,
+                energy_pj: 0.9,
+                skip_ratio: 0.3,
+            },
+        ];
+        let c = ablation_codec();
+        let back = c.decode(&c.encode(&group)).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[1].label, "sub_rows=8");
+        assert_eq!(back[0].cycles, 100);
     }
 }

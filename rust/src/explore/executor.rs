@@ -1,0 +1,798 @@
+//! Resilient job-execution engine for design-space sweeps.
+//!
+//! `parallel_map` (explore/sweep.rs) fans work out but dies with its
+//! worst job: one panicking design point aborts the whole study, a hung
+//! PJRT call blocks it forever, and hours of sweep work cannot be
+//! resumed. This module is the production replacement:
+//!
+//! * **panic isolation** — every job runs under `catch_unwind`; a panic
+//!   becomes a structured [`JobError::Panic`] for that point only;
+//! * **watchdog timeouts** — a configurable per-job soft timeout marks
+//!   stuck jobs [`JobError::Timeout`] and the sweep continues (the
+//!   stuck worker thread is replaced; it is reclaimed when it wakes);
+//! * **bounded retries** — transient `Err` results are retried up to
+//!   `max_retries` times with exponential, capped backoff;
+//! * **circuit breaker** — `max_failures` aborts the remaining queue
+//!   ([`JobError::Aborted`]) once too many points have failed;
+//! * **checkpointed resume** — each completed point is appended to a
+//!   crash-safe JSONL journal; a re-run with `resume` replays finished
+//!   points from the journal instead of recomputing them.
+//!
+//! Results are always reported in input order, independent of thread
+//! count, so sweeps are deterministic under `--threads` variation.
+
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::panic::{self, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Worker threads carry this name prefix so the quiet panic hook can
+/// suppress the default "thread panicked" noise for captured panics.
+const WORKER_PREFIX: &str = "ciminus-job-";
+
+/// Coordinator poll granularity for the watchdog.
+const WATCHDOG_TICK: Duration = Duration::from_millis(25);
+
+// ---------------------------------------------------------------------
+// error taxonomy
+// ---------------------------------------------------------------------
+
+/// Why a single sweep job produced no point.
+#[derive(Debug, Clone)]
+pub enum JobError {
+    /// The job panicked; payload is the captured panic message.
+    Panic(String),
+    /// The job returned an error (after exhausting retries).
+    Failed(String),
+    /// The job blew its per-job soft timeout.
+    Timeout(Duration),
+    /// The sweep's failure budget was exhausted before this job ran.
+    Aborted(String),
+}
+
+impl JobError {
+    /// Short machine-friendly class label for summaries.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobError::Panic(_) => "panic",
+            JobError::Failed(_) => "error",
+            JobError::Timeout(_) => "timeout",
+            JobError::Aborted(_) => "aborted",
+        }
+    }
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobError::Panic(m) => write!(f, "panic: {m}"),
+            JobError::Failed(m) => write!(f, "error: {m}"),
+            JobError::Timeout(d) => write!(f, "timeout after {:.2}s", d.as_secs_f64()),
+            JobError::Aborted(m) => write!(f, "aborted: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// Extract a printable message from a caught panic payload.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------
+// configuration
+// ---------------------------------------------------------------------
+
+/// Execution policy for a sweep. `Default` reproduces the historical
+/// behavior (all cores, no timeout, no retries, no checkpoint) except
+/// that panics are captured instead of aborting the process.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Worker threads; 0 = available parallelism.
+    pub threads: usize,
+    /// Per-job (per-attempt) soft timeout. `None` disables the watchdog.
+    pub job_timeout: Option<Duration>,
+    /// Extra attempts after a transient `Err` (panics are not retried).
+    pub max_retries: u32,
+    /// Base backoff before the first retry; doubles per attempt.
+    pub retry_backoff: Duration,
+    /// Upper bound on the exponential backoff.
+    pub backoff_cap: Duration,
+    /// Abort the remaining queue once this many jobs have failed.
+    pub max_failures: Option<usize>,
+    /// JSONL checkpoint journal path (appended as points complete).
+    pub checkpoint: Option<PathBuf>,
+    /// Replay completed points from the journal instead of recomputing.
+    pub resume: bool,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            threads: 0,
+            job_timeout: None,
+            max_retries: 0,
+            retry_backoff: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+            max_failures: None,
+            checkpoint: None,
+            resume: false,
+        }
+    }
+}
+
+impl SweepConfig {
+    /// The legacy `threads`-only configuration used by the strict
+    /// study wrappers.
+    pub fn with_threads(threads: usize) -> Self {
+        SweepConfig {
+            threads,
+            ..SweepConfig::default()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// jobs, outcomes, reports
+// ---------------------------------------------------------------------
+
+/// One unit of sweep work. `key` must be stable across runs — it is the
+/// checkpoint-journal identity used by `--resume`.
+#[derive(Debug, Clone)]
+pub struct Job<T> {
+    pub key: String,
+    pub input: T,
+}
+
+/// What happened to one job.
+#[derive(Debug)]
+pub struct JobOutcome<R> {
+    pub key: String,
+    pub index: usize,
+    /// Attempts actually executed (0 when replayed from a checkpoint).
+    pub attempts: u32,
+    /// True when the result was replayed from the journal.
+    pub from_checkpoint: bool,
+    pub result: Result<R, JobError>,
+}
+
+/// Raw per-job outcomes of a sweep, in input order.
+#[derive(Debug)]
+pub struct SweepReport<R> {
+    pub outcomes: Vec<JobOutcome<R>>,
+}
+
+impl<R> SweepReport<R> {
+    pub fn n_ok(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.result.is_ok()).count()
+    }
+
+    pub fn n_failed(&self) -> usize {
+        self.outcomes.len() - self.n_ok()
+    }
+
+    pub fn n_resumed(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.from_checkpoint).count()
+    }
+}
+
+/// One failed point of a sweep, keyed for reporting.
+#[derive(Debug, Clone)]
+pub struct SweepFailure {
+    pub key: String,
+    pub error: JobError,
+}
+
+/// Partial-results view of a sweep: the points that succeeded (input
+/// order), plus a structured account of everything that did not.
+#[derive(Debug)]
+pub struct Sweep<P> {
+    pub points: Vec<P>,
+    pub failures: Vec<SweepFailure>,
+    /// Points replayed from the checkpoint journal.
+    pub resumed: usize,
+    /// Total jobs in the sweep (ok + failed).
+    pub total: usize,
+}
+
+impl<P> Sweep<P> {
+    pub fn from_report(report: SweepReport<P>) -> Self {
+        let total = report.outcomes.len();
+        let mut points = Vec::new();
+        let mut failures = Vec::new();
+        let mut resumed = 0;
+        for o in report.outcomes {
+            if o.from_checkpoint {
+                resumed += 1;
+            }
+            match o.result {
+                Ok(p) => points.push(p),
+                Err(e) => failures.push(SweepFailure {
+                    key: o.key,
+                    error: e,
+                }),
+            }
+        }
+        Sweep {
+            points,
+            failures,
+            resumed,
+            total,
+        }
+    }
+
+    /// `"N ok / M failed (reasons) / K resumed"`.
+    pub fn summary(&self) -> String {
+        summary_line(self.total - self.failures.len(), &self.failures, self.resumed)
+    }
+
+    /// Legacy all-or-nothing view: error out if any point failed.
+    pub fn strict(self) -> anyhow::Result<Vec<P>> {
+        if let Some(first) = self.failures.first() {
+            anyhow::bail!(
+                "{} of {} sweep jobs failed; first: {}: {}",
+                self.failures.len(),
+                self.total,
+                first.key,
+                first.error
+            );
+        }
+        Ok(self.points)
+    }
+}
+
+/// Shared formatter for sweep summaries (also used by the CLI when it
+/// aggregates several sub-sweeps of one study).
+pub fn summary_line(ok: usize, failures: &[SweepFailure], resumed: usize) -> String {
+    let mut s = format!("{ok} ok / {} failed", failures.len());
+    if !failures.is_empty() {
+        let mut kinds: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for f in failures {
+            *kinds.entry(f.error.kind()).or_insert(0) += 1;
+        }
+        let parts: Vec<String> = kinds.iter().map(|(k, n)| format!("{n} {k}")).collect();
+        s.push_str(&format!(" ({})", parts.join(", ")));
+    }
+    if resumed > 0 {
+        s.push_str(&format!(" / {resumed} resumed"));
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// checkpoint journal
+// ---------------------------------------------------------------------
+
+/// Point serializer pair for the checkpoint journal.
+pub struct Codec<R> {
+    encode: Box<dyn Fn(&R) -> Json>,
+    decode: Box<dyn Fn(&Json) -> anyhow::Result<R>>,
+}
+
+impl<R> Codec<R> {
+    pub fn new(
+        encode: impl Fn(&R) -> Json + 'static,
+        decode: impl Fn(&Json) -> anyhow::Result<R> + 'static,
+    ) -> Self {
+        Codec {
+            encode: Box::new(encode),
+            decode: Box::new(decode),
+        }
+    }
+
+    pub fn encode(&self, r: &R) -> Json {
+        (self.encode)(r)
+    }
+
+    pub fn decode(&self, j: &Json) -> anyhow::Result<R> {
+        (self.decode)(j)
+    }
+}
+
+/// Append-only JSONL checkpoint journal. One line per completed point:
+/// `{"key": "...", "ok": <encoded point>}`. Lines are flushed as they
+/// are written; a torn final line from a crash is skipped on load, so a
+/// resumed run simply recomputes that point.
+pub struct Journal {
+    file: std::fs::File,
+}
+
+impl Journal {
+    /// Load `key -> encoded point` from an existing journal. A missing
+    /// file is an empty journal; unparseable (torn) lines are skipped.
+    pub fn load_map(path: &Path) -> anyhow::Result<BTreeMap<String, Json>> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(BTreeMap::new()),
+            Err(e) => anyhow::bail!("reading checkpoint journal {}: {e}", path.display()),
+        };
+        let mut map = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Ok(j) = Json::parse(line) {
+                if let (Some(k), Some(v)) = (j.get("key").and_then(Json::as_str), j.get("ok")) {
+                    map.insert(k.to_string(), v.clone());
+                }
+            }
+        }
+        Ok(map)
+    }
+
+    pub fn open_append(path: &Path) -> anyhow::Result<Journal> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| anyhow::anyhow!("creating {}: {e}", parent.display()))?;
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| anyhow::anyhow!("opening checkpoint journal {}: {e}", path.display()))?;
+        Ok(Journal { file })
+    }
+
+    pub fn append(&mut self, key: &str, result: &Json) -> std::io::Result<()> {
+        use std::io::Write;
+        let line = Json::from_pairs(vec![
+            ("key", Json::Str(key.to_string())),
+            ("ok", result.clone()),
+        ])
+        .to_string();
+        writeln!(self.file, "{line}")?;
+        self.file.flush()
+    }
+}
+
+// ---------------------------------------------------------------------
+// the engine
+// ---------------------------------------------------------------------
+
+struct Shared<T, F> {
+    items: Vec<Job<T>>,
+    queue: Mutex<VecDeque<usize>>,
+    aborted: AtomicBool,
+    f: F,
+    max_retries: u32,
+    retry_backoff: Duration,
+    backoff_cap: Duration,
+}
+
+enum Event<R> {
+    Started {
+        idx: usize,
+        attempt: u32,
+        at: Instant,
+    },
+    Finished {
+        idx: usize,
+        attempts: u32,
+        result: Result<R, JobError>,
+    },
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // a worker panic can never poison these locks (jobs run outside the
+    // critical sections and under catch_unwind), but never abort a
+    // sweep over a poisoned mutex either way
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn effective_threads(requested: usize, n_jobs: usize) -> usize {
+    let t = if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    } else {
+        requested
+    };
+    t.clamp(1, n_jobs.max(1))
+}
+
+/// Suppress the default "thread '…' panicked" stderr noise for panics
+/// that the executor captures; every other thread keeps the previous
+/// hook behavior.
+pub(crate) fn install_quiet_panic_hook() {
+    static HOOK: std::sync::Once = std::sync::Once::new();
+    HOOK.call_once(|| {
+        let prev = panic::take_hook();
+        panic::set_hook(Box::new(move |info| {
+            let captured = std::thread::current()
+                .name()
+                .is_some_and(|n| n.starts_with(WORKER_PREFIX));
+            if !captured {
+                prev(info);
+            }
+        }));
+    });
+}
+
+fn worker_loop<T, R, F>(shared: Arc<Shared<T, F>>, tx: Sender<Event<R>>)
+where
+    F: Fn(&T) -> anyhow::Result<R>,
+{
+    loop {
+        if shared.aborted.load(Ordering::Relaxed) {
+            return;
+        }
+        let idx = match lock(&shared.queue).pop_front() {
+            Some(i) => i,
+            None => return,
+        };
+        let job = &shared.items[idx];
+        let mut attempt: u32 = 0;
+        let result = loop {
+            attempt += 1;
+            let _ = tx.send(Event::Started {
+                idx,
+                attempt,
+                at: Instant::now(),
+            });
+            match panic::catch_unwind(AssertUnwindSafe(|| (shared.f)(&job.input))) {
+                Ok(Ok(v)) => break Ok(v),
+                Ok(Err(e)) => {
+                    if attempt <= shared.max_retries && !shared.aborted.load(Ordering::Relaxed) {
+                        let exp = attempt.saturating_sub(1).min(16);
+                        let backoff = shared
+                            .retry_backoff
+                            .saturating_mul(1u32 << exp)
+                            .min(shared.backoff_cap);
+                        std::thread::sleep(backoff);
+                        continue;
+                    }
+                    break Err(JobError::Failed(format!("{e:#}")));
+                }
+                Err(payload) => break Err(JobError::Panic(panic_message(payload.as_ref()))),
+            }
+        };
+        // the coordinator may already be gone (late result of a
+        // timed-out job after the sweep finished) — ignore send errors
+        let _ = tx.send(Event::Finished {
+            idx,
+            attempts: attempt,
+            result,
+        });
+    }
+}
+
+fn spawn_worker<T, R, F>(shared: &Arc<Shared<T, F>>, tx: &Sender<Event<R>>, id: usize)
+where
+    T: Send + Sync + 'static,
+    R: Send + 'static,
+    F: Fn(&T) -> anyhow::Result<R> + Send + Sync + 'static,
+{
+    let shared = Arc::clone(shared);
+    let tx = tx.clone();
+    // detached on purpose: a worker stuck on a hung job must not block
+    // sweep completion; it exits on its own when the job wakes
+    std::thread::Builder::new()
+        .name(format!("{WORKER_PREFIX}{id}"))
+        .spawn(move || worker_loop(shared, tx))
+        .expect("spawn sweep worker");
+}
+
+/// Run `f` over `jobs` under the configured policy and return per-job
+/// outcomes in input order.
+///
+/// `Err` is reserved for engine-level failures (unreadable or unwritable
+/// checkpoint journal); per-job failures are reported in the outcomes.
+/// Without a `codec` the checkpoint options are inert.
+///
+/// Caveat: a job that hangs forever with no `job_timeout` configured
+/// blocks the sweep exactly like the old `parallel_map` — configure a
+/// timeout for untrusted design points.
+pub fn run_sweep<T, R, F>(
+    jobs: Vec<Job<T>>,
+    cfg: &SweepConfig,
+    codec: Option<Codec<R>>,
+    f: F,
+) -> anyhow::Result<SweepReport<R>>
+where
+    T: Send + Sync + 'static,
+    R: Send + 'static,
+    F: Fn(&T) -> anyhow::Result<R> + Send + Sync + 'static,
+{
+    install_quiet_panic_hook();
+    let n = jobs.len();
+    let mut outcomes: Vec<Option<JobOutcome<R>>> = Vec::with_capacity(n);
+    outcomes.resize_with(n, || None);
+
+    // resume: replay completed points recorded by a previous run
+    if cfg.resume {
+        if let (Some(path), Some(codec)) = (cfg.checkpoint.as_ref(), codec.as_ref()) {
+            let seen = Journal::load_map(path)?;
+            for (i, job) in jobs.iter().enumerate() {
+                if let Some(saved) = seen.get(&job.key) {
+                    if let Ok(r) = codec.decode(saved) {
+                        outcomes[i] = Some(JobOutcome {
+                            key: job.key.clone(),
+                            index: i,
+                            attempts: 0,
+                            from_checkpoint: true,
+                            result: Ok(r),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    let mut journal = match (&cfg.checkpoint, &codec) {
+        (Some(path), Some(_)) => Some(Journal::open_append(path)?),
+        _ => None,
+    };
+
+    let pending: VecDeque<usize> = (0..n).filter(|&i| outcomes[i].is_none()).collect();
+    let mut done = n - pending.len();
+    let mut failures = 0usize;
+
+    if done < n {
+        let threads = effective_threads(cfg.threads, n - done);
+        let shared = Arc::new(Shared {
+            items: jobs,
+            queue: Mutex::new(pending),
+            aborted: AtomicBool::new(false),
+            f,
+            max_retries: cfg.max_retries,
+            retry_backoff: cfg.retry_backoff,
+            backoff_cap: cfg.backoff_cap,
+        });
+        let (tx, rx) = mpsc::channel::<Event<R>>();
+        for id in 0..threads {
+            spawn_worker(&shared, &tx, id);
+        }
+        let mut next_worker_id = threads;
+        // idx -> (attempt, watchdog deadline)
+        let mut running: BTreeMap<usize, (u32, Instant)> = BTreeMap::new();
+
+        while done < n {
+            match rx.recv_timeout(WATCHDOG_TICK) {
+                Ok(Event::Started { idx, attempt, at }) => {
+                    if let Some(t) = cfg.job_timeout {
+                        running.insert(idx, (attempt, at + t));
+                    }
+                }
+                Ok(Event::Finished {
+                    idx,
+                    attempts,
+                    result,
+                }) => {
+                    running.remove(&idx);
+                    if outcomes[idx].is_some() {
+                        continue; // late result of a job already timed out
+                    }
+                    if let (Ok(r), Some(j), Some(c)) =
+                        (&result, journal.as_mut(), codec.as_ref())
+                    {
+                        if let Err(e) = j.append(&shared.items[idx].key, &c.encode(r)) {
+                            eprintln!(
+                                "warning: checkpoint append failed for `{}`: {e}",
+                                shared.items[idx].key
+                            );
+                        }
+                    }
+                    if result.is_err() {
+                        failures += 1;
+                    }
+                    outcomes[idx] = Some(JobOutcome {
+                        key: shared.items[idx].key.clone(),
+                        index: idx,
+                        attempts,
+                        from_checkpoint: false,
+                        result,
+                    });
+                    done += 1;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                }
+            }
+
+            // watchdog: expire attempts that blew the soft timeout
+            if !running.is_empty() {
+                let now = Instant::now();
+                let expired: Vec<(usize, u32)> = running
+                    .iter()
+                    .filter(|(_, (_, deadline))| *deadline <= now)
+                    .map(|(&i, &(attempt, _))| (i, attempt))
+                    .collect();
+                for (idx, attempt) in expired {
+                    running.remove(&idx);
+                    if outcomes[idx].is_some() {
+                        continue;
+                    }
+                    let t = cfg.job_timeout.unwrap_or(WATCHDOG_TICK);
+                    outcomes[idx] = Some(JobOutcome {
+                        key: shared.items[idx].key.clone(),
+                        index: idx,
+                        attempts: attempt,
+                        from_checkpoint: false,
+                        result: Err(JobError::Timeout(t)),
+                    });
+                    done += 1;
+                    failures += 1;
+                    // the worker stuck on this job is lost to the pool;
+                    // replace it if there is still queued work
+                    if !lock(&shared.queue).is_empty() {
+                        spawn_worker(&shared, &tx, next_worker_id);
+                        next_worker_id += 1;
+                    }
+                }
+            }
+
+            // circuit breaker: stop scheduling once the budget is spent
+            if let Some(maxf) = cfg.max_failures {
+                if failures >= maxf && !shared.aborted.load(Ordering::Relaxed) {
+                    shared.aborted.store(true, Ordering::Relaxed);
+                    let drained: Vec<usize> = {
+                        let mut q = lock(&shared.queue);
+                        q.drain(..).collect()
+                    };
+                    for idx in drained {
+                        if outcomes[idx].is_some() {
+                            continue;
+                        }
+                        outcomes[idx] = Some(JobOutcome {
+                            key: shared.items[idx].key.clone(),
+                            index: idx,
+                            attempts: 0,
+                            from_checkpoint: false,
+                            result: Err(JobError::Aborted(format!(
+                                "sweep aborted after {failures} failures (--max-failures {maxf})"
+                            ))),
+                        });
+                        done += 1;
+                    }
+                }
+            }
+        }
+        // release any straggler threads when their jobs wake up
+        shared.aborted.store(true, Ordering::Relaxed);
+    }
+
+    let outcomes = outcomes
+        .into_iter()
+        .map(|o| o.expect("every job has an outcome"))
+        .collect();
+    Ok(SweepReport { outcomes })
+}
+
+// ---------------------------------------------------------------------
+// built-in smoke sweep (CLI `explore --study smoke`, CI)
+// ---------------------------------------------------------------------
+
+/// A tiny self-contained sweep with one deliberately panicking job and
+/// one deliberately hanging job. Exercises the full engine — panic
+/// capture, watchdog timeout, checkpointing — without touching the
+/// simulator, so CI can assert partial-failure exit behavior cheaply.
+/// If no timeout is configured, a 500 ms default is applied so the hang
+/// is always caught.
+pub fn smoke_sweep(cfg: &SweepConfig) -> anyhow::Result<Sweep<f64>> {
+    let mut cfg = cfg.clone();
+    let timeout = cfg.job_timeout.unwrap_or(Duration::from_millis(500));
+    cfg.job_timeout = Some(timeout);
+    // long enough to trip the watchdog, short enough that the detached
+    // straggler thread dies quickly after the sweep completes
+    let hang = (timeout * 10)
+        .max(timeout + Duration::from_millis(250))
+        .min(Duration::from_secs(5));
+    let jobs: Vec<Job<usize>> = (0..8)
+        .map(|i| Job {
+            key: format!("smoke-{i}"),
+            input: i,
+        })
+        .collect();
+    let report = run_sweep(jobs, &cfg, Some(smoke_codec()), move |&i: &usize| match i {
+        3 => panic!("injected panic (smoke study)"),
+        5 => {
+            std::thread::sleep(hang);
+            Ok(i as f64)
+        }
+        _ => Ok((i * i) as f64),
+    })?;
+    Ok(Sweep::from_report(report))
+}
+
+/// Journal codec for the smoke sweep's numeric points.
+pub fn smoke_codec() -> Codec<f64> {
+    Codec::new(
+        |v: &f64| Json::Num(*v),
+        |j: &Json| {
+            j.as_f64()
+                .ok_or_else(|| anyhow::anyhow!("smoke point must be a number"))
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+    use super::*;
+
+    fn num_codec() -> Codec<f64> {
+        smoke_codec()
+    }
+
+    fn jobs_of(n: usize) -> Vec<Job<usize>> {
+        (0..n)
+            .map(|i| Job {
+                key: format!("j{i}"),
+                input: i,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn empty_sweep() {
+        let r = run_sweep(
+            Vec::<Job<usize>>::new(),
+            &SweepConfig::default(),
+            None::<Codec<f64>>,
+            |&i: &usize| Ok(i as f64),
+        )
+        .unwrap();
+        assert!(r.outcomes.is_empty());
+    }
+
+    #[test]
+    fn summary_formatting() {
+        let failures = vec![
+            SweepFailure {
+                key: "a".into(),
+                error: JobError::Panic("boom".into()),
+            },
+            SweepFailure {
+                key: "b".into(),
+                error: JobError::Timeout(Duration::from_secs(1)),
+            },
+        ];
+        let s = summary_line(6, &failures, 3);
+        assert_eq!(s, "6 ok / 2 failed (1 panic, 1 timeout) / 3 resumed");
+        assert_eq!(summary_line(4, &[], 0), "4 ok / 0 failed");
+    }
+
+    #[test]
+    fn journal_roundtrip_and_torn_line() {
+        let dir = std::env::temp_dir().join(format!("ciminus_journal_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("j.jsonl");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut j = Journal::open_append(&path).unwrap();
+            j.append("a", &Json::Num(1.0)).unwrap();
+            j.append("b", &Json::Num(2.0)).unwrap();
+        }
+        // simulate a crash mid-append: torn trailing line
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"key\":\"c\",\"ok\":3").unwrap();
+        }
+        let map = Journal::load_map(&path).unwrap();
+        assert_eq!(map.len(), 2);
+        assert_eq!(map.get("a").unwrap().as_f64(), Some(1.0));
+        assert!(!map.contains_key("c"), "torn line skipped");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_journal_is_empty() {
+        let map =
+            Journal::load_map(Path::new("/definitely/not/here/ciminus.jsonl")).unwrap();
+        assert!(map.is_empty());
+    }
+}

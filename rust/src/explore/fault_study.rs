@@ -6,7 +6,7 @@
 //! silicon degrades, and at what fault density the chip stops being
 //! usable at all.
 
-use super::sweep::parallel_map;
+use super::executor::{run_sweep, Codec, Job, Sweep, SweepConfig};
 use crate::hw::arch::Architecture;
 use crate::hw::faults::{FaultModel, FaultSpatial};
 use crate::mapping::planner::{plan, MappingOptions};
@@ -17,6 +17,7 @@ use crate::sim::report::SimReport;
 use crate::sparsity::flexblock::FlexBlock;
 use crate::util::json::Json;
 use crate::workload::graph::Network;
+use std::sync::Arc;
 
 /// Default fault-rate axis for resilience curves (0 anchors the
 /// fault-free baseline point).
@@ -46,6 +47,74 @@ pub struct ResiliencePoint {
     pub usable: bool,
 }
 
+fn point_to_json(p: &ResiliencePoint) -> Json {
+    let mut j = Json::obj();
+    j.set("arch", Json::Str(p.arch.clone()))
+        .set("pattern", Json::Str(p.pattern.clone()))
+        .set("spatial", Json::Str(p.spatial.clone()))
+        .set("fault_rate", Json::Num(p.fault_rate))
+        .set("usable_macros", Json::Num(p.usable_macros as f64))
+        .set("total_macros", Json::Num(p.total_macros as f64))
+        .set("capacity_loss", Json::Num(p.capacity_loss))
+        .set("extra_rounds", Json::Num(p.extra_rounds as f64))
+        .set("cycles", Json::Num(p.cycles as f64))
+        .set("energy_pj", Json::Num(p.energy_pj))
+        .set(
+            "latency_overhead",
+            if p.usable {
+                Json::Num(p.latency_overhead)
+            } else {
+                Json::Null
+            },
+        )
+        .set(
+            "energy_overhead",
+            if p.usable {
+                Json::Num(p.energy_overhead)
+            } else {
+                Json::Null
+            },
+        )
+        .set("usable", Json::Bool(p.usable));
+    j
+}
+
+fn point_from_json(j: &Json) -> anyhow::Result<ResiliencePoint> {
+    let usable = j
+        .get("usable")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| anyhow::anyhow!("resilience point missing 'usable'"))?;
+    // cliff points serialize their (infinite) overheads as null; restore
+    // the in-memory INFINITY convention on decode
+    let overhead = |key: &str| -> anyhow::Result<f64> {
+        if usable {
+            j.req_f64(key)
+        } else {
+            Ok(f64::INFINITY)
+        }
+    };
+    Ok(ResiliencePoint {
+        arch: j.req_str("arch")?.to_string(),
+        pattern: j.req_str("pattern")?.to_string(),
+        spatial: j.req_str("spatial")?.to_string(),
+        fault_rate: j.req_f64("fault_rate")?,
+        usable_macros: j.req_usize("usable_macros")?,
+        total_macros: j.req_usize("total_macros")?,
+        capacity_loss: j.req_f64("capacity_loss")?,
+        extra_rounds: j.req_f64("extra_rounds")? as u64,
+        cycles: j.req_f64("cycles")? as u64,
+        energy_pj: j.req_f64("energy_pj")?,
+        latency_overhead: overhead("latency_overhead")?,
+        energy_overhead: overhead("energy_overhead")?,
+        usable,
+    })
+}
+
+/// Checkpoint-journal codec for [`ResiliencePoint`] sweeps.
+pub fn resilience_codec() -> Codec<ResiliencePoint> {
+    Codec::new(point_to_json, point_from_json)
+}
+
 fn simulate_arch(
     arch: &Architecture,
     net: &Network,
@@ -56,20 +125,80 @@ fn simulate_arch(
     simulate(arch, net, &mapping, Some(profiles), SimOptions::default())
 }
 
-/// Sweep `rates` on `arch` (one spatial distribution, one sparsity
-/// pattern) and return the resilience curve. The same pruning masks and
-/// activation profiles are reused across all points, so differences are
-/// purely fault-induced. Rates at which the chip is unusable yield
-/// points with `usable: false` instead of failing the whole sweep.
-pub fn run_resilience(
+/// Everything a single resilience point needs besides its fault rate;
+/// shared across workers via one `Arc`.
+struct FaultCtx {
+    arch: Architecture,
+    net: Network,
+    prune: Option<PrunePlan>,
+    profiles: InputProfiles,
+    baseline: SimReport,
+    pattern: String,
+    spatial: FaultSpatial,
+    seed: u64,
+}
+
+fn resilience_point(ctx: &FaultCtx, rate: f64) -> ResiliencePoint {
+    let mut a = ctx.arch.clone();
+    a.faults = FaultModel::scaled(rate, ctx.spatial, ctx.seed);
+    match simulate_arch(&a, &ctx.net, ctx.prune.as_ref(), &ctx.profiles) {
+        Ok(rep) => {
+            let (usable_macros, capacity_loss, extra_rounds) = match &rep.faults {
+                Some(f) => (f.usable_macros, f.capacity_loss, f.extra_rounds()),
+                None => (ctx.arch.org.n_macros(), 0.0, 0),
+            };
+            ResiliencePoint {
+                arch: ctx.arch.name.clone(),
+                pattern: ctx.pattern.clone(),
+                spatial: ctx.spatial.label().into(),
+                fault_rate: rate,
+                usable_macros,
+                total_macros: ctx.arch.org.n_macros(),
+                capacity_loss,
+                extra_rounds,
+                cycles: rep.total_cycles,
+                energy_pj: rep.energy.total_pj,
+                latency_overhead: rep.total_cycles as f64
+                    / ctx.baseline.total_cycles.max(1) as f64,
+                energy_overhead: rep.energy.total_pj / ctx.baseline.energy.total_pj.max(1e-12),
+                usable: true,
+            }
+        }
+        // the cliff edge: chip unusable at this density. Deliberately a
+        // *point*, not a sweep failure — the cliff is the result.
+        Err(_) => ResiliencePoint {
+            arch: ctx.arch.name.clone(),
+            pattern: ctx.pattern.clone(),
+            spatial: ctx.spatial.label().into(),
+            fault_rate: rate,
+            usable_macros: 0,
+            total_macros: ctx.arch.org.n_macros(),
+            capacity_loss: 1.0,
+            extra_rounds: 0,
+            cycles: 0,
+            energy_pj: 0.0,
+            latency_overhead: f64::INFINITY,
+            energy_overhead: f64::INFINITY,
+            usable: false,
+        },
+    }
+}
+
+/// Resilience curve under the resilient executor. The same pruning
+/// masks and activation profiles are reused across all points, so
+/// differences are purely fault-induced. Rates at which the chip is
+/// unusable yield points with `usable: false` instead of failing the
+/// sweep; a panic or hang in the simulator itself surfaces as a
+/// [`super::executor::SweepFailure`].
+pub fn run_resilience_robust(
     arch: &Architecture,
     net: &Network,
     fb: Option<&FlexBlock>,
     rates: &[f64],
     spatial: FaultSpatial,
     seed: u64,
-    threads: usize,
-) -> anyhow::Result<Vec<ResiliencePoint>> {
+    cfg: &SweepConfig,
+) -> anyhow::Result<Sweep<ResiliencePoint>> {
     let prune = match fb {
         Some(fb) if !fb.is_dense() => {
             Some(PruningWorkflow::default().run_uniform(net, fb, None)?)
@@ -82,103 +211,60 @@ pub fn run_resilience(
     let baseline = simulate_arch(&clean, net, prune.as_ref(), &profiles)?;
     let pattern = fb.map(|f| f.name.clone()).unwrap_or_else(|| "Dense".into());
 
-    let results = parallel_map(rates.to_vec(), threads, |rate| {
-        let mut a = arch.clone();
-        a.faults = FaultModel::scaled(rate, spatial, seed);
-        let rep = simulate_arch(&a, net, prune.as_ref(), &profiles);
-        (rate, rep)
+    let ctx = Arc::new(FaultCtx {
+        arch: arch.clone(),
+        net: net.clone(),
+        prune,
+        profiles,
+        baseline,
+        pattern,
+        spatial,
+        seed,
     });
+    let jobs: Vec<Job<f64>> = rates
+        .iter()
+        .map(|&r| Job {
+            key: format!("faults:{}:{}:{r:.6}", arch.name, spatial.label()),
+            input: r,
+        })
+        .collect();
+    let report = run_sweep(jobs, cfg, Some(resilience_codec()), move |&rate: &f64| {
+        Ok(resilience_point(&ctx, rate))
+    })?;
+    Ok(Sweep::from_report(report))
+}
 
-    let mut out = Vec::with_capacity(results.len());
-    for (rate, rep) in results {
-        let point = match rep {
-            Ok(rep) => {
-                let (usable_macros, capacity_loss, extra_rounds) = match &rep.faults {
-                    Some(f) => (f.usable_macros, f.capacity_loss, f.extra_rounds()),
-                    None => (arch.org.n_macros(), 0.0, 0),
-                };
-                ResiliencePoint {
-                    arch: arch.name.clone(),
-                    pattern: pattern.clone(),
-                    spatial: spatial.label().into(),
-                    fault_rate: rate,
-                    usable_macros,
-                    total_macros: arch.org.n_macros(),
-                    capacity_loss,
-                    extra_rounds,
-                    cycles: rep.total_cycles,
-                    energy_pj: rep.energy.total_pj,
-                    latency_overhead: rep.total_cycles as f64
-                        / baseline.total_cycles.max(1) as f64,
-                    energy_overhead: rep.energy.total_pj / baseline.energy.total_pj.max(1e-12),
-                    usable: true,
-                }
-            }
-            // the cliff edge: chip unusable at this density
-            Err(_) => ResiliencePoint {
-                arch: arch.name.clone(),
-                pattern: pattern.clone(),
-                spatial: spatial.label().into(),
-                fault_rate: rate,
-                usable_macros: 0,
-                total_macros: arch.org.n_macros(),
-                capacity_loss: 1.0,
-                extra_rounds: 0,
-                cycles: 0,
-                energy_pj: 0.0,
-                latency_overhead: f64::INFINITY,
-                energy_overhead: f64::INFINITY,
-                usable: false,
-            },
-        };
-        out.push(point);
-    }
-    Ok(out)
+/// Historical strict signature: any executor-level failure aborts.
+pub fn run_resilience(
+    arch: &Architecture,
+    net: &Network,
+    fb: Option<&FlexBlock>,
+    rates: &[f64],
+    spatial: FaultSpatial,
+    seed: u64,
+    threads: usize,
+) -> anyhow::Result<Vec<ResiliencePoint>> {
+    run_resilience_robust(
+        arch,
+        net,
+        fb,
+        rates,
+        spatial,
+        seed,
+        &SweepConfig::with_threads(threads),
+    )?
+    .strict()
 }
 
 /// Serialize a resilience curve as a JSON array (the `faults --json`
 /// output format).
 pub fn points_to_json(points: &[ResiliencePoint]) -> Json {
-    Json::Arr(
-        points
-            .iter()
-            .map(|p| {
-                let mut j = Json::obj();
-                j.set("arch", Json::Str(p.arch.clone()))
-                    .set("pattern", Json::Str(p.pattern.clone()))
-                    .set("spatial", Json::Str(p.spatial.clone()))
-                    .set("fault_rate", Json::Num(p.fault_rate))
-                    .set("usable_macros", Json::Num(p.usable_macros as f64))
-                    .set("total_macros", Json::Num(p.total_macros as f64))
-                    .set("capacity_loss", Json::Num(p.capacity_loss))
-                    .set("extra_rounds", Json::Num(p.extra_rounds as f64))
-                    .set("cycles", Json::Num(p.cycles as f64))
-                    .set("energy_pj", Json::Num(p.energy_pj))
-                    .set(
-                        "latency_overhead",
-                        if p.usable {
-                            Json::Num(p.latency_overhead)
-                        } else {
-                            Json::Null
-                        },
-                    )
-                    .set(
-                        "energy_overhead",
-                        if p.usable {
-                            Json::Num(p.energy_overhead)
-                        } else {
-                            Json::Null
-                        },
-                    )
-                    .set("usable", Json::Bool(p.usable));
-                j
-            })
-            .collect(),
-    )
+    Json::Arr(points.iter().map(point_to_json).collect())
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::hw::presets;
     use crate::workload::zoo;
@@ -240,5 +326,29 @@ mod tests {
             back.as_arr().unwrap()[0].get("arch").unwrap().as_str(),
             Some(arch.name.as_str())
         );
+    }
+
+    #[test]
+    fn resilience_codec_roundtrips_cliff_points() {
+        let p = ResiliencePoint {
+            arch: "usecase-4".into(),
+            pattern: "Dense".into(),
+            spatial: "row".into(),
+            fault_rate: 0.5,
+            usable_macros: 0,
+            total_macros: 4,
+            capacity_loss: 1.0,
+            extra_rounds: 0,
+            cycles: 0,
+            energy_pj: 0.0,
+            latency_overhead: f64::INFINITY,
+            energy_overhead: f64::INFINITY,
+            usable: false,
+        };
+        let c = resilience_codec();
+        let back = c.decode(&c.encode(&p)).unwrap();
+        assert!(!back.usable);
+        assert!(back.latency_overhead.is_infinite(), "null decodes to INFINITY");
+        assert_eq!(back.total_macros, 4);
     }
 }

@@ -2,14 +2,16 @@
 //! speedups/energy savings they buy, across models, weight-sparsity
 //! patterns and ratios.
 
-use super::sweep::parallel_map;
+use super::executor::{run_sweep, Codec, Job, Sweep, SweepConfig};
 use crate::hw::presets;
 use crate::mapping::planner::{plan, MappingOptions};
 use crate::pruning::workflow::PruningWorkflow;
 use crate::sim::engine::{simulate, SimOptions};
 use crate::sim::input_sparsity::InputProfiles;
 use crate::sparsity::flexblock::FlexBlock;
+use crate::util::json::Json;
 use crate::workload::graph::Network;
+use std::sync::Arc;
 
 /// One Fig. 10 measurement: the same configuration with (I) and without
 /// (W) input-sparsity support.
@@ -19,6 +21,32 @@ pub struct InputSparsityPoint {
     pub skip_ratio: f64,
     pub speedup_from_input: f64,
     pub energy_saving_from_input: f64,
+}
+
+fn point_to_json(p: &InputSparsityPoint) -> Json {
+    let mut j = Json::obj();
+    j.set("label", Json::Str(p.label.clone()))
+        .set("skip_ratio", Json::Num(p.skip_ratio))
+        .set("speedup_from_input", Json::Num(p.speedup_from_input))
+        .set(
+            "energy_saving_from_input",
+            Json::Num(p.energy_saving_from_input),
+        );
+    j
+}
+
+fn point_from_json(j: &Json) -> anyhow::Result<InputSparsityPoint> {
+    Ok(InputSparsityPoint {
+        label: j.req_str("label")?.to_string(),
+        skip_ratio: j.req_f64("skip_ratio")?,
+        speedup_from_input: j.req_f64("speedup_from_input")?,
+        energy_saving_from_input: j.req_f64("energy_saving_from_input")?,
+    })
+}
+
+/// Checkpoint-journal codec for [`InputSparsityPoint`] sweeps.
+pub fn input_codec() -> Codec<InputSparsityPoint> {
+    Codec::new(point_to_json, point_from_json)
 }
 
 fn run_pair(
@@ -45,27 +73,44 @@ fn run_pair(
     })
 }
 
-/// Fig. 10 left: input sparsity on dense models.
+/// Fig. 10 left: input sparsity on dense models, under the resilient
+/// executor.
+pub fn run_dense_models_robust(
+    nets: &[&Network],
+    zero_frac: f64,
+    cfg: &SweepConfig,
+) -> anyhow::Result<Sweep<InputSparsityPoint>> {
+    let jobs: Vec<Job<Arc<Network>>> = nets
+        .iter()
+        .map(|n| Job {
+            key: format!("fig10-dense:{}", n.name),
+            input: Arc::new((*n).clone()),
+        })
+        .collect();
+    let report = run_sweep(jobs, cfg, Some(input_codec()), move |net: &Arc<Network>| {
+        let profiles = InputProfiles::synthetic(net, 8, zero_frac, 0xF16_10);
+        run_pair(net, None, &profiles, &format!("{} (dense)", net.name))
+    })?;
+    Ok(Sweep::from_report(report))
+}
+
 pub fn run_dense_models(
     nets: &[&Network],
     zero_frac: f64,
     threads: usize,
 ) -> anyhow::Result<Vec<InputSparsityPoint>> {
-    let jobs: Vec<&Network> = nets.to_vec();
-    let results = parallel_map(jobs, threads, |net| {
-        let profiles = InputProfiles::synthetic(net, 8, zero_frac, 0xF16_10);
-        run_pair(net, None, &profiles, &format!("{} (dense)", net.name))
-    });
-    results.into_iter().collect()
+    run_dense_models_robust(nets, zero_frac, &SweepConfig::with_threads(threads))?.strict()
 }
 
-/// Fig. 10 middle: interaction with weight-sparsity patterns at 80%.
-/// Sparser weights shift activation distributions toward more zeros
-/// (`zero_frac` raised with weight sparsity, the paper's observation).
-pub fn run_weight_patterns(
+/// Fig. 10 middle: interaction with weight-sparsity patterns at 80%,
+/// under the resilient executor. Sparser weights shift activation
+/// distributions toward more zeros (`zero_frac` raised with weight
+/// sparsity, the paper's observation).
+pub fn run_weight_patterns_robust(
     net: &Network,
-    threads: usize,
-) -> anyhow::Result<Vec<InputSparsityPoint>> {
+    cfg: &SweepConfig,
+) -> anyhow::Result<Sweep<InputSparsityPoint>> {
+    let net = Arc::new(net.clone());
     let patterns = vec![
         FlexBlock::row_wise(0.8),
         FlexBlock::column_wise(0.8),
@@ -74,32 +119,63 @@ pub fn run_weight_patterns(
         FlexBlock::hybrid(2, 16, 0.8),
         FlexBlock::intra(2, 0.5),
     ];
-    let results = parallel_map(patterns, threads, |fb| {
-        let profiles = InputProfiles::synthetic(net, 8, 0.62, 0xF16_10);
-        run_pair(net, Some(&fb), &profiles, &fb.name)
-    });
-    results.into_iter().collect()
+    let jobs: Vec<Job<FlexBlock>> = patterns
+        .into_iter()
+        .map(|fb| Job {
+            key: format!("fig10-pattern:{}", fb.name),
+            input: fb,
+        })
+        .collect();
+    let report = run_sweep(jobs, cfg, Some(input_codec()), move |fb: &FlexBlock| {
+        let profiles = InputProfiles::synthetic(&net, 8, 0.62, 0xF16_10);
+        run_pair(&net, Some(fb), &profiles, &fb.name)
+    })?;
+    Ok(Sweep::from_report(report))
 }
 
-/// Fig. 10 right: row-wise pattern across weight-sparsity ratios.
+pub fn run_weight_patterns(
+    net: &Network,
+    threads: usize,
+) -> anyhow::Result<Vec<InputSparsityPoint>> {
+    run_weight_patterns_robust(net, &SweepConfig::with_threads(threads))?.strict()
+}
+
+/// Fig. 10 right: row-wise pattern across weight-sparsity ratios, under
+/// the resilient executor.
+pub fn run_ratio_sweep_robust(
+    net: &Network,
+    ratios: &[f64],
+    cfg: &SweepConfig,
+) -> anyhow::Result<Sweep<InputSparsityPoint>> {
+    let net = Arc::new(net.clone());
+    let jobs: Vec<Job<f64>> = ratios
+        .iter()
+        .map(|&r| Job {
+            key: format!("fig10-ratio:{r:.3}"),
+            input: r,
+        })
+        .collect();
+    let report = run_sweep(jobs, cfg, Some(input_codec()), move |&r: &f64| {
+        // activation zero-fraction grows with weight sparsity
+        let zero_frac = 0.5 + 0.25 * r;
+        let profiles = InputProfiles::synthetic(&net, 8, zero_frac, 0xF16_10);
+        let fb = FlexBlock::row_wise(r);
+        run_pair(&net, Some(&fb), &profiles, &format!("Row-wise@{r:.1}"))
+    })?;
+    Ok(Sweep::from_report(report))
+}
+
 pub fn run_ratio_sweep(
     net: &Network,
     ratios: &[f64],
     threads: usize,
 ) -> anyhow::Result<Vec<InputSparsityPoint>> {
-    let jobs: Vec<f64> = ratios.to_vec();
-    let results = parallel_map(jobs, threads, |r| {
-        // activation zero-fraction grows with weight sparsity
-        let zero_frac = 0.5 + 0.25 * r;
-        let profiles = InputProfiles::synthetic(net, 8, zero_frac, 0xF16_10);
-        let fb = FlexBlock::row_wise(r);
-        run_pair(net, Some(&fb), &profiles, &format!("Row-wise@{r:.1}"))
-    });
-    results.into_iter().collect()
+    run_ratio_sweep_robust(net, ratios, &SweepConfig::with_threads(threads))?.strict()
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::workload::zoo;
 
@@ -138,5 +214,19 @@ mod tests {
             pts[1].speedup_from_input,
             pts[0].speedup_from_input
         );
+    }
+
+    #[test]
+    fn input_point_codec_roundtrips() {
+        let p = InputSparsityPoint {
+            label: "Row-wise@0.8".into(),
+            skip_ratio: 0.42,
+            speedup_from_input: 1.6,
+            energy_saving_from_input: 1.3,
+        };
+        let c = input_codec();
+        let back = c.decode(&c.encode(&p)).unwrap();
+        assert_eq!(back.label, p.label);
+        assert_eq!(back.skip_ratio, p.skip_ratio);
     }
 }

@@ -2,7 +2,7 @@
 //! mapping vs. weight duplication across 16-macro organizations, and the
 //! effect of ragged-matrix rearrangement.
 
-use super::sweep::parallel_map;
+use super::executor::{run_sweep, Codec, Job, Sweep, SweepConfig};
 use crate::hw::presets;
 use crate::mapping::duplication::{Strategy, StrategyPolicy};
 use crate::mapping::planner::{plan, MappingOptions};
@@ -11,7 +11,9 @@ use crate::sim::engine::{simulate, SimOptions};
 use crate::sim::input_sparsity::InputProfiles;
 use crate::sim::report::SimReport;
 use crate::sparsity::flexblock::FlexBlock;
+use crate::util::json::Json;
 use crate::workload::graph::Network;
+use std::sync::Arc;
 
 /// One Fig. 11 cell: (model, organization, strategy) → cost triple.
 #[derive(Debug, Clone)]
@@ -22,6 +24,33 @@ pub struct MappingPoint {
     pub energy_pj: f64,
     pub latency_cycles: u64,
     pub utilization: f64,
+}
+
+fn point_to_json(p: &MappingPoint) -> Json {
+    let mut j = Json::obj();
+    j.set("model", Json::Str(p.model.clone()))
+        .set("org", Json::Str(p.org.clone()))
+        .set("strategy", Json::Str(p.strategy.clone()))
+        .set("energy_pj", Json::Num(p.energy_pj))
+        .set("latency_cycles", Json::Num(p.latency_cycles as f64))
+        .set("utilization", Json::Num(p.utilization));
+    j
+}
+
+fn point_from_json(j: &Json) -> anyhow::Result<MappingPoint> {
+    Ok(MappingPoint {
+        model: j.req_str("model")?.to_string(),
+        org: j.req_str("org")?.to_string(),
+        strategy: j.req_str("strategy")?.to_string(),
+        energy_pj: j.req_f64("energy_pj")?,
+        latency_cycles: j.req_f64("latency_cycles")? as u64,
+        utilization: j.req_f64("utilization")?,
+    })
+}
+
+/// Checkpoint-journal codec for [`MappingPoint`] sweeps.
+pub fn mapping_codec() -> Codec<MappingPoint> {
+    Codec::new(point_to_json, point_from_json)
 }
 
 /// The Fig. 11 organizations of the 16-macro architecture.
@@ -46,29 +75,52 @@ fn run_one(
     simulate(&arch, net, &mapping, Some(&profiles), SimOptions::default())
 }
 
-/// Fig. 11: sweep organizations × strategies for the given networks at
-/// the hybrid 80% pattern.
-pub fn run_fig11(nets: &[&Network], threads: usize) -> anyhow::Result<Vec<MappingPoint>> {
+/// Fig. 11 under the resilient executor: sweep organizations ×
+/// strategies for the given networks at the hybrid 80% pattern.
+pub fn run_fig11_robust(
+    nets: &[&Network],
+    cfg: &SweepConfig,
+) -> anyhow::Result<Sweep<MappingPoint>> {
     let fb = FlexBlock::hybrid(2, 16, 0.8);
-    let mut jobs = Vec::new();
+    let mut jobs: Vec<Job<(Arc<Network>, (usize, usize), Strategy)>> = Vec::new();
     for net in nets {
+        let netc = Arc::new((*net).clone());
         for org in ORGS {
             for strat in [Strategy::Spatial, Strategy::Duplicate] {
-                jobs.push((*net, org, strat));
+                jobs.push(Job {
+                    key: format!(
+                        "fig11:{}:{}x{}:{}",
+                        net.name,
+                        org.0,
+                        org.1,
+                        strat.label()
+                    ),
+                    input: (netc.clone(), org, strat),
+                });
             }
         }
     }
-    let results = parallel_map(jobs, threads, |(net, org, strat)| {
-        run_one(net, org, strat, &fb, false).map(|rep| MappingPoint {
-            model: net.name.clone(),
-            org: format!("{}x{}", org.0, org.1),
-            strategy: strat.label().to_string(),
-            energy_pj: rep.energy.total_pj,
-            latency_cycles: rep.total_cycles,
-            utilization: rep.mean_utilization,
-        })
-    });
-    results.into_iter().collect()
+    let report = run_sweep(
+        jobs,
+        cfg,
+        Some(mapping_codec()),
+        move |(net, org, strat): &(Arc<Network>, (usize, usize), Strategy)| {
+            let rep = run_one(net, *org, *strat, &fb, false)?;
+            Ok(MappingPoint {
+                model: net.name.clone(),
+                org: format!("{}x{}", org.0, org.1),
+                strategy: strat.label().to_string(),
+                energy_pj: rep.energy.total_pj,
+                latency_cycles: rep.total_cycles,
+                utilization: rep.mean_utilization,
+            })
+        },
+    )?;
+    Ok(Sweep::from_report(report))
+}
+
+pub fn run_fig11(nets: &[&Network], threads: usize) -> anyhow::Result<Vec<MappingPoint>> {
+    run_fig11_robust(nets, &SweepConfig::with_threads(threads))?.strict()
 }
 
 /// One Fig. 12 row: rearrangement off/on for a strategy.
@@ -82,31 +134,43 @@ pub struct RearrangePoint {
     pub report: SimReport,
 }
 
-/// Fig. 12: hybrid Intra(2,1)+Full(2,16) on the 4×4 organization, with
-/// and without weight-data rearrangement, for both strategies.
-pub fn run_fig12(net: &Network, threads: usize) -> anyhow::Result<Vec<RearrangePoint>> {
+/// Fig. 12 under the resilient executor: hybrid Intra(2,1)+Full(2,16)
+/// on the 4×4 organization, with and without weight-data rearrangement,
+/// for both strategies. Points embed the full [`SimReport`], so this
+/// sweep has no checkpoint codec (`--checkpoint` is inert for it).
+pub fn run_fig12_robust(net: &Network, cfg: &SweepConfig) -> anyhow::Result<Sweep<RearrangePoint>> {
     let fb = FlexBlock::hybrid(2, 16, 0.8);
-    let mut jobs = Vec::new();
+    let net = Arc::new(net.clone());
+    let mut jobs: Vec<Job<(Strategy, bool)>> = Vec::new();
     for strat in [Strategy::Spatial, Strategy::Duplicate] {
         for rearr in [false, true] {
-            jobs.push((strat, rearr));
+            jobs.push(Job {
+                key: format!("fig12:{}:{}", strat.label(), rearr),
+                input: (strat, rearr),
+            });
         }
     }
-    let results = parallel_map(jobs, threads, |(strat, rearr)| {
-        run_one(net, (4, 4), strat, &fb, rearr).map(|rep| RearrangePoint {
+    let report = run_sweep(jobs, cfg, None, move |(strat, rearr): &(Strategy, bool)| {
+        let rep = run_one(&net, (4, 4), *strat, &fb, *rearr)?;
+        Ok(RearrangePoint {
             strategy: strat.label().to_string(),
-            rearranged: rearr,
+            rearranged: *rearr,
             energy_pj: rep.energy.total_pj,
             latency_cycles: rep.total_cycles,
             utilization: rep.mean_utilization,
             report: rep,
         })
-    });
-    results.into_iter().collect()
+    })?;
+    Ok(Sweep::from_report(report))
+}
+
+pub fn run_fig12(net: &Network, threads: usize) -> anyhow::Result<Vec<RearrangePoint>> {
+    run_fig12_robust(net, &SweepConfig::with_threads(threads))?.strict()
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::workload::zoo;
 
@@ -164,5 +228,21 @@ mod tests {
                 base.utilization
             );
         }
+    }
+
+    #[test]
+    fn mapping_point_codec_roundtrips() {
+        let p = MappingPoint {
+            model: "resnet50".into(),
+            org: "4x4".into(),
+            strategy: "duplicate".into(),
+            energy_pj: 1.5e9,
+            latency_cycles: 123_456,
+            utilization: 0.8,
+        };
+        let c = mapping_codec();
+        let back = c.decode(&c.encode(&p)).unwrap();
+        assert_eq!(back.model, p.model);
+        assert_eq!(back.latency_cycles, p.latency_cycles);
     }
 }

@@ -1,7 +1,13 @@
-//! Design-space exploration (Sec. VII): the parallel sweep executor and
-//! the study drivers behind Fig. 8–12.
+//! Design-space exploration (Sec. VII): the resilient sweep executor
+//! and the study drivers behind Fig. 8–12.
+//!
+//! Unhandled `.unwrap()` in sweep code means one bad design point can
+//! abort an hours-long exploration, so it is linted against here
+//! (tests are exempt).
+#![warn(clippy::unwrap_used)]
 
 pub mod ablation_study;
+pub mod executor;
 pub mod fault_study;
 pub mod input_study;
 pub mod mapping_study;
@@ -9,4 +15,7 @@ pub mod search;
 pub mod sparsity_study;
 pub mod sweep;
 
-pub use sweep::parallel_map;
+pub use executor::{
+    run_sweep, Codec, Job, JobError, JobOutcome, Sweep, SweepConfig, SweepFailure, SweepReport,
+};
+pub use sweep::{parallel_map, try_parallel_map};

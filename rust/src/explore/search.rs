@@ -4,7 +4,7 @@
 //! strategy) candidates, simulate each in parallel, and return the
 //! Pareto frontier over (latency, energy) with optional constraints.
 
-use super::sweep::parallel_map;
+use super::executor::{run_sweep, Codec, Job, Sweep, SweepConfig};
 use crate::hw::presets;
 use crate::mapping::duplication::{Strategy, StrategyPolicy};
 use crate::mapping::planner::{plan, MappingOptions};
@@ -12,7 +12,9 @@ use crate::pruning::workflow::PruningWorkflow;
 use crate::sim::engine::{simulate, SimOptions};
 use crate::sim::input_sparsity::InputProfiles;
 use crate::sparsity::flexblock::FlexBlock;
+use crate::util::json::Json;
 use crate::workload::graph::Network;
+use std::sync::Arc;
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
@@ -28,8 +30,15 @@ pub struct DesignPoint {
 
 impl DesignPoint {
     /// Pareto dominance on (cycles, energy): true if `self` is at least
-    /// as good on both axes and better on one.
+    /// as good on both axes and better on one. NaN energy on either
+    /// side never dominates and is never dominated (all comparisons
+    /// with NaN are false), so a corrupt point cannot silently evict
+    /// valid points from the frontier — [`pareto_frontier`] drops
+    /// non-finite points up front instead.
     pub fn dominates(&self, other: &DesignPoint) -> bool {
+        if self.energy_pj.is_nan() || other.energy_pj.is_nan() {
+            return false;
+        }
         (self.cycles <= other.cycles && self.energy_pj <= other.energy_pj)
             && (self.cycles < other.cycles || self.energy_pj < other.energy_pj)
     }
@@ -45,7 +54,10 @@ pub struct Constraints {
     pub min_utilization: Option<f64>,
 }
 
-/// The candidate space of a search over `n_macros` macros.
+/// The candidate space of a search over `n_macros` macros: every
+/// (pattern, ratio, organization, strategy) combination. An empty
+/// `ratios` slice yields an empty candidate list (a search over nothing
+/// finds nothing — it is not an error).
 pub fn candidates(n_macros: usize, ratios: &[f64]) -> Vec<(FlexBlock, (usize, usize), Strategy)> {
     let orgs: Vec<(usize, usize)> = (1..=n_macros)
         .filter(|d| n_macros % d == 0)
@@ -69,7 +81,118 @@ pub fn candidates(n_macros: usize, ratios: &[f64]) -> Vec<(FlexBlock, (usize, us
     out
 }
 
-/// Evaluate the space and return (all points, pareto frontier).
+fn point_to_json(p: &DesignPoint) -> Json {
+    let mut j = Json::obj();
+    j.set("pattern", Json::Str(p.pattern.clone()))
+        .set("ratio", Json::Num(p.ratio))
+        .set("org_rows", Json::Num(p.org.0 as f64))
+        .set("org_cols", Json::Num(p.org.1 as f64))
+        .set("strategy", Json::Str(p.strategy.to_string()))
+        .set("cycles", Json::Num(p.cycles as f64))
+        .set("energy_pj", Json::Num(p.energy_pj))
+        .set("utilization", Json::Num(p.utilization));
+    j
+}
+
+fn point_from_json(j: &Json) -> anyhow::Result<DesignPoint> {
+    Ok(DesignPoint {
+        pattern: j.req_str("pattern")?.to_string(),
+        ratio: j.req_f64("ratio")?,
+        org: (j.req_usize("org_rows")?, j.req_usize("org_cols")?),
+        // round-trip through parse() to recover the &'static label
+        strategy: Strategy::parse(j.req_str("strategy")?)?.label(),
+        cycles: j.req_f64("cycles")? as u64,
+        energy_pj: j.req_f64("energy_pj")?,
+        utilization: j.req_f64("utilization")?,
+    })
+}
+
+/// Checkpoint-journal codec for search sweeps. Constraint-filtered
+/// candidates evaluate to `None` and journal as JSON `null`.
+pub fn design_codec() -> Codec<Option<DesignPoint>> {
+    Codec::new(
+        |p: &Option<DesignPoint>| match p {
+            Some(p) => point_to_json(p),
+            None => Json::Null,
+        },
+        |j: &Json| match j {
+            Json::Null => Ok(None),
+            other => point_from_json(other).map(Some),
+        },
+    )
+}
+
+/// Evaluate the candidate space under the resilient executor. Returns
+/// the raw sweep (one `Option<DesignPoint>` per candidate; `None` =
+/// filtered by constraints) plus the Pareto frontier over the surviving
+/// points. Failed candidates are reported in the sweep's `failures` and
+/// simply do not compete for the frontier.
+pub fn search_robust(
+    net: &Network,
+    n_macros: usize,
+    ratios: &[f64],
+    cons: Constraints,
+    cfg: &SweepConfig,
+) -> anyhow::Result<(Sweep<Option<DesignPoint>>, Vec<DesignPoint>)> {
+    let net = Arc::new(net.clone());
+    let jobs: Vec<Job<(FlexBlock, (usize, usize), Strategy)>> = candidates(n_macros, ratios)
+        .into_iter()
+        .map(|(fb, org, strat)| Job {
+            key: format!(
+                "search:{}:{:.3}:{}x{}:{}",
+                fb.name,
+                fb.overall_sparsity(),
+                org.0,
+                org.1,
+                strat.label()
+            ),
+            input: (fb, org, strat),
+        })
+        .collect();
+    let report = run_sweep(
+        jobs,
+        cfg,
+        Some(design_codec()),
+        move |(fb, org, strat): &(FlexBlock, (usize, usize), Strategy)| {
+            if let Some(maxs) = cons.max_sparsity {
+                if fb.overall_sparsity() > maxs + 1e-9 {
+                    return Ok(None);
+                }
+            }
+            let arch = presets::usecase_arch(n_macros, *org);
+            let prune = PruningWorkflow::default().run_uniform(&net, fb, None)?;
+            let opts = MappingOptions {
+                policy: StrategyPolicy::Fixed(*strat),
+                ..Default::default()
+            };
+            let mapping = plan(&arch, &net, Some(&prune), opts)?;
+            let profiles = InputProfiles::synthetic(&net, arch.input_bits, 0.55, 0x5EA);
+            let rep = simulate(&arch, &net, &mapping, Some(&profiles), SimOptions::default())?;
+            if let Some(minu) = cons.min_utilization {
+                if rep.mean_utilization < minu {
+                    return Ok(None);
+                }
+            }
+            Ok(Some(DesignPoint {
+                pattern: fb.name.clone(),
+                ratio: fb.overall_sparsity(),
+                org: *org,
+                strategy: strat.label(),
+                cycles: rep.total_cycles,
+                energy_pj: rep.energy.total_pj,
+                utilization: rep.mean_utilization,
+            }))
+        },
+    )?;
+    let sweep = Sweep::from_report(report);
+    let all: Vec<DesignPoint> = sweep.points.iter().filter_map(|p| p.clone()).collect();
+    let pareto = pareto_frontier(&all);
+    Ok((sweep, pareto))
+}
+
+/// Historical strict signature: evaluate the space and return
+/// (all surviving points, pareto frontier). Any executor-level failure
+/// aborts the search.
 pub fn search(
     net: &Network,
     n_macros: usize,
@@ -77,58 +200,26 @@ pub fn search(
     cons: Constraints,
     threads: usize,
 ) -> anyhow::Result<(Vec<DesignPoint>, Vec<DesignPoint>)> {
-    let cands = candidates(n_macros, ratios);
-    let results = parallel_map(cands, threads, |(fb, org, strat)| -> anyhow::Result<Option<DesignPoint>> {
-        if let Some(maxs) = cons.max_sparsity {
-            if fb.overall_sparsity() > maxs + 1e-9 {
-                return Ok(None);
-            }
-        }
-        let arch = presets::usecase_arch(n_macros, org);
-        let prune = PruningWorkflow::default().run_uniform(net, &fb, None)?;
-        let opts = MappingOptions {
-            policy: StrategyPolicy::Fixed(strat),
-            ..Default::default()
-        };
-        let mapping = plan(&arch, net, Some(&prune), opts)?;
-        let profiles = InputProfiles::synthetic(net, arch.input_bits, 0.55, 0x5EA);
-        let rep = simulate(&arch, net, &mapping, Some(&profiles), SimOptions::default())?;
-        if let Some(minu) = cons.min_utilization {
-            if rep.mean_utilization < minu {
-                return Ok(None);
-            }
-        }
-        Ok(Some(DesignPoint {
-            pattern: fb.name.clone(),
-            ratio: fb.overall_sparsity(),
-            org,
-            strategy: strat.label(),
-            cycles: rep.total_cycles,
-            energy_pj: rep.energy.total_pj,
-            utilization: rep.mean_utilization,
-        }))
-    });
-    let mut all = Vec::new();
-    for r in results {
-        if let Some(p) = r? {
-            all.push(p);
-        }
-    }
-    let pareto = pareto_frontier(&all);
+    let (sweep, pareto) = search_robust(net, n_macros, ratios, cons, &SweepConfig::with_threads(threads))?;
+    let all: Vec<DesignPoint> = sweep.strict()?.into_iter().flatten().collect();
     Ok((all, pareto))
 }
 
-/// Extract the Pareto-optimal subset.
+/// Extract the Pareto-optimal subset. Points with non-finite energy
+/// (NaN/∞ from a degenerate model) are excluded up front: they can
+/// neither sit on a finite frontier nor be meaningfully compared.
 pub fn pareto_frontier(points: &[DesignPoint]) -> Vec<DesignPoint> {
-    points
+    let finite: Vec<&DesignPoint> = points.iter().filter(|p| p.energy_pj.is_finite()).collect();
+    finite
         .iter()
-        .filter(|p| !points.iter().any(|q| q.dominates(p)))
-        .cloned()
+        .filter(|p| !finite.iter().any(|q| q.dominates(p)))
+        .map(|p| (*p).clone())
         .collect()
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::workload::zoo;
 
@@ -137,6 +228,15 @@ mod tests {
         let c = candidates(4, &[0.5, 0.8]);
         // 2 ratios × 4 patterns × 3 orgs (1x4, 2x2, 4x1) × 2 strategies
         assert_eq!(c.len(), 2 * 4 * 3 * 2);
+    }
+
+    #[test]
+    fn empty_ratio_list_yields_empty_space() {
+        assert!(candidates(4, &[]).is_empty());
+        let net = zoo::resnet_mini();
+        let (all, pareto) = search(&net, 4, &[], Constraints::default(), 0).unwrap();
+        assert!(all.is_empty());
+        assert!(pareto.is_empty());
     }
 
     #[test]
@@ -175,5 +275,40 @@ mod tests {
         assert!(a.dominates(&b));
         assert!(!b.dominates(&a));
         assert!(!a.dominates(&a.clone()));
+    }
+
+    #[test]
+    fn nan_energy_never_dominates_or_poisons_the_frontier() {
+        let good = DesignPoint {
+            pattern: "good".into(), ratio: 0.5, org: (2, 2), strategy: "sp",
+            cycles: 100, energy_pj: 100.0, utilization: 0.5,
+        };
+        let mut nan = good.clone();
+        nan.pattern = "nan".into();
+        nan.cycles = 1;
+        nan.energy_pj = f64::NAN;
+        assert!(!nan.dominates(&good), "NaN cannot dominate");
+        assert!(!good.dominates(&nan), "NaN cannot be dominated");
+        let mut inf = good.clone();
+        inf.pattern = "inf".into();
+        inf.energy_pj = f64::INFINITY;
+        let frontier = pareto_frontier(&[good.clone(), nan, inf]);
+        assert_eq!(frontier.len(), 1, "only the finite point survives");
+        assert_eq!(frontier[0].pattern, "good");
+    }
+
+    #[test]
+    fn design_codec_roundtrips_including_filtered() {
+        let p = DesignPoint {
+            pattern: "Hybrid".into(), ratio: 0.8, org: (4, 1), strategy: "duplicate",
+            cycles: 5000, energy_pj: 2.5e6, utilization: 0.7,
+        };
+        let c = design_codec();
+        let back = c.decode(&c.encode(&Some(p.clone()))).unwrap().unwrap();
+        assert_eq!(back.pattern, p.pattern);
+        assert_eq!(back.org, p.org);
+        assert_eq!(back.strategy, "duplicate");
+        let none = c.decode(&c.encode(&None)).unwrap();
+        assert!(none.is_none(), "filtered candidates journal as null");
     }
 }

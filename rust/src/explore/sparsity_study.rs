@@ -2,13 +2,15 @@
 //! saving and model accuracy across the Table II sparsity patterns and
 //! ratios 0.5–0.9 on the 4-macro use-case architecture.
 
-use super::sweep::parallel_map;
+use super::executor::{run_sweep, Codec, Job, Sweep, SweepConfig};
 use crate::hw::arch::Architecture;
 use crate::hw::presets;
 use crate::sim::engine::simulate_network_default;
 use crate::sim::report::SimReport;
 use crate::sparsity::flexblock::FlexBlock;
+use crate::util::json::Json;
 use crate::workload::graph::Network;
+use std::sync::Arc;
 
 /// One point of the Fig. 8 sweep.
 #[derive(Debug, Clone)]
@@ -20,6 +22,50 @@ pub struct SparsityPoint {
     pub utilization: f64,
     /// Filled from PJRT accuracy evaluation when artifacts are present.
     pub accuracy: Option<f64>,
+}
+
+fn point_to_json(p: &SparsityPoint) -> Json {
+    let mut j = Json::obj();
+    j.set("pattern", Json::Str(p.pattern.clone()))
+        .set("ratio", Json::Num(p.ratio))
+        .set("speedup", Json::Num(p.speedup))
+        .set("energy_saving", Json::Num(p.energy_saving))
+        .set("utilization", Json::Num(p.utilization))
+        .set(
+            "accuracy",
+            match p.accuracy {
+                Some(a) => Json::Num(a),
+                None => Json::Null,
+            },
+        );
+    j
+}
+
+fn point_from_json(j: &Json) -> anyhow::Result<SparsityPoint> {
+    Ok(SparsityPoint {
+        pattern: j.req_str("pattern")?.to_string(),
+        ratio: j.req_f64("ratio")?,
+        speedup: j.req_f64("speedup")?,
+        energy_saving: j.req_f64("energy_saving")?,
+        utilization: j.req_f64("utilization")?,
+        accuracy: j.get("accuracy").and_then(Json::as_f64),
+    })
+}
+
+/// Checkpoint-journal codec for [`SparsityPoint`] sweeps.
+pub fn sparsity_codec() -> Codec<SparsityPoint> {
+    Codec::new(point_to_json, point_from_json)
+}
+
+fn model_point_codec() -> Codec<(String, SparsityPoint)> {
+    Codec::new(
+        |(model, p): &(String, SparsityPoint)| {
+            let mut j = point_to_json(p);
+            j.set("model", Json::Str(model.clone()));
+            j
+        },
+        |j: &Json| Ok((j.req_str("model")?.to_string(), point_from_json(j)?)),
+    )
 }
 
 /// The Fig. 8 / Table II pattern set at a given overall ratio.
@@ -39,35 +85,62 @@ pub fn fig8_patterns(ratio: f64) -> Vec<FlexBlock> {
 /// The standard ratio axis of the use-cases.
 pub const RATIOS: [f64; 5] = [0.5, 0.6, 0.7, 0.8, 0.9];
 
-/// Run the cost side of Fig. 8 (accuracy is attached separately by the
-/// caller when a PJRT session is available).
-pub fn run_fig8(net: &Network, ratios: &[f64], threads: usize) -> anyhow::Result<Vec<SparsityPoint>> {
+fn sparsity_point(fb: &FlexBlock, ratio: f64, rep: &SimReport, dense: &SimReport) -> SparsityPoint {
+    SparsityPoint {
+        pattern: fb.name.clone(),
+        ratio,
+        speedup: rep.speedup_vs(dense),
+        energy_saving: rep.energy_saving_vs(dense),
+        utilization: rep.mean_utilization,
+        accuracy: None,
+    }
+}
+
+fn dense_baseline(net: &Network) -> anyhow::Result<(Arc<SimReport>, Arc<Architecture>)> {
     let dense_arch = presets::usecase_dense_baseline(4, (2, 2));
     let dense = simulate_network_default(&dense_arch, net, None)?;
-    let arch = presets::usecase_arch(4, (2, 2));
-    let mut jobs: Vec<(FlexBlock, f64)> = Vec::new();
+    Ok((Arc::new(dense), Arc::new(presets::usecase_arch(4, (2, 2)))))
+}
+
+/// Run the cost side of Fig. 8 under the resilient executor; failed
+/// points are reported in the returned [`Sweep`] instead of aborting
+/// the study. (Accuracy is attached separately by the caller when a
+/// PJRT session is available.)
+pub fn run_fig8_robust(
+    net: &Network,
+    ratios: &[f64],
+    cfg: &SweepConfig,
+) -> anyhow::Result<Sweep<SparsityPoint>> {
+    let (dense, arch) = dense_baseline(net)?;
+    let net = Arc::new(net.clone());
+    let mut jobs = Vec::new();
     for &r in ratios {
         for fb in fig8_patterns(r) {
-            jobs.push((fb, r));
+            jobs.push(Job {
+                key: format!("fig8:{}:{r:.3}", fb.name),
+                input: (fb, r),
+            });
         }
     }
-    let results = parallel_map(jobs, threads, |(fb, r)| {
-        let rep = simulate_network_default(&arch, net, Some(&fb));
-        (fb, r, rep)
-    });
-    let mut out = Vec::new();
-    for (fb, ratio, rep) in results {
-        let rep: SimReport = rep?;
-        out.push(SparsityPoint {
-            pattern: fb.name.clone(),
-            ratio,
-            speedup: rep.speedup_vs(&dense),
-            energy_saving: rep.energy_saving_vs(&dense),
-            utilization: rep.mean_utilization,
-            accuracy: None,
-        });
-    }
-    Ok(out)
+    let report = run_sweep(
+        jobs,
+        cfg,
+        Some(sparsity_codec()),
+        move |(fb, r): &(FlexBlock, f64)| {
+            let rep = simulate_network_default(&arch, &net, Some(fb))?;
+            Ok(sparsity_point(fb, *r, &rep, &dense))
+        },
+    )?;
+    Ok(Sweep::from_report(report))
+}
+
+/// Strict legacy entry point: any failed point fails the whole study.
+pub fn run_fig8(
+    net: &Network,
+    ratios: &[f64],
+    threads: usize,
+) -> anyhow::Result<Vec<SparsityPoint>> {
+    run_fig8_robust(net, ratios, &SweepConfig::with_threads(threads))?.strict()
 }
 
 /// Fig. 9(a): block-size sweep at fixed 80% sparsity. Sizes chosen to
@@ -88,67 +161,71 @@ pub fn fig9a_patterns() -> Vec<FlexBlock> {
     v
 }
 
-pub fn run_fig9a(net: &Network, threads: usize) -> anyhow::Result<Vec<SparsityPoint>> {
-    let dense_arch = presets::usecase_dense_baseline(4, (2, 2));
-    let dense = simulate_network_default(&dense_arch, net, None)?;
-    let arch = presets::usecase_arch(4, (2, 2));
-    let results = parallel_map(fig9a_patterns(), threads, |fb| {
-        let rep = simulate_network_default(&arch, net, Some(&fb));
-        (fb, rep)
-    });
-    let mut out = Vec::new();
-    for (fb, rep) in results {
-        let rep = rep?;
-        out.push(SparsityPoint {
-            pattern: fb.name.clone(),
-            ratio: 0.8,
-            speedup: rep.speedup_vs(&dense),
-            energy_saving: rep.energy_saving_vs(&dense),
-            utilization: rep.mean_utilization,
-            accuracy: None,
-        });
-    }
-    Ok(out)
+/// Fig. 9(a) under the resilient executor.
+pub fn run_fig9a_robust(net: &Network, cfg: &SweepConfig) -> anyhow::Result<Sweep<SparsityPoint>> {
+    let (dense, arch) = dense_baseline(net)?;
+    let net = Arc::new(net.clone());
+    let jobs: Vec<Job<FlexBlock>> = fig9a_patterns()
+        .into_iter()
+        .map(|fb| Job {
+            key: format!("fig9a:{}", fb.name),
+            input: fb,
+        })
+        .collect();
+    let report = run_sweep(jobs, cfg, Some(sparsity_codec()), move |fb: &FlexBlock| {
+        let rep = simulate_network_default(&arch, &net, Some(fb))?;
+        Ok(sparsity_point(fb, 0.8, &rep, &dense))
+    })?;
+    Ok(Sweep::from_report(report))
 }
 
-/// Fig. 9(b): the cross-model comparison at 80% sparsity. Returns
-/// (model, pattern, point) rows; depthwise convs and FC layers keep the
-/// default workflow exclusions (the paper restricts pruning to standard
-/// convs for MobileNetV2/VGG16 after observing accuracy collapse).
+pub fn run_fig9a(net: &Network, threads: usize) -> anyhow::Result<Vec<SparsityPoint>> {
+    run_fig9a_robust(net, &SweepConfig::with_threads(threads))?.strict()
+}
+
+/// Fig. 9(b): the cross-model comparison at 80% sparsity, under the
+/// resilient executor. Returns (model, point) rows; depthwise convs and
+/// FC layers keep the default workflow exclusions (the paper restricts
+/// pruning to standard convs for MobileNetV2/VGG16 after observing
+/// accuracy collapse).
+pub fn run_fig9b_robust(
+    nets: &[&Network],
+    cfg: &SweepConfig,
+) -> anyhow::Result<Sweep<(String, SparsityPoint)>> {
+    let arch = Arc::new(presets::usecase_arch(4, (2, 2)));
+    let mut jobs: Vec<Job<(Arc<Network>, Arc<SimReport>, FlexBlock)>> = Vec::new();
+    for net in nets {
+        let dense_arch = presets::usecase_dense_baseline(4, (2, 2));
+        let dense = Arc::new(simulate_network_default(&dense_arch, net, None)?);
+        let netc = Arc::new((*net).clone());
+        for fb in [
+            FlexBlock::row_block(16, 0.8),
+            FlexBlock::column_block(16, 0.8),
+            FlexBlock::hybrid(2, 16, 0.8),
+        ] {
+            jobs.push(Job {
+                key: format!("fig9b:{}:{}", net.name, fb.name),
+                input: (netc.clone(), dense.clone(), fb),
+            });
+        }
+    }
+    let report = run_sweep(
+        jobs,
+        cfg,
+        Some(model_point_codec()),
+        move |(net, dense, fb): &(Arc<Network>, Arc<SimReport>, FlexBlock)| {
+            let rep = simulate_network_default(&arch, net, Some(fb))?;
+            Ok((net.name.clone(), sparsity_point(fb, 0.8, &rep, dense)))
+        },
+    )?;
+    Ok(Sweep::from_report(report))
+}
+
 pub fn run_fig9b(
     nets: &[&Network],
     threads: usize,
 ) -> anyhow::Result<Vec<(String, SparsityPoint)>> {
-    let mut out = Vec::new();
-    for net in nets {
-        let dense_arch = presets::usecase_dense_baseline(4, (2, 2));
-        let dense = simulate_network_default(&dense_arch, net, None)?;
-        let arch = presets::usecase_arch(4, (2, 2));
-        let patterns = vec![
-            FlexBlock::row_block(16, 0.8),
-            FlexBlock::column_block(16, 0.8),
-            FlexBlock::hybrid(2, 16, 0.8),
-        ];
-        let results = parallel_map(patterns, threads, |fb| {
-            let rep = simulate_network_default(&arch, net, Some(&fb));
-            (fb, rep)
-        });
-        for (fb, rep) in results {
-            let rep = rep?;
-            out.push((
-                net.name.clone(),
-                SparsityPoint {
-                    pattern: fb.name.clone(),
-                    ratio: 0.8,
-                    speedup: rep.speedup_vs(&dense),
-                    energy_saving: rep.energy_saving_vs(&dense),
-                    utilization: rep.mean_utilization,
-                    accuracy: None,
-                },
-            ));
-        }
-    }
-    Ok(out)
+    run_fig9b_robust(nets, &SweepConfig::with_threads(threads))?.strict()
 }
 
 /// Convenience: the use-case architectures of Sec. VII-A.
@@ -161,6 +238,7 @@ pub fn usecase_archs() -> (Architecture, Architecture) {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::workload::zoo;
 
@@ -208,5 +286,38 @@ mod tests {
         let net = zoo::resnet_mini();
         let pts = run_fig9a(&net, 0).unwrap();
         assert_eq!(pts.len(), fig9a_patterns().len());
+    }
+
+    #[test]
+    fn sparsity_point_codec_roundtrips() {
+        let p = SparsityPoint {
+            pattern: "Row-wise".into(),
+            ratio: 0.8,
+            speedup: 3.25,
+            energy_saving: 2.5,
+            utilization: 0.75,
+            accuracy: None,
+        };
+        let c = sparsity_codec();
+        let back = c.decode(&c.encode(&p)).unwrap();
+        assert_eq!(back.pattern, p.pattern);
+        assert_eq!(back.speedup, p.speedup);
+        assert_eq!(back.accuracy, None);
+        let with_acc = SparsityPoint {
+            accuracy: Some(0.91),
+            ..p
+        };
+        let back2 = c.decode(&c.encode(&with_acc)).unwrap();
+        assert_eq!(back2.accuracy, Some(0.91));
+    }
+
+    #[test]
+    fn fig8_robust_reports_sweep_shape() {
+        let net = zoo::resnet_mini();
+        let sw = run_fig8_robust(&net, &[0.8], &SweepConfig::default()).unwrap();
+        assert_eq!(sw.total, fig8_patterns(0.8).len());
+        assert!(sw.failures.is_empty(), "{}", sw.summary());
+        assert_eq!(sw.points.len(), sw.total);
+        assert_eq!(sw.resumed, 0);
     }
 }

@@ -1,19 +1,42 @@
-//! Parallel sweep executor: the L3 coordinator's work-distribution core.
-//! Design-space exploration runs hundreds of independent (architecture,
-//! workload, sparsity, mapping) simulations; this fans them out over a
-//! std-thread pool (no rayon offline) with deterministic result order.
+//! Ordered parallel fan-out: the minimal work-distribution primitive
+//! underneath `explore::executor`. Design-space exploration runs
+//! hundreds of independent (architecture, workload, sparsity, mapping)
+//! simulations; this fans them out over a std-thread pool (no rayon
+//! offline) with deterministic result order.
+//!
+//! Prefer [`super::executor::run_sweep`] for study-scale sweeps — it
+//! adds timeouts, retries, checkpointing and partial results. The
+//! functions here remain for small, trusted, infallible maps.
 
+use super::executor::{panic_message, JobError};
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
-/// Map `f` over `items` in parallel, preserving input order in the
-/// output. Uses up to `threads` workers (0 = available parallelism).
-pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // never let one worker's panic poison the sweep: take the guard
+    // even from a poisoned mutex (slot state stays consistent because
+    // jobs run outside the critical sections)
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn catch<R>(f: impl FnOnce() -> R) -> Result<R, JobError> {
+    panic::catch_unwind(AssertUnwindSafe(f))
+        .map_err(|payload| JobError::Panic(panic_message(payload.as_ref())))
+}
+
+/// Map `f` over `items` in parallel with per-job panic isolation,
+/// preserving input order in the output. A panicking job yields
+/// `Err(JobError::Panic)` for its slot; every other job still runs to
+/// completion and its result survives. Uses up to `threads` workers
+/// (0 = available parallelism).
+pub fn try_parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<Result<R, JobError>>
 where
     T: Send,
     R: Send,
     F: Fn(T) -> R + Sync,
 {
+    super::executor::install_quiet_panic_hook();
     let n = items.len();
     if n == 0 {
         return Vec::new();
@@ -27,33 +50,74 @@ where
     }
     .min(n);
     if threads <= 1 {
-        return items.into_iter().map(f).collect();
+        return items.into_iter().map(|t| catch(|| f(t))).collect();
     }
 
     let work: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
-    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let results: Vec<Mutex<Option<Result<R, JobError>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
     std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let item = work[i].lock().unwrap().take().expect("item taken once");
-                let r = f(item);
-                *results[i].lock().unwrap() = Some(r);
-            });
+        for w in 0..threads {
+            std::thread::Builder::new()
+                .name(format!("ciminus-job-map-{w}"))
+                .spawn_scoped(scope, || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let item = lock(&work[i]).take().expect("item taken once");
+                    let r = catch(|| f(item));
+                    *lock(&results[i]) = Some(r);
+                })
+                .expect("spawn sweep worker");
         }
     });
     results
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("all results filled"))
+        .map(|m| {
+            m.into_inner()
+                .unwrap_or_else(PoisonError::into_inner)
+                .expect("all results filled")
+        })
         .collect()
+}
+
+/// Infallible variant with the historical signature. All jobs run to
+/// completion even if some panic; if any did, the first captured panic
+/// is re-raised (in the caller's thread) after the sweep finishes, so a
+/// single bad item can no longer poison mutexes or abort sibling jobs
+/// mid-flight.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let results = try_parallel_map(items, threads, f);
+    let mut out = Vec::with_capacity(results.len());
+    let mut first_panic: Option<String> = None;
+    let mut n_panics = 0usize;
+    for r in results {
+        match r {
+            Ok(v) => out.push(v),
+            Err(e) => {
+                n_panics += 1;
+                if first_panic.is_none() {
+                    first_panic = Some(e.to_string());
+                }
+            }
+        }
+    }
+    if let Some(msg) = first_panic {
+        panic!("parallel_map: {n_panics} job(s) panicked; first: {msg}");
+    }
+    out
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
 
     #[test]
@@ -90,5 +154,62 @@ mod tests {
         });
         let distinct: BTreeSet<_> = ids.into_iter().collect();
         assert!(distinct.len() > 1, "expected multiple worker threads");
+    }
+
+    /// Regression for the poisoned-mutex abort path: a panicking job
+    /// must not take down its siblings' results.
+    #[test]
+    fn panicking_job_does_not_poison_siblings() {
+        let items: Vec<usize> = (0..32).collect();
+        let out = try_parallel_map(items, 4, |i| {
+            if i == 7 {
+                panic!("injected failure at {i}");
+            }
+            i * 10
+        });
+        assert_eq!(out.len(), 32);
+        for (i, r) in out.iter().enumerate() {
+            if i == 7 {
+                let e = r.as_ref().unwrap_err();
+                assert_eq!(e.kind(), "panic");
+                assert!(e.to_string().contains("injected failure"), "{e}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i * 10, "sibling {i} survived");
+            }
+        }
+    }
+
+    #[test]
+    fn panicking_job_isolated_on_single_thread_path() {
+        let out = try_parallel_map(vec![0usize, 1, 2], 1, |i| {
+            if i == 1 {
+                panic!("solo");
+            }
+            i
+        });
+        assert!(out[0].is_ok() && out[2].is_ok());
+        assert!(out[1].is_err());
+    }
+
+    #[test]
+    fn parallel_map_repanics_after_completing_siblings() {
+        let completed = std::sync::atomic::AtomicUsize::new(0);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            parallel_map((0..16).collect::<Vec<usize>>(), 4, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+                completed.fetch_add(1, Ordering::Relaxed);
+                i
+            })
+        }));
+        assert!(caught.is_err(), "panic propagates to caller");
+        let msg = panic_message(caught.unwrap_err().as_ref());
+        assert!(msg.contains("1 job(s) panicked"), "{msg}");
+        assert_eq!(
+            completed.load(Ordering::Relaxed),
+            15,
+            "all sibling jobs ran to completion before the re-panic"
+        );
     }
 }

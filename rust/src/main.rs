@@ -1,5 +1,9 @@
 //! `ciminus` binary entry point. All logic lives in the library
 //! (`ciminus::cli`) so integration tests and examples share it.
+//!
+//! Exit codes: 0 success, 1 hard error (the `Err` arm below),
+//! 2 usage error, 3 completed with sweep failures — see
+//! `cli::{EXIT_OK, EXIT_USAGE, EXIT_PARTIAL}` and docs/robust-sweeps.md.
 
 fn main() {
     let code = match ciminus::cli::run(std::env::args().skip(1)) {

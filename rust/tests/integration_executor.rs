@@ -1,0 +1,249 @@
+//! Integration: the resilient sweep executor's failure-handling
+//! contract — panic isolation, watchdog timeouts, retries,
+//! checkpoint/resume, and determinism under thread-count variation.
+
+use ciminus::explore::executor::smoke_codec;
+use ciminus::explore::{run_sweep, Codec, Job, Sweep, SweepConfig};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn jobs_of(n: usize) -> Vec<Job<usize>> {
+    (0..n)
+        .map(|i| Job {
+            key: format!("j{i}"),
+            input: i,
+        })
+        .collect()
+}
+
+fn num_codec() -> Codec<f64> {
+    smoke_codec()
+}
+
+fn tmp_journal(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ciminus-it-exec-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    let path = dir.join(format!("{name}.jsonl"));
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+#[test]
+fn panic_is_isolated_and_order_preserved() {
+    let report = run_sweep(jobs_of(16), &SweepConfig::default(), None, |&i: &usize| {
+        if i == 4 {
+            panic!("injected panic at {i}");
+        }
+        Ok(i as f64 * 2.0)
+    })
+    .unwrap();
+    assert_eq!(report.outcomes.len(), 16);
+    for (i, o) in report.outcomes.iter().enumerate() {
+        assert_eq!(o.key, format!("j{i}"), "outcomes stay in input order");
+        assert_eq!(o.index, i);
+        if i == 4 {
+            let e = o.result.as_ref().unwrap_err();
+            assert_eq!(e.kind(), "panic");
+            assert!(e.to_string().contains("injected panic"), "{e}");
+        } else {
+            assert_eq!(*o.result.as_ref().unwrap(), i as f64 * 2.0, "sibling {i} survived");
+        }
+    }
+}
+
+#[test]
+fn timeout_fires_without_blocking_the_sweep() {
+    let mut cfg = SweepConfig::with_threads(4);
+    cfg.job_timeout = Some(Duration::from_millis(150));
+    let t0 = Instant::now();
+    let report = run_sweep(jobs_of(4), &cfg, None, |&i: &usize| {
+        if i == 2 {
+            // far beyond the timeout: only the watchdog can end this job
+            std::thread::sleep(Duration::from_secs(5));
+        }
+        Ok(i as f64)
+    })
+    .unwrap();
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(3),
+        "sweep must not wait out the hang (took {elapsed:?})"
+    );
+    let sweep = Sweep::from_report(report);
+    assert_eq!(sweep.points, vec![0.0, 1.0, 3.0]);
+    assert_eq!(sweep.failures.len(), 1);
+    assert_eq!(sweep.failures[0].key, "j2");
+    assert_eq!(sweep.failures[0].error.kind(), "timeout");
+}
+
+#[test]
+fn transient_errors_retry_then_succeed() {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let calls2 = Arc::clone(&calls);
+    let mut cfg = SweepConfig::with_threads(1);
+    cfg.max_retries = 2;
+    cfg.retry_backoff = Duration::from_millis(1);
+    let report = run_sweep(jobs_of(1), &cfg, None, move |&i: &usize| {
+        let n = calls2.fetch_add(1, Ordering::SeqCst);
+        if n < 2 {
+            anyhow::bail!("transient failure #{n}");
+        }
+        Ok(i as f64 + 100.0)
+    })
+    .unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 3, "two failures + one success");
+    let o = &report.outcomes[0];
+    assert_eq!(o.attempts, 3);
+    assert_eq!(*o.result.as_ref().unwrap(), 100.0);
+}
+
+#[test]
+fn panics_are_not_retried() {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let calls2 = Arc::clone(&calls);
+    let mut cfg = SweepConfig::with_threads(1);
+    cfg.max_retries = 3;
+    cfg.retry_backoff = Duration::from_millis(1);
+    let report = run_sweep(jobs_of(1), &cfg, None, move |_: &usize| -> anyhow::Result<f64> {
+        calls2.fetch_add(1, Ordering::SeqCst);
+        panic!("always panics");
+    })
+    .unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 1, "a panic is never retried");
+    assert_eq!(report.outcomes[0].result.as_ref().unwrap_err().kind(), "panic");
+}
+
+#[test]
+fn checkpoint_resume_skips_completed_points_bit_identically() {
+    let path = tmp_journal("roundtrip");
+    let mut cfg = SweepConfig::with_threads(2);
+    cfg.checkpoint = Some(path.clone());
+
+    let first = Sweep::from_report(
+        run_sweep(jobs_of(10), &cfg, Some(num_codec()), |&i: &usize| Ok(i as f64 * 3.0))
+            .unwrap(),
+    );
+    assert_eq!(first.failures.len(), 0);
+    assert_eq!(first.resumed, 0);
+    let journal = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(journal.lines().count(), 10, "one line per completed point");
+
+    // resume: no job function call may happen at all
+    let calls = Arc::new(AtomicUsize::new(0));
+    let calls2 = Arc::clone(&calls);
+    let mut cfg2 = cfg.clone();
+    cfg2.resume = true;
+    let second = Sweep::from_report(
+        run_sweep(jobs_of(10), &cfg2, Some(num_codec()), move |&i: &usize| {
+            calls2.fetch_add(1, Ordering::SeqCst);
+            Ok(i as f64 * 3.0)
+        })
+        .unwrap(),
+    );
+    assert_eq!(calls.load(Ordering::SeqCst), 0, "fully-journaled run recomputes nothing");
+    assert_eq!(second.resumed, 10);
+    assert_eq!(second.points, first.points, "resumed results are bit-identical");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn resume_recomputes_only_missing_points() {
+    let path = tmp_journal("partial");
+    let mut cfg = SweepConfig::with_threads(2);
+    cfg.checkpoint = Some(path.clone());
+
+    // first run: job 7 fails, the other 9 are journaled
+    let first = Sweep::from_report(
+        run_sweep(jobs_of(10), &cfg, Some(num_codec()), |&i: &usize| {
+            if i == 7 {
+                anyhow::bail!("flaky point");
+            }
+            Ok(i as f64 * 3.0)
+        })
+        .unwrap(),
+    );
+    assert_eq!(first.failures.len(), 1);
+    assert_eq!(std::fs::read_to_string(&path).unwrap().lines().count(), 9);
+
+    // resumed run with the flake gone: exactly one recomputation, and
+    // the final results equal an uninterrupted successful sweep
+    let calls = Arc::new(AtomicUsize::new(0));
+    let calls2 = Arc::clone(&calls);
+    let mut cfg2 = cfg.clone();
+    cfg2.resume = true;
+    let second = Sweep::from_report(
+        run_sweep(jobs_of(10), &cfg2, Some(num_codec()), move |&i: &usize| {
+            calls2.fetch_add(1, Ordering::SeqCst);
+            Ok(i as f64 * 3.0)
+        })
+        .unwrap(),
+    );
+    assert_eq!(calls.load(Ordering::SeqCst), 1, "only the missing point runs");
+    assert_eq!(second.resumed, 9);
+    assert_eq!(second.failures.len(), 0);
+    let expected: Vec<f64> = (0..10).map(|i| i as f64 * 3.0).collect();
+    assert_eq!(second.points, expected);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn results_deterministic_across_thread_counts() {
+    let run_with = |threads: usize| -> Vec<f64> {
+        let report = run_sweep(
+            jobs_of(32),
+            &SweepConfig::with_threads(threads),
+            None,
+            |&i: &usize| {
+                // stagger completion order so scheduling actually varies
+                std::thread::sleep(Duration::from_millis((i % 3) as u64));
+                Ok(i as f64 * 1.5)
+            },
+        )
+        .unwrap();
+        Sweep::from_report(report).points
+    };
+    let one = run_with(1);
+    let two = run_with(2);
+    let eight = run_with(8);
+    assert_eq!(one, two);
+    assert_eq!(one, eight);
+    assert_eq!(one.len(), 32);
+}
+
+#[test]
+fn max_failures_aborts_remaining_queue() {
+    let mut cfg = SweepConfig::with_threads(2);
+    cfg.max_failures = Some(2);
+    let report = run_sweep(jobs_of(16), &cfg, None, |&_i: &usize| -> anyhow::Result<f64> {
+        std::thread::sleep(Duration::from_millis(20));
+        anyhow::bail!("doomed");
+    })
+    .unwrap();
+    let sweep = Sweep::from_report(report);
+    assert!(sweep.points.is_empty());
+    assert_eq!(sweep.failures.len(), 16, "every job resolves, none is lost");
+    let aborted = sweep
+        .failures
+        .iter()
+        .filter(|f| f.error.kind() == "aborted")
+        .count();
+    let failed = sweep
+        .failures
+        .iter()
+        .filter(|f| f.error.kind() == "error")
+        .count();
+    assert!(aborted > 0, "breaker drained the queue");
+    assert_eq!(aborted + failed, 16);
+}
+
+#[test]
+fn smoke_sweep_shape() {
+    let sweep = ciminus::explore::executor::smoke_sweep(&SweepConfig::default()).unwrap();
+    assert_eq!(sweep.total, 8);
+    assert_eq!(sweep.points.len(), 6, "panicking + hanging points drop out");
+    let kinds: Vec<&str> = sweep.failures.iter().map(|f| f.error.kind()).collect();
+    assert!(kinds.contains(&"panic"), "{kinds:?}");
+    assert!(kinds.contains(&"timeout"), "{kinds:?}");
+}
