@@ -14,13 +14,13 @@
 //! make artifacts && cargo run --release --example e2e_pipeline
 //! ```
 
+use ciminus::eval::{Evaluator, Scenario};
 use ciminus::hw::presets;
-use ciminus::mapping::planner::{plan, MappingOptions};
 use ciminus::pruning::workflow::PruningWorkflow;
 use ciminus::runtime::{input_profiles_for, Artifacts, ModelSession, Runtime};
-use ciminus::sim::engine::{simulate, SimOptions};
 use ciminus::sparsity::flexblock::FlexBlock;
 use ciminus::workload::zoo;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -52,10 +52,16 @@ fn main() -> anyhow::Result<()> {
     let profiles_by_name = session.profile_activations(&ma.blob, 8)?;
     let profiles = input_profiles_for(&net, &profiles_by_name);
 
+    // one evaluator for the whole sweep: the measured profiles are a
+    // Provided artifact, and the dense baseline plans exactly once
+    let evaluator = Evaluator::new();
+    let net = Arc::new(net);
+    let profiles = Arc::new(profiles);
     let wf = PruningWorkflow::default();
     let dense_arch = presets::usecase_dense_baseline(4, (2, 2));
-    let dense_map = plan(&dense_arch, &net, None, MappingOptions::default())?;
-    let dense_sim = simulate(&dense_arch, &net, &dense_map, Some(&profiles), SimOptions::default())?;
+    let dense_sim = evaluator.evaluate(
+        &Scenario::new(dense_arch, net.clone()).provided_profiles(profiles.clone()),
+    )?;
 
     println!(
         "\n{:<22} {:>7} {:>9} {:>9} {:>8} {:>7}",
@@ -70,10 +76,15 @@ fn main() -> anyhow::Result<()> {
     ] {
         // 1-2: prune with importance selection + evaluate via PJRT
         let ev = session.prune_and_eval(&net, &fb, &wf)?;
-        // 5: simulate with the measured masks
+        // 5: simulate with the measured masks and profiles as Provided
+        // artifacts (the evaluator skips its synthetic prune/profile
+        // stages entirely)
         let arch = presets::usecase_arch(4, (2, 2));
-        let mapping = plan(&arch, &net, Some(&ev.plan), MappingOptions::default())?;
-        let rep = simulate(&arch, &net, &mapping, Some(&profiles), SimOptions::default())?;
+        let rep = evaluator.evaluate(
+            &Scenario::new(arch, net.clone())
+                .prune_provided(Arc::new(ev.plan.clone()))
+                .provided_profiles(profiles.clone()),
+        )?;
         println!(
             "{:<22} {:>6.2} {:>8.2}x {:>8.2}x {:>7.1} {:>6.1}",
             fb.name,

@@ -7,7 +7,6 @@
 //! ```
 
 use ciminus::explore::mapping_study::{run_fig11, run_fig12};
-use ciminus::hw::units::UnitKind;
 use ciminus::report;
 use ciminus::workload::zoo;
 
@@ -34,14 +33,11 @@ fn main() -> anyhow::Result<()> {
     let pts12 = run_fig12(&r50, 0)?;
     println!("{}", report::rearrange_table(&pts12).render());
     for p in &pts12 {
-        let bufs = p.report.energy.of(UnitKind::WeightBuf)
-            + p.report.energy.of(UnitKind::GlobalInBuf)
-            + p.report.energy.of(UnitKind::GlobalOutBuf);
         println!(
             "  {} rearranged={}: buffer energy {:.3} uJ of {:.3} uJ total",
             p.strategy,
             p.rearranged,
-            bufs / 1e6,
+            p.buffer_energy_pj / 1e6,
             p.energy_pj / 1e6
         );
     }

@@ -1,5 +1,12 @@
 //! Ablation benches (DESIGN.md §6): modeling-choice sensitivity.
-use ciminus::explore::ablation_study::{pipeline_overlap, policy_comparison, subarray_granularity};
+//!
+//! All four groups share one [`EvalCtx`], so the closing `cache hits`
+//! line is nonzero whenever the staged evaluator reuses planning
+//! artifacts across points (CI asserts on it).
+use ciminus::eval::EvalCtx;
+use ciminus::explore::ablation_study::{
+    bit_width, pipeline_overlap, policy_comparison, subarray_granularity,
+};
 use ciminus::util::bench::bench_header;
 use ciminus::util::table::Table;
 use ciminus::workload::zoo;
@@ -20,8 +27,21 @@ fn print_points(title: &str, pts: &[ciminus::explore::ablation_study::AblationPo
 fn main() {
     bench_header("ablations");
     let net = zoo::resnet50(32, 100);
-    print_points("ablation 1: zero-detect granularity (sub-array rows)", &subarray_granularity(&net).unwrap());
-    print_points("ablation 2: double buffering (Eq. 3 overlap)", &pipeline_overlap(&net).unwrap());
-    print_points("ablation 3: mapping policy @ hybrid 0.8, 16 macros", &policy_comparison(&net).unwrap());
-    print_points("ablation 4: activation bit width", &ciminus::explore::ablation_study::bit_width(&net).unwrap());
+    let ctx = EvalCtx::default();
+    print_points(
+        "ablation 1: zero-detect granularity (sub-array rows)",
+        &subarray_granularity(&net, &ctx).unwrap(),
+    );
+    print_points(
+        "ablation 2: double buffering (Eq. 3 overlap)",
+        &pipeline_overlap(&net, &ctx).unwrap(),
+    );
+    print_points(
+        "ablation 3: mapping policy @ hybrid 0.8, 16 macros",
+        &policy_comparison(&net, &ctx).unwrap(),
+    );
+    print_points("ablation 4: activation bit width", &bit_width(&net, &ctx).unwrap());
+    let stats = ctx.evaluator.stats();
+    println!("artifact cache: {stats}");
+    println!("cache hits: {}", stats.total_hits());
 }

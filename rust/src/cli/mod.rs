@@ -4,6 +4,7 @@
 pub mod args;
 pub mod pattern;
 
+use crate::eval::{EvalCtx, Evaluator, Scenario};
 use crate::explore::{
     ablation_study, executor, fault_study, input_study, mapping_study, sparsity_study,
 };
@@ -12,11 +13,10 @@ use crate::hw::arch::Architecture;
 use crate::hw::faults::FaultSpatial;
 use crate::hw::presets;
 use crate::mapping::duplication::{Strategy, StrategyPolicy};
-use crate::mapping::planner::{plan, MappingOptions};
+use crate::mapping::planner::MappingOptions;
 use crate::pruning::workflow::PruningWorkflow;
 use crate::runtime::{Artifacts, ModelSession, Runtime};
-use crate::sim::engine::{simulate, SimOptions};
-use crate::sim::input_sparsity::InputProfiles;
+use crate::sim::engine::SimOptions;
 use crate::util::json::Json;
 use crate::workload::{graph::Network, import, zoo};
 use anyhow::{Context, Result};
@@ -42,7 +42,7 @@ commands:
   zoo [model]                      list/describe built-in workloads
   simulate  --arch <preset|file> --model <zoo|file.json>
             [--pattern P --ratio R] [--strategy auto|sp|dp] [--rearrange]
-            [--no-input-sparsity] [--detail]
+            [--no-input-sparsity] [--postproc-throughput N] [--detail]
   validate                         Fig. 6 validation vs MARS/SDP
   explore   --study fig8|fig9|fig10|fig11|fig12|ablation|smoke
             [--model M] [sweep options]
@@ -68,6 +68,10 @@ sweep options (explore / faults / search):
   --max-failures N   abort remaining jobs after N failures
   --checkpoint PATH  append finished points to a JSONL journal
   --resume           skip points already present in --checkpoint
+
+simulation options (simulate / explore / faults / search):
+  --postproc-throughput N  elements per cycle per post-processing lane
+                           (default 4)
 
 exit codes: 0 ok | 1 hard error | 2 usage error | 3 completed with failures
 
@@ -115,6 +119,20 @@ fn sweep_config(a: &Args) -> Result<SweepConfig> {
         "--resume requires --checkpoint <path>"
     );
     Ok(cfg)
+}
+
+/// Build the simulation options from the shared `--postproc-throughput`
+/// flag (previously hardcoded to the [`SimOptions`] default).
+fn sim_options(a: &Args) -> Result<SimOptions> {
+    let mut sim = SimOptions::default();
+    if let Some(t) = a.usize_opt("postproc-throughput")? {
+        anyhow::ensure!(
+            t > 0,
+            "--postproc-throughput expects a positive elements-per-cycle count"
+        );
+        sim.postproc_throughput = t;
+    }
+    Ok(sim)
 }
 
 /// Aggregates one or more [`Sweep`]s run by a single command into a
@@ -217,14 +235,14 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
         rearrange_slice: a.usize_or("rearrange-slice", 16)?,
         ..Default::default()
     };
-    let prune = if fb.is_dense() {
-        None
-    } else {
-        Some(PruningWorkflow::default().run_uniform(&net, &fb, None)?)
-    };
-    let mapping = plan(&arch, &net, prune.as_ref(), opts)?;
-    let profiles = InputProfiles::synthetic(&net, arch.input_bits, 0.55, 0xC1A0);
-    let rep = simulate(&arch, &net, &mapping, Some(&profiles), SimOptions::default())?;
+    let mut s = Scenario::new(arch.clone(), net)
+        .with_mapping(opts)
+        .synthetic_profiles(arch.input_bits, 0.55, 0xC1A0)
+        .with_sim(sim_options(a)?);
+    if !fb.is_dense() {
+        s = s.prune_uniform(&fb);
+    }
+    let rep = Evaluator::new().evaluate(&s)?;
     println!("{}", arch.describe());
     println!("{}", rep.summary());
     if a.bool("detail") {
@@ -250,12 +268,14 @@ const STUDIES: &str = "fig8, fig9, fig10, fig11, fig12, ablation, smoke";
 
 fn cmd_explore(a: &Args) -> Result<i32> {
     let cfg = sweep_config(a)?;
+    let ectx = EvalCtx::new(sim_options(a)?);
     let study = a.str_or("study", "fig8");
     let mut agg = SweepAgg::default();
     match study {
         "fig8" => {
             let net = load_net(a.str_or("model", "resnet50"))?;
-            let sweep = sparsity_study::run_fig8_robust(&net, &sparsity_study::RATIOS, &cfg)?;
+            let sweep =
+                sparsity_study::run_fig8_robust(&net, &sparsity_study::RATIOS, &ectx, &cfg)?;
             println!(
                 "{}",
                 crate::report::sparsity_table(
@@ -268,7 +288,7 @@ fn cmd_explore(a: &Args) -> Result<i32> {
         }
         "fig9" => {
             let net = load_net(a.str_or("model", "resnet50"))?;
-            let sweep_a = sparsity_study::run_fig9a_robust(&net, &cfg)?;
+            let sweep_a = sparsity_study::run_fig9a_robust(&net, &ectx, &cfg)?;
             println!(
                 "{}",
                 crate::report::sparsity_table("Fig. 9(a): block sizes @80%", &sweep_a.points)
@@ -278,7 +298,7 @@ fn cmd_explore(a: &Args) -> Result<i32> {
             let r50 = zoo::resnet50(32, 100);
             let v16 = zoo::vgg16(32, 100);
             let mb = zoo::mobilenetv2(32, 100);
-            let sweep_b = sparsity_study::run_fig9b_robust(&[&r50, &v16, &mb], &cfg)?;
+            let sweep_b = sparsity_study::run_fig9b_robust(&[&r50, &v16, &mb], &ectx, &cfg)?;
             let flat: Vec<_> = sweep_b
                 .points
                 .iter()
@@ -298,14 +318,15 @@ fn cmd_explore(a: &Args) -> Result<i32> {
             let r50 = zoo::resnet50(32, 100);
             let v16 = zoo::vgg16(32, 100);
             let mb = zoo::mobilenetv2(32, 100);
-            let dense = input_study::run_dense_models_robust(&[&r50, &v16, &mb], 0.55, &cfg)?;
+            let dense =
+                input_study::run_dense_models_robust(&[&r50, &v16, &mb], 0.55, &ectx, &cfg)?;
             println!(
                 "{}",
                 crate::report::input_sparsity_table("Fig. 10: dense models", &dense.points)
                     .render()
             );
             agg.add(&dense);
-            let pats = input_study::run_weight_patterns_robust(&r50, &cfg)?;
+            let pats = input_study::run_weight_patterns_robust(&r50, &ectx, &cfg)?;
             println!(
                 "{}",
                 crate::report::input_sparsity_table(
@@ -315,8 +336,12 @@ fn cmd_explore(a: &Args) -> Result<i32> {
                 .render()
             );
             agg.add(&pats);
-            let ratios =
-                input_study::run_ratio_sweep_robust(&r50, &[0.5, 0.6, 0.7, 0.8, 0.9], &cfg)?;
+            let ratios = input_study::run_ratio_sweep_robust(
+                &r50,
+                &[0.5, 0.6, 0.7, 0.8, 0.9],
+                &ectx,
+                &cfg,
+            )?;
             println!(
                 "{}",
                 crate::report::input_sparsity_table(
@@ -330,28 +355,19 @@ fn cmd_explore(a: &Args) -> Result<i32> {
         "fig11" => {
             let r50 = zoo::resnet50(32, 100);
             let v16 = zoo::vgg16(32, 100);
-            let sweep = mapping_study::run_fig11_robust(&[&r50, &v16], &cfg)?;
+            let sweep = mapping_study::run_fig11_robust(&[&r50, &v16], &ectx, &cfg)?;
             println!("{}", crate::report::mapping_table(&sweep.points).render());
             agg.add(&sweep);
         }
         "fig12" => {
-            if cfg.checkpoint.is_some() {
-                eprintln!(
-                    "note: fig12 points embed full simulation reports and are not \
-                     checkpointable; --checkpoint/--resume are ignored for this study"
-                );
-            }
-            let mut cfg = cfg.clone();
-            cfg.checkpoint = None;
-            cfg.resume = false;
             let net = load_net(a.str_or("model", "resnet50"))?;
-            let sweep = mapping_study::run_fig12_robust(&net, &cfg)?;
+            let sweep = mapping_study::run_fig12_robust(&net, &ectx, &cfg)?;
             println!("{}", crate::report::rearrange_table(&sweep.points).render());
             agg.add(&sweep);
         }
         "ablation" => {
             let net = load_net(a.str_or("model", "resnet_mini"))?;
-            let sweep = ablation_study::run_all_robust(&net, &cfg)?;
+            let sweep = ablation_study::run_all_robust(&net, &ectx, &cfg)?;
             let mut t = crate::util::table::Table::new(&[
                 "label", "cycles", "energy(uJ)", "skip%",
             ])
@@ -386,11 +402,13 @@ fn cmd_explore(a: &Args) -> Result<i32> {
             return Ok(EXIT_USAGE);
         }
     }
+    eprintln!("artifact cache: {}", ectx.evaluator.stats());
     Ok(agg.finish())
 }
 
 fn cmd_faults(a: &Args) -> Result<i32> {
     let cfg = sweep_config(a)?;
+    let ectx = EvalCtx::new(sim_options(a)?);
     let net = load_net(a.str_or("model", "resnet_mini"))?;
     let ratio = a.f64_or("ratio", 0.8)?;
     let fb = parse_pattern(a.str_or("pattern", "dense"), ratio)?;
@@ -406,8 +424,9 @@ fn cmd_faults(a: &Args) -> Result<i32> {
             continue;
         }
         let arch = load_arch(spec)?;
-        let sweep =
-            fault_study::run_resilience_robust(&arch, &net, fb_opt, &rates, spatial, seed, &cfg)?;
+        let sweep = fault_study::run_resilience_robust(
+            &arch, &net, fb_opt, &rates, spatial, seed, &ectx, &cfg,
+        )?;
         if !a.bool("json") {
             println!(
                 "{}",
@@ -424,6 +443,7 @@ fn cmd_faults(a: &Args) -> Result<i32> {
     if a.bool("json") {
         println!("{}", fault_study::points_to_json(&all_points).pretty());
     }
+    eprintln!("artifact cache: {}", ectx.evaluator.stats());
     Ok(agg.finish())
 }
 
@@ -514,6 +534,7 @@ fn cmd_report(a: &Args) -> Result<i32> {
 fn cmd_search(a: &Args) -> Result<i32> {
     use crate::explore::search::{candidates, search_robust, Constraints};
     let cfg = sweep_config(a)?;
+    let ectx = EvalCtx::new(sim_options(a)?);
     let net = load_net(a.str_or("model", "resnet50"))?;
     let n_macros = a.usize_or("macros", 16)?;
     let cons = Constraints {
@@ -526,7 +547,7 @@ fn cmd_search(a: &Args) -> Result<i32> {
         candidates(n_macros, &ratios).len(),
         n_macros
     );
-    let (sweep, pareto) = search_robust(&net, n_macros, &ratios, cons, &cfg)?;
+    let (sweep, pareto) = search_robust(&net, n_macros, &ratios, cons, &ectx, &cfg)?;
     let feasible = sweep.points.iter().flatten().count();
     println!("{} feasible points, {} Pareto-optimal:\n", feasible, pareto.len());
     let mut t = crate::util::table::Table::new(&[
@@ -547,6 +568,7 @@ fn cmd_search(a: &Args) -> Result<i32> {
         ]);
     }
     println!("{}", t.render());
+    eprintln!("artifact cache: {}", ectx.evaluator.stats());
     let mut agg = SweepAgg::default();
     agg.add(&sweep);
     Ok(agg.finish())
@@ -557,12 +579,11 @@ fn cmd_trace(a: &Args) -> Result<i32> {
     let net = load_net(a.str_or("model", "resnet_mini"))?;
     let ratio = a.f64_or("ratio", 0.8)?;
     let fb = parse_pattern(a.str_or("pattern", "dense"), ratio)?;
-    let prune = if fb.is_dense() {
-        None
-    } else {
-        Some(PruningWorkflow::default().run_uniform(&net, &fb, None)?)
-    };
-    let mapping = plan(&arch, &net, prune.as_ref(), MappingOptions::default())?;
+    let mut s = Scenario::new(arch.clone(), net.clone());
+    if !fb.is_dense() {
+        s = s.prune_uniform(&fb);
+    }
+    let mapping = Evaluator::new().mapping_for(&s)?;
     let t = crate::sim::trace::trace_mapping(&arch, &net, &mapping, arch.input_bits as f64);
     println!("{}", t.render(a.usize_or("limit", 40)?));
     println!("bound histogram:");
@@ -673,6 +694,19 @@ mod tests {
         assert_eq!(cfg.max_failures, Some(10));
         assert!(cfg.resume);
         assert_eq!(cfg.checkpoint.as_deref(), Some(std::path::Path::new("/tmp/x.jsonl")));
+    }
+
+    #[test]
+    fn sim_options_parses_postproc_throughput() {
+        let a = Args::parse(["--postproc-throughput", "8"].iter().map(|s| s.to_string()));
+        assert_eq!(sim_options(&a).unwrap().postproc_throughput, 8);
+        let dflt = Args::parse(std::iter::empty::<String>());
+        assert_eq!(
+            sim_options(&dflt).unwrap().postproc_throughput,
+            SimOptions::default().postproc_throughput
+        );
+        let bad = Args::parse(["--postproc-throughput", "0"].iter().map(|s| s.to_string()));
+        assert!(sim_options(&bad).is_err(), "zero throughput rejected");
     }
 
     #[test]

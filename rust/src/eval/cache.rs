@@ -1,0 +1,174 @@
+//! Bounded per-stage artifact caches with hit/miss/eviction counters.
+//!
+//! One `Cache<T>` holds one artifact type (prune plans, mapping plans,
+//! input profiles, sim reports) keyed by the stage's content hash.
+//! Eviction is least-recently-used over a logical tick counter; the
+//! scan is O(n) on insert-at-capacity, which is fine at the default
+//! capacity (a few hundred entries). Artifact construction runs
+//! *outside* the map lock so concurrent sweep workers never serialize
+//! behind a slow plan; two workers racing on the same key may both
+//! compute (the second insert wins), which is harmless because keys are
+//! content hashes of the inputs and the pipeline is deterministic.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Counters for one pipeline stage's cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StageStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl StageStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+}
+
+struct Entry<T> {
+    value: Arc<T>,
+    last_used: u64,
+}
+
+struct Inner<T> {
+    entries: BTreeMap<u128, Entry<T>>,
+    tick: u64,
+}
+
+pub(crate) struct Cache<T> {
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    inner: Mutex<Inner<T>>,
+}
+
+impl<T> Cache<T> {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                entries: BTreeMap::new(),
+                tick: 0,
+            }),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner<T>> {
+        // A poisoned lock means a worker panicked mid-insert; the map
+        // itself is still structurally valid (BTreeMap ops are not
+        // interrupted by our code between invariant updates).
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn lookup(&self, key: u128) -> Option<Arc<T>> {
+        let mut g = self.lock();
+        g.tick += 1;
+        let tick = g.tick;
+        match g.entries.get_mut(&key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.value.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn insert(&self, key: u128, value: Arc<T>) {
+        let mut g = self.lock();
+        g.tick += 1;
+        let tick = g.tick;
+        if !g.entries.contains_key(&key) && g.entries.len() >= self.capacity {
+            if let Some(oldest) = g
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+            {
+                g.entries.remove(&oldest);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        g.entries.insert(
+            key,
+            Entry {
+                value,
+                last_used: tick,
+            },
+        );
+    }
+
+    /// Return the cached artifact for `key`, or build, cache, and
+    /// return it. The bool is true on a cache hit. `build` runs outside
+    /// the lock.
+    pub fn get_or_try(
+        &self,
+        key: u128,
+        build: impl FnOnce() -> anyhow::Result<T>,
+    ) -> anyhow::Result<(Arc<T>, bool)> {
+        if let Some(v) = self.lookup(key) {
+            return Ok((v, true));
+        }
+        let v = Arc::new(build()?);
+        self.insert(key, v.clone());
+        Ok((v, false))
+    }
+
+    pub fn stats(&self) -> StageStats {
+        StageStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+    use super::*;
+
+    #[test]
+    fn hit_miss_counting_and_reuse() {
+        let c: Cache<u64> = Cache::new(8);
+        let (a, hit) = c.get_or_try(1, || Ok(10)).unwrap();
+        assert!(!hit);
+        assert_eq!(*a, 10);
+        let (b, hit) = c.get_or_try(1, || Ok(99)).unwrap();
+        assert!(hit, "second lookup is a hit");
+        assert_eq!(*b, 10, "cached value wins; builder not re-run");
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+    }
+
+    #[test]
+    fn bounded_capacity_evicts_least_recently_used() {
+        let c: Cache<u64> = Cache::new(2);
+        c.insert(1, Arc::new(1));
+        c.insert(2, Arc::new(2));
+        assert!(c.lookup(1).is_some()); // 1 is now more recent than 2
+        c.insert(3, Arc::new(3)); // evicts 2
+        assert!(c.lookup(2).is_none());
+        assert!(c.lookup(1).is_some());
+        assert!(c.lookup(3).is_some());
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn build_error_propagates_and_caches_nothing() {
+        let c: Cache<u64> = Cache::new(2);
+        assert!(c.get_or_try(7, || anyhow::bail!("boom")).is_err());
+        let (_, hit) = c.get_or_try(7, || Ok(1)).unwrap();
+        assert!(!hit, "failed build left no entry behind");
+    }
+}

@@ -1,0 +1,112 @@
+//! Stable structural fingerprints for pipeline artifacts.
+//!
+//! Cache keys must be identical across processes and runs, so we hash
+//! the `Debug` rendering of each stage input with FNV-1a/128 — a fixed,
+//! dependency-free function with no per-process seed (unlike
+//! `std::collections::hash_map::RandomState`). Every hashed type in
+//! this crate derives `Debug` structurally and stores its collections
+//! in `BTreeMap`/`Vec`, so the rendering — and therefore the key — is
+//! deterministic. The `Debug` text is streamed straight into the hasher
+//! through its `fmt::Write` impl; no intermediate `String` is built.
+
+use std::fmt::{self, Debug, Write};
+
+const FNV_OFFSET_128: u128 = 0x6c62272e07bb014262b821756295c58d;
+const FNV_PRIME_128: u128 = 0x0000000001000000000000000000013B;
+
+/// Streaming FNV-1a/128 hasher over bytes or `Debug` renderings.
+pub struct StableHasher {
+    state: u128,
+}
+
+impl StableHasher {
+    pub fn new() -> Self {
+        Self {
+            state: FNV_OFFSET_128,
+        }
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u128;
+            self.state = self.state.wrapping_mul(FNV_PRIME_128);
+        }
+    }
+
+    pub fn write_u128(&mut self, v: u128) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    /// Stream `value`'s `Debug` rendering into the hash state.
+    pub fn write_debug<T: Debug>(&mut self, value: &T) {
+        // fmt::Write for StableHasher is infallible.
+        let _ = write!(self, "{value:?}");
+    }
+
+    pub fn finish(&self) -> u128 {
+        self.state
+    }
+}
+
+impl Default for StableHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Write for StableHasher {
+    fn write_str(&mut self, s: &str) -> fmt::Result {
+        self.write_bytes(s.as_bytes());
+        Ok(())
+    }
+}
+
+/// Fingerprint of one value under a domain-separating label.
+pub fn fingerprint<T: Debug>(label: &str, value: &T) -> u128 {
+    let mut h = StableHasher::new();
+    h.write_bytes(label.as_bytes());
+    h.write_bytes(&[0xFF]); // label/value separator outside UTF-8
+    h.write_debug(value);
+    h.finish()
+}
+
+/// Combine already-computed fingerprints under a label, with explicit
+/// separators so part boundaries cannot alias.
+pub fn combine(label: &str, parts: &[u128]) -> u128 {
+    let mut h = StableHasher::new();
+    h.write_bytes(label.as_bytes());
+    for &p in parts {
+        h.write_bytes(&[0xFE]);
+        h.write_u128(p);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+    use super::*;
+
+    #[test]
+    fn equal_values_hash_equal() {
+        let a = vec![("conv1", 3usize), ("fc", 10)];
+        let b = a.clone();
+        assert_eq!(fingerprint("t", &a), fingerprint("t", &b));
+    }
+
+    #[test]
+    fn different_values_hash_differently() {
+        assert_ne!(fingerprint("t", &1u64), fingerprint("t", &2u64));
+    }
+
+    #[test]
+    fn label_separates_domains() {
+        assert_ne!(fingerprint("a", &1u64), fingerprint("b", &1u64));
+    }
+
+    #[test]
+    fn combine_is_order_sensitive() {
+        let (x, y) = (fingerprint("t", &1u64), fingerprint("t", &2u64));
+        assert_ne!(combine("c", &[x, y]), combine("c", &[y, x]));
+    }
+}

@@ -1,0 +1,433 @@
+//! Unified staged evaluation pipeline (docs/eval-pipeline.md).
+//!
+//! Every entry point in the crate — the figure studies, the design
+//! search, the CLI commands, the validation harness, and the examples —
+//! evaluates a design point through the same four typed stages:
+//!
+//! ```text
+//! PruneSpec ──► PrunePlan ─┐
+//!                          ├─► MappingPlan ─┐
+//! Architecture (planning   │                ├─► SimReport
+//!   view) ─────────────────┘                │
+//! ProfileSpec ──► InputProfiles ────────────┘
+//! ```
+//!
+//! A [`Scenario`] names one point (workload + prune spec + mapping
+//! options + profile spec + architecture + sim options); an
+//! [`Evaluator`] runs it, memoizing each stage in a bounded in-memory
+//! artifact cache keyed by a stable content hash of that stage's
+//! inputs. Sharing one evaluator across a sweep means points that vary
+//! only downstream knobs (e.g. fig11's input-skipping on/off pair, the
+//! rearrange ablation's strategy column) skip replanning entirely. The
+//! mapping stage hashes [`Architecture::planning_view`] — the
+//! architecture with simulation-only knobs canonicalized — so archs
+//! differing only in those knobs share one cached plan.
+#![warn(clippy::unwrap_used)]
+
+pub mod cache;
+pub mod hash;
+
+use crate::hw::arch::Architecture;
+use crate::mapping::planner::{plan_prevalidated, MappingOptions, MappingPlan};
+use crate::pruning::workflow::{PrunePlan, PruningWorkflow};
+use crate::sim::engine::{simulate, SimOptions};
+use crate::sim::input_sparsity::InputProfiles;
+use crate::sim::report::{CacheNote, SimReport};
+use crate::sparsity::flexblock::FlexBlock;
+use crate::workload::graph::Network;
+use cache::{Cache, StageStats};
+use std::collections::BTreeSet;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// How the prune stage produces its `PrunePlan`.
+#[derive(Debug, Clone)]
+pub enum PruneSpec {
+    /// Dense: no pruning, the mapping stage receives no plan.
+    None,
+    /// Run a uniform FlexBlock pruning workflow over the network.
+    Uniform {
+        fb: FlexBlock,
+        workflow: PruningWorkflow,
+    },
+    /// Use an externally produced plan (e.g. measured masks from the
+    /// PJRT pruning session) as-is.
+    Provided(Arc<PrunePlan>),
+}
+
+/// How the profile stage produces its `InputProfiles`.
+#[derive(Debug, Clone)]
+pub enum ProfileSpec {
+    /// No activation profiles (input-skipping simulates as dense).
+    None,
+    /// Deterministic synthetic profiles ([`InputProfiles::synthetic`]).
+    Synthetic { bits: usize, zero_frac: f64, seed: u64 },
+    /// Externally measured profiles, used as-is.
+    Provided(Arc<InputProfiles>),
+}
+
+/// One evaluatable design point: everything the pipeline needs, and
+/// nothing it has to guess. Cheap to clone (the workload and arch are
+/// shared behind `Arc`s).
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub arch: Arc<Architecture>,
+    pub net: Arc<Network>,
+    pub prune: PruneSpec,
+    pub mapping: MappingOptions,
+    pub profiles: ProfileSpec,
+    pub sim: SimOptions,
+}
+
+impl Scenario {
+    pub fn new(arch: impl Into<Arc<Architecture>>, net: impl Into<Arc<Network>>) -> Self {
+        Self {
+            arch: arch.into(),
+            net: net.into(),
+            prune: PruneSpec::None,
+            mapping: MappingOptions::default(),
+            profiles: ProfileSpec::None,
+            sim: SimOptions::default(),
+        }
+    }
+
+    /// Uniform pruning with the default workflow. A dense FlexBlock is
+    /// a no-op (the prune stage is skipped entirely).
+    pub fn prune_uniform(self, fb: &FlexBlock) -> Self {
+        self.prune_with(PruningWorkflow::default(), fb)
+    }
+
+    /// Uniform pruning with a custom workflow. A dense FlexBlock is a
+    /// no-op.
+    pub fn prune_with(mut self, workflow: PruningWorkflow, fb: &FlexBlock) -> Self {
+        self.prune = if fb.is_dense() {
+            PruneSpec::None
+        } else {
+            PruneSpec::Uniform {
+                fb: fb.clone(),
+                workflow,
+            }
+        };
+        self
+    }
+
+    pub fn prune_provided(mut self, p: Arc<PrunePlan>) -> Self {
+        self.prune = PruneSpec::Provided(p);
+        self
+    }
+
+    pub fn with_mapping(mut self, opts: MappingOptions) -> Self {
+        self.mapping = opts;
+        self
+    }
+
+    pub fn synthetic_profiles(mut self, bits: usize, zero_frac: f64, seed: u64) -> Self {
+        self.profiles = ProfileSpec::Synthetic {
+            bits,
+            zero_frac,
+            seed,
+        };
+        self
+    }
+
+    pub fn provided_profiles(mut self, p: Arc<InputProfiles>) -> Self {
+        self.profiles = ProfileSpec::Provided(p);
+        self
+    }
+
+    pub fn with_sim(mut self, sim: SimOptions) -> Self {
+        self.sim = sim;
+        self
+    }
+}
+
+/// Per-stage cache keys for one scenario, derived once per evaluation.
+struct Keys {
+    arch: u128,
+    net: u128,
+    prune: Option<u128>,
+    profiles: Option<u128>,
+    mapping: u128,
+}
+
+fn keys_of(s: &Scenario) -> Keys {
+    let arch = hash::fingerprint("arch", s.arch.as_ref());
+    let plan_arch = hash::fingerprint("arch/planning", &s.arch.planning_view());
+    let net = hash::fingerprint("net", s.net.as_ref());
+    let prune = match &s.prune {
+        PruneSpec::None => None,
+        spec => Some(hash::combine(
+            "prune",
+            &[net, hash::fingerprint("prune-spec", spec)],
+        )),
+    };
+    let profiles = match &s.profiles {
+        ProfileSpec::None => None,
+        spec => Some(hash::combine(
+            "profiles",
+            &[net, hash::fingerprint("profiles-spec", spec)],
+        )),
+    };
+    let mapping = hash::combine(
+        "mapping",
+        &[
+            plan_arch,
+            net,
+            prune.unwrap_or(0),
+            hash::fingerprint("mapping-opts", &s.mapping),
+        ],
+    );
+    Keys {
+        arch,
+        net,
+        prune,
+        profiles,
+        mapping,
+    }
+}
+
+/// Aggregate cache counters across the four stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct EvalStats {
+    pub prune: StageStats,
+    pub mapping: StageStats,
+    pub profiles: StageStats,
+    pub sim: StageStats,
+}
+
+impl EvalStats {
+    pub fn total_hits(&self) -> u64 {
+        self.prune.hits + self.mapping.hits + self.profiles.hits + self.sim.hits
+    }
+
+    pub fn total_misses(&self) -> u64 {
+        self.prune.misses + self.mapping.misses + self.profiles.misses + self.sim.misses
+    }
+
+    pub fn total_evictions(&self) -> u64 {
+        self.prune.evictions + self.mapping.evictions + self.profiles.evictions + self.sim.evictions
+    }
+}
+
+impl fmt::Display for EvalStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "prune {}/{} | mapping {}/{} | profiles {}/{} | sim {}/{} (hits/lookups), {} evicted",
+            self.prune.hits,
+            self.prune.lookups(),
+            self.mapping.hits,
+            self.mapping.lookups(),
+            self.profiles.hits,
+            self.profiles.lookups(),
+            self.sim.hits,
+            self.sim.lookups(),
+            self.total_evictions(),
+        )
+    }
+}
+
+/// Default per-stage cache capacity (entries, not bytes). Mapping plans
+/// and sim reports for the usecase networks are a few hundred KB each,
+/// so this bounds the cache to tens of MB worst case.
+pub const DEFAULT_CACHE_CAPACITY: usize = 128;
+
+/// Runs [`Scenario`]s through the staged pipeline with per-stage
+/// content-hashed memoization. Thread-safe: share one evaluator across
+/// all workers of a sweep (see `EvalCtx`).
+pub struct Evaluator {
+    prune: Cache<PrunePlan>,
+    mapping: Cache<MappingPlan>,
+    profiles: Cache<InputProfiles>,
+    sim: Cache<SimReport>,
+    /// Content hashes of architectures already validated — the
+    /// `arch.validate()` that used to run on every `plan()`/`simulate()`
+    /// call is hoisted here and paid once per distinct architecture.
+    validated: Mutex<BTreeSet<u128>>,
+}
+
+impl Evaluator {
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_CACHE_CAPACITY)
+    }
+
+    /// Evaluator with a custom per-stage cache capacity.
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            prune: Cache::new(capacity),
+            mapping: Cache::new(capacity),
+            profiles: Cache::new(capacity),
+            sim: Cache::new(capacity),
+            validated: Mutex::new(BTreeSet::new()),
+        }
+    }
+
+    fn ensure_valid(&self, arch: &Architecture, key: u128) -> anyhow::Result<()> {
+        {
+            let seen = self.validated.lock().unwrap_or_else(|p| p.into_inner());
+            if seen.contains(&key) {
+                return Ok(());
+            }
+        }
+        arch.validate()?;
+        let mut seen = self.validated.lock().unwrap_or_else(|p| p.into_inner());
+        if seen.len() >= 4096 {
+            seen.clear(); // bound memory; re-validation is cheap
+        }
+        seen.insert(key);
+        Ok(())
+    }
+
+    /// Prune stage. Returns the plan (None for dense scenarios) and
+    /// whether it came from cache (None when the stage did not run:
+    /// dense, or an externally provided plan).
+    fn prune_stage(
+        &self,
+        s: &Scenario,
+        keys: &Keys,
+    ) -> anyhow::Result<(Option<Arc<PrunePlan>>, Option<bool>)> {
+        match &s.prune {
+            PruneSpec::None => Ok((None, None)),
+            PruneSpec::Provided(p) => Ok((Some(p.clone()), None)),
+            PruneSpec::Uniform { fb, workflow } => {
+                let key = keys.prune.unwrap_or(0);
+                let (net, fb, wf) = (s.net.clone(), fb.clone(), workflow.clone());
+                let (v, hit) = self
+                    .prune
+                    .get_or_try(key, move || wf.run_uniform(&net, &fb, None))?;
+                Ok((Some(v), Some(hit)))
+            }
+        }
+    }
+
+    /// Mapping stage. Validation of the architecture happens here, once
+    /// per distinct arch; the planner entry point skips its own check.
+    fn mapping_stage(
+        &self,
+        s: &Scenario,
+        keys: &Keys,
+        prune: Option<Arc<PrunePlan>>,
+    ) -> anyhow::Result<(Arc<MappingPlan>, bool)> {
+        self.ensure_valid(&s.arch, keys.arch)?;
+        let arch = s.arch.clone();
+        let net = s.net.clone();
+        let opts = s.mapping;
+        self.mapping.get_or_try(keys.mapping, move || {
+            plan_prevalidated(&arch, &net, prune.as_deref(), opts)
+        })
+    }
+
+    /// Profile stage. Hit flag is None when the stage did not run
+    /// (no profiles, or externally provided ones).
+    fn profiles_stage(
+        &self,
+        s: &Scenario,
+        keys: &Keys,
+    ) -> anyhow::Result<(Option<Arc<InputProfiles>>, Option<bool>)> {
+        match &s.profiles {
+            ProfileSpec::None => Ok((None, None)),
+            ProfileSpec::Provided(p) => Ok((Some(p.clone()), None)),
+            ProfileSpec::Synthetic {
+                bits,
+                zero_frac,
+                seed,
+            } => {
+                let key = keys.profiles.unwrap_or(0);
+                let (net, bits, zero_frac, seed) = (s.net.clone(), *bits, *zero_frac, *seed);
+                let (v, hit) = self.profiles.get_or_try(key, move || {
+                    Ok(InputProfiles::synthetic(&net, bits, zero_frac, seed))
+                })?;
+                Ok((Some(v), Some(hit)))
+            }
+        }
+    }
+
+    /// The pruned-plan artifact for a scenario (None for dense).
+    pub fn pruned_for(&self, s: &Scenario) -> anyhow::Result<Option<Arc<PrunePlan>>> {
+        let keys = keys_of(s);
+        Ok(self.prune_stage(s, &keys)?.0)
+    }
+
+    /// The mapping-plan artifact for a scenario.
+    pub fn mapping_for(&self, s: &Scenario) -> anyhow::Result<Arc<MappingPlan>> {
+        let keys = keys_of(s);
+        let (prune, _) = self.prune_stage(s, &keys)?;
+        Ok(self.mapping_stage(s, &keys, prune)?.0)
+    }
+
+    /// The input-profile artifact for a scenario (None when the
+    /// scenario carries no profile spec).
+    pub fn profiles_for(&self, s: &Scenario) -> anyhow::Result<Option<Arc<InputProfiles>>> {
+        let keys = keys_of(s);
+        Ok(self.profiles_stage(s, &keys)?.0)
+    }
+
+    /// Run the full pipeline. The returned report is stamped with a
+    /// [`CacheNote`] recording which stages were served from cache;
+    /// [`SimReport::content_digest`] excludes the note, so cached and
+    /// fresh evaluations of the same scenario stay bit-identical.
+    pub fn evaluate(&self, s: &Scenario) -> anyhow::Result<SimReport> {
+        let keys = keys_of(s);
+        let (prune, prune_hit) = self.prune_stage(s, &keys)?;
+        let (mapping, mapping_hit) = self.mapping_stage(s, &keys, prune)?;
+        let (profiles, profiles_hit) = self.profiles_stage(s, &keys)?;
+        let sim_key = hash::combine(
+            "sim",
+            &[
+                keys.arch,
+                keys.net,
+                keys.mapping,
+                keys.profiles.unwrap_or(0),
+                hash::fingerprint("sim-opts", &s.sim),
+            ],
+        );
+        let arch = s.arch.clone();
+        let net = s.net.clone();
+        let opts = s.sim;
+        let (rep, sim_hit) = self.sim.get_or_try(sim_key, move || {
+            simulate(&arch, &net, &mapping, profiles.as_deref(), opts)
+        })?;
+        let mut out = (*rep).clone();
+        out.cache = Some(CacheNote {
+            prune_hit,
+            mapping_hit,
+            profiles_hit,
+            sim_hit,
+        });
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> EvalStats {
+        EvalStats {
+            prune: self.prune.stats(),
+            mapping: self.mapping.stats(),
+            profiles: self.profiles.stats(),
+            sim: self.sim.stats(),
+        }
+    }
+}
+
+impl Default for Evaluator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The evaluation context a study or CLI command threads through a
+/// sweep: one shared evaluator plus the sim options every point should
+/// use. Clone is cheap (the evaluator is behind an `Arc`), which is
+/// what lets sweep closures (which must be `'static`) share the cache.
+#[derive(Clone, Default)]
+pub struct EvalCtx {
+    pub evaluator: Arc<Evaluator>,
+    pub sim: SimOptions,
+}
+
+impl EvalCtx {
+    pub fn new(sim: SimOptions) -> Self {
+        Self {
+            evaluator: Arc::new(Evaluator::new()),
+            sim,
+        }
+    }
+}

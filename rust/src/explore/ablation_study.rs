@@ -6,14 +6,17 @@
 //!    input-sparsity behavior;
 //! 2. buffer double-buffering: the Eq. 3 overlap terms on/off;
 //! 3. mapping policy: Auto vs forced spatial vs forced duplication.
+//!
+//! All groups evaluate through a shared [`EvalCtx`]: the subarray and
+//! policy groups reuse cached profiles/prune plans across their points,
+//! and the overlap group's ping-pong flip reuses one cached mapping
+//! plan (ping-pong is a simulation-only knob).
 
 use super::executor::{run_sweep, Codec, Job, Sweep, SweepConfig};
+use crate::eval::{EvalCtx, Scenario};
 use crate::hw::presets;
 use crate::mapping::duplication::{Strategy, StrategyPolicy};
-use crate::mapping::planner::{plan, MappingOptions};
-use crate::pruning::workflow::PruningWorkflow;
-use crate::sim::engine::{simulate, SimOptions};
-use crate::sim::input_sparsity::InputProfiles;
+use crate::mapping::planner::MappingOptions;
 use crate::sparsity::flexblock::FlexBlock;
 use crate::util::json::Json;
 use crate::workload::graph::Network;
@@ -65,50 +68,53 @@ pub fn ablation_codec() -> Codec<Vec<AblationPoint>> {
 /// The ablation groups `run_all_robust` sweeps, in report order.
 pub const GROUPS: [&str; 4] = ["subarray", "overlap", "policy", "bits"];
 
+fn point_of(label: String, rep: &crate::sim::report::SimReport) -> AblationPoint {
+    AblationPoint {
+        label,
+        cycles: rep.total_cycles,
+        energy_pj: rep.energy.total_pj,
+        skip_ratio: rep.mean_skip_ratio,
+    }
+}
+
 /// Ablation 1: sub-array height ∈ {1, 8, 32} at fixed macro geometry.
-pub fn subarray_granularity(net: &Network) -> anyhow::Result<Vec<AblationPoint>> {
+pub fn subarray_granularity(net: &Network, ctx: &EvalCtx) -> anyhow::Result<Vec<AblationPoint>> {
+    let net = Arc::new(net.clone());
     let mut out = Vec::new();
     for sub_rows in [1usize, 8, 32] {
         let mut arch = presets::usecase_arch(4, (2, 2));
         arch.cim.sub_rows = sub_rows;
         arch.name = format!("usecase_sub{sub_rows}");
-        let profiles = InputProfiles::synthetic(net, 8, 0.55, 0xAB1);
-        let mapping = plan(&arch, net, None, MappingOptions::default())?;
-        let rep = simulate(&arch, net, &mapping, Some(&profiles), SimOptions::default())?;
-        out.push(AblationPoint {
-            label: format!("sub_rows={sub_rows}"),
-            cycles: rep.total_cycles,
-            energy_pj: rep.energy.total_pj,
-            skip_ratio: rep.mean_skip_ratio,
-        });
+        let s = Scenario::new(arch, net.clone())
+            .synthetic_profiles(8, 0.55, 0xAB1)
+            .with_sim(ctx.sim);
+        let rep = ctx.evaluator.evaluate(&s)?;
+        out.push(point_of(format!("sub_rows={sub_rows}"), &rep));
     }
     Ok(out)
 }
 
 /// Ablation 2: ping-pong buffering on/off (Eq. 3 overlap).
-pub fn pipeline_overlap(net: &Network) -> anyhow::Result<Vec<AblationPoint>> {
+pub fn pipeline_overlap(net: &Network, ctx: &EvalCtx) -> anyhow::Result<Vec<AblationPoint>> {
+    let net = Arc::new(net.clone());
     let mut out = Vec::new();
     for pp in [true, false] {
         let mut arch = presets::usecase_arch(4, (2, 2));
         arch.global_in_buf.ping_pong = pp;
         arch.global_out_buf.ping_pong = pp;
-        let profiles = InputProfiles::synthetic(net, 8, 0.55, 0xAB2);
-        let mapping = plan(&arch, net, None, MappingOptions::default())?;
-        let rep = simulate(&arch, net, &mapping, Some(&profiles), SimOptions::default())?;
-        out.push(AblationPoint {
-            label: format!("ping_pong={pp}"),
-            cycles: rep.total_cycles,
-            energy_pj: rep.energy.total_pj,
-            skip_ratio: rep.mean_skip_ratio,
-        });
+        let s = Scenario::new(arch, net.clone())
+            .synthetic_profiles(8, 0.55, 0xAB2)
+            .with_sim(ctx.sim);
+        let rep = ctx.evaluator.evaluate(&s)?;
+        out.push(point_of(format!("ping_pong={pp}"), &rep));
     }
     Ok(out)
 }
 
 /// Ablation 3: mapping policy comparison under sparsity.
-pub fn policy_comparison(net: &Network) -> anyhow::Result<Vec<AblationPoint>> {
+pub fn policy_comparison(net: &Network, ctx: &EvalCtx) -> anyhow::Result<Vec<AblationPoint>> {
+    let net = Arc::new(net.clone());
     let fb = FlexBlock::hybrid(2, 16, 0.8);
-    let prune = PruningWorkflow::default().run_uniform(net, &fb, None)?;
     let mut out = Vec::new();
     for (label, policy) in [
         ("auto", StrategyPolicy::Auto),
@@ -116,19 +122,17 @@ pub fn policy_comparison(net: &Network) -> anyhow::Result<Vec<AblationPoint>> {
         ("duplicate", StrategyPolicy::Fixed(Strategy::Duplicate)),
     ] {
         let arch = presets::usecase_arch(16, (4, 4));
-        let profiles = InputProfiles::synthetic(net, 8, 0.55, 0xAB3);
         let opts = MappingOptions {
             policy,
             ..Default::default()
         };
-        let mapping = plan(&arch, net, Some(&prune), opts)?;
-        let rep = simulate(&arch, net, &mapping, Some(&profiles), SimOptions::default())?;
-        out.push(AblationPoint {
-            label: label.to_string(),
-            cycles: rep.total_cycles,
-            energy_pj: rep.energy.total_pj,
-            skip_ratio: rep.mean_skip_ratio,
-        });
+        let s = Scenario::new(arch, net.clone())
+            .prune_uniform(&fb)
+            .with_mapping(opts)
+            .synthetic_profiles(8, 0.55, 0xAB3)
+            .with_sim(ctx.sim);
+        let rep = ctx.evaluator.evaluate(&s)?;
+        out.push(point_of(label.to_string(), &rep));
     }
     Ok(out)
 }
@@ -136,20 +140,17 @@ pub fn policy_comparison(net: &Network) -> anyhow::Result<Vec<AblationPoint>> {
 /// Ablation 4: activation bit width (bit-serial depth) ∈ {4, 8, 12}.
 /// Latency scales ~linearly with bits; the zero-bit skip ratio shifts
 /// because low-precision quantization concentrates values.
-pub fn bit_width(net: &Network) -> anyhow::Result<Vec<AblationPoint>> {
+pub fn bit_width(net: &Network, ctx: &EvalCtx) -> anyhow::Result<Vec<AblationPoint>> {
+    let net = Arc::new(net.clone());
     let mut out = Vec::new();
     for bits in [4usize, 8, 12] {
         let mut arch = presets::usecase_arch(4, (2, 2));
         arch.input_bits = bits;
-        let profiles = InputProfiles::synthetic(net, bits, 0.55, 0xAB4);
-        let mapping = plan(&arch, net, None, MappingOptions::default())?;
-        let rep = simulate(&arch, net, &mapping, Some(&profiles), SimOptions::default())?;
-        out.push(AblationPoint {
-            label: format!("input_bits={bits}"),
-            cycles: rep.total_cycles,
-            energy_pj: rep.energy.total_pj,
-            skip_ratio: rep.mean_skip_ratio,
-        });
+        let s = Scenario::new(arch, net.clone())
+            .synthetic_profiles(bits, 0.55, 0xAB4)
+            .with_sim(ctx.sim);
+        let rep = ctx.evaluator.evaluate(&s)?;
+        out.push(point_of(format!("input_bits={bits}"), &rep));
     }
     Ok(out)
 }
@@ -158,8 +159,13 @@ pub fn bit_width(net: &Network) -> anyhow::Result<Vec<AblationPoint>> {
 /// group, each returning its group's point list. A crash in one group
 /// (e.g. an architecture invariant violated by an extreme knob value)
 /// no longer discards the other three.
-pub fn run_all_robust(net: &Network, cfg: &SweepConfig) -> anyhow::Result<Sweep<Vec<AblationPoint>>> {
+pub fn run_all_robust(
+    net: &Network,
+    ctx: &EvalCtx,
+    cfg: &SweepConfig,
+) -> anyhow::Result<Sweep<Vec<AblationPoint>>> {
     let net = Arc::new(net.clone());
+    let ctx = ctx.clone();
     let jobs: Vec<Job<&'static str>> = GROUPS
         .iter()
         .map(|&g| Job {
@@ -169,10 +175,10 @@ pub fn run_all_robust(net: &Network, cfg: &SweepConfig) -> anyhow::Result<Sweep<
         .collect();
     let report = run_sweep(jobs, cfg, Some(ablation_codec()), move |&group: &&'static str| {
         match group {
-            "subarray" => subarray_granularity(&net),
-            "overlap" => pipeline_overlap(&net),
-            "policy" => policy_comparison(&net),
-            "bits" => bit_width(&net),
+            "subarray" => subarray_granularity(&net, &ctx),
+            "overlap" => pipeline_overlap(&net, &ctx),
+            "policy" => policy_comparison(&net, &ctx),
+            "bits" => bit_width(&net, &ctx),
             other => anyhow::bail!("unknown ablation group '{other}'"),
         }
     })?;
@@ -188,7 +194,7 @@ mod tests {
     #[test]
     fn finer_subarrays_skip_more() {
         let net = zoo::resnet_mini();
-        let pts = subarray_granularity(&net).unwrap();
+        let pts = subarray_granularity(&net, &EvalCtx::default()).unwrap();
         // skip ratio strictly decreases with group size
         assert!(pts[0].skip_ratio > pts[1].skip_ratio);
         assert!(pts[1].skip_ratio > pts[2].skip_ratio);
@@ -199,14 +205,19 @@ mod tests {
     #[test]
     fn overlap_never_slower() {
         let net = zoo::resnet_mini();
-        let pts = pipeline_overlap(&net).unwrap();
+        let ctx = EvalCtx::default();
+        let pts = pipeline_overlap(&net, &ctx).unwrap();
         assert!(pts[0].cycles <= pts[1].cycles, "ping-pong helps or ties");
+        // ping-pong is sim-only: the pair shares one cached mapping plan
+        let s = ctx.evaluator.stats();
+        assert_eq!(s.mapping.misses, 1, "{s}");
+        assert_eq!(s.mapping.hits, 1, "{s}");
     }
 
     #[test]
     fn more_bits_cost_more_cycles() {
         let net = zoo::resnet_mini();
-        let pts = bit_width(&net).unwrap();
+        let pts = bit_width(&net, &EvalCtx::default()).unwrap();
         assert!(pts[0].cycles < pts[1].cycles);
         assert!(pts[1].cycles < pts[2].cycles);
     }
@@ -214,16 +225,23 @@ mod tests {
     #[test]
     fn auto_policy_at_least_as_good_as_worst_fixed() {
         let net = zoo::resnet_mini();
-        let pts = policy_comparison(&net).unwrap();
+        let ctx = EvalCtx::default();
+        let pts = policy_comparison(&net, &ctx).unwrap();
         let auto = pts[0].cycles;
         let worst = pts.iter().skip(1).map(|p| p.cycles).max().unwrap();
         assert!(auto <= worst, "auto {auto} > worst fixed {worst}");
+        // the three policies share one prune plan and one profile set
+        let s = ctx.evaluator.stats();
+        assert_eq!(s.prune.misses, 1, "{s}");
+        assert_eq!(s.prune.hits, 2, "{s}");
+        assert_eq!(s.profiles.misses, 1, "{s}");
+        assert_eq!(s.profiles.hits, 2, "{s}");
     }
 
     #[test]
     fn robust_runner_covers_all_groups() {
         let net = zoo::resnet_mini();
-        let sweep = run_all_robust(&net, &SweepConfig::default()).unwrap();
+        let sweep = run_all_robust(&net, &EvalCtx::default(), &SweepConfig::default()).unwrap();
         assert_eq!(sweep.total, GROUPS.len());
         assert!(sweep.failures.is_empty(), "{:?}", sweep.failures);
         let groups = sweep.strict().unwrap();

@@ -7,12 +7,10 @@
 //! usable at all.
 
 use super::executor::{run_sweep, Codec, Job, Sweep, SweepConfig};
+use crate::eval::{EvalCtx, Evaluator, Scenario};
 use crate::hw::arch::Architecture;
 use crate::hw::faults::{FaultModel, FaultSpatial};
-use crate::mapping::planner::{plan, MappingOptions};
-use crate::pruning::workflow::{PrunePlan, PruningWorkflow};
-use crate::sim::engine::{simulate, SimOptions};
-use crate::sim::input_sparsity::InputProfiles;
+use crate::sim::engine::SimOptions;
 use crate::sim::report::SimReport;
 use crate::sparsity::flexblock::FlexBlock;
 use crate::util::json::Json;
@@ -115,33 +113,47 @@ pub fn resilience_codec() -> Codec<ResiliencePoint> {
     Codec::new(point_to_json, point_from_json)
 }
 
-fn simulate_arch(
-    arch: &Architecture,
-    net: &Network,
-    prune: Option<&PrunePlan>,
-    profiles: &InputProfiles,
-) -> anyhow::Result<SimReport> {
-    let mapping = plan(arch, net, prune, MappingOptions::default())?;
-    simulate(arch, net, &mapping, Some(profiles), SimOptions::default())
-}
-
 /// Everything a single resilience point needs besides its fault rate;
-/// shared across workers via one `Arc`.
+/// shared across workers via one `Arc`. The prune plan and activation
+/// profiles are not materialized here — every point's scenario carries
+/// the same prune/profile specs, so the shared evaluator computes each
+/// artifact once and serves the rest from cache.
 struct FaultCtx {
+    ev: Arc<Evaluator>,
+    sim: SimOptions,
     arch: Architecture,
-    net: Network,
-    prune: Option<PrunePlan>,
-    profiles: InputProfiles,
+    net: Arc<Network>,
+    fb: Option<FlexBlock>,
     baseline: SimReport,
     pattern: String,
     spatial: FaultSpatial,
     seed: u64,
 }
 
+fn base_scenario(
+    net: &Arc<Network>,
+    fb: Option<&FlexBlock>,
+    arch: Architecture,
+    sim: SimOptions,
+) -> Scenario {
+    let bits = arch.input_bits;
+    let mut s = Scenario::new(arch, net.clone())
+        .synthetic_profiles(bits, 0.55, 0xFA17)
+        .with_sim(sim);
+    if let Some(fb) = fb {
+        s = s.prune_uniform(fb);
+    }
+    s
+}
+
+fn fault_scenario(ctx: &FaultCtx, arch: Architecture) -> Scenario {
+    base_scenario(&ctx.net, ctx.fb.as_ref(), arch, ctx.sim)
+}
+
 fn resilience_point(ctx: &FaultCtx, rate: f64) -> ResiliencePoint {
     let mut a = ctx.arch.clone();
     a.faults = FaultModel::scaled(rate, ctx.spatial, ctx.seed);
-    match simulate_arch(&a, &ctx.net, ctx.prune.as_ref(), &ctx.profiles) {
+    match ctx.ev.evaluate(&fault_scenario(ctx, a)) {
         Ok(rep) => {
             let (usable_macros, capacity_loss, extra_rounds) = match &rep.faults {
                 Some(f) => (f.usable_macros, f.capacity_loss, f.extra_rounds()),
@@ -185,11 +197,11 @@ fn resilience_point(ctx: &FaultCtx, rate: f64) -> ResiliencePoint {
 }
 
 /// Resilience curve under the resilient executor. The same pruning
-/// masks and activation profiles are reused across all points, so
-/// differences are purely fault-induced. Rates at which the chip is
-/// unusable yield points with `usable: false` instead of failing the
-/// sweep; a panic or hang in the simulator itself surfaces as a
-/// [`super::executor::SweepFailure`].
+/// masks and activation profiles are reused across all points (served
+/// from the shared evaluator's cache), so differences are purely
+/// fault-induced. Rates at which the chip is unusable yield points with
+/// `usable: false` instead of failing the sweep; a panic or hang in the
+/// simulator itself surfaces as a [`super::executor::SweepFailure`].
 pub fn run_resilience_robust(
     arch: &Architecture,
     net: &Network,
@@ -197,25 +209,22 @@ pub fn run_resilience_robust(
     rates: &[f64],
     spatial: FaultSpatial,
     seed: u64,
+    ectx: &EvalCtx,
     cfg: &SweepConfig,
 ) -> anyhow::Result<Sweep<ResiliencePoint>> {
-    let prune = match fb {
-        Some(fb) if !fb.is_dense() => {
-            Some(PruningWorkflow::default().run_uniform(net, fb, None)?)
-        }
-        _ => None,
-    };
-    let profiles = InputProfiles::synthetic(net, arch.input_bits, 0.55, 0xFA17);
+    let net = Arc::new(net.clone());
+    let pattern = fb.map(|f| f.name.clone()).unwrap_or_else(|| "Dense".into());
     let mut clean = arch.clone();
     clean.faults = FaultModel::none();
-    let baseline = simulate_arch(&clean, net, prune.as_ref(), &profiles)?;
-    let pattern = fb.map(|f| f.name.clone()).unwrap_or_else(|| "Dense".into());
-
+    let baseline = ectx
+        .evaluator
+        .evaluate(&base_scenario(&net, fb, clean, ectx.sim))?;
     let ctx = Arc::new(FaultCtx {
+        ev: ectx.evaluator.clone(),
+        sim: ectx.sim,
         arch: arch.clone(),
-        net: net.clone(),
-        prune,
-        profiles,
+        net,
+        fb: fb.cloned(),
         baseline,
         pattern,
         spatial,
@@ -251,6 +260,7 @@ pub fn run_resilience(
         rates,
         spatial,
         seed,
+        &EvalCtx::default(),
         &SweepConfig::with_threads(threads),
     )?
     .strict()

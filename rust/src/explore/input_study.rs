@@ -3,11 +3,10 @@
 //! patterns and ratios.
 
 use super::executor::{run_sweep, Codec, Job, Sweep, SweepConfig};
+use crate::eval::{EvalCtx, Evaluator, Scenario};
+use crate::hw::arch::Architecture;
 use crate::hw::presets;
-use crate::mapping::planner::{plan, MappingOptions};
-use crate::pruning::workflow::PruningWorkflow;
-use crate::sim::engine::{simulate, SimOptions};
-use crate::sim::input_sparsity::InputProfiles;
+use crate::sim::engine::SimOptions;
 use crate::sparsity::flexblock::FlexBlock;
 use crate::util::json::Json;
 use crate::workload::graph::Network;
@@ -49,22 +48,33 @@ pub fn input_codec() -> Codec<InputSparsityPoint> {
     Codec::new(point_to_json, point_from_json)
 }
 
+/// Evaluate the same configuration with and without input-skipping.
+/// The two scenarios differ only in `sparsity.input_skipping` — a
+/// simulation-only knob canonicalized out of the planning-stage cache
+/// key — so the pair shares one cached `MappingPlan` (and its prune
+/// plan and profiles), replanning nothing.
 fn run_pair(
-    net: &Network,
+    ev: &Evaluator,
+    net: &Arc<Network>,
     fb: Option<&FlexBlock>,
-    profiles: &InputProfiles,
+    zero_frac: f64,
+    sim: SimOptions,
     label: &str,
 ) -> anyhow::Result<InputSparsityPoint> {
     let mut arch = presets::usecase_arch(4, (2, 2));
-    let prune = match fb {
-        Some(fb) => Some(PruningWorkflow::default().run_uniform(net, fb, None)?),
-        None => None,
-    };
-    let mapping = plan(&arch, net, prune.as_ref(), MappingOptions::default())?;
     arch.sparsity.input_skipping = false;
-    let without = simulate(&arch, net, &mapping, Some(profiles), SimOptions::default())?;
+    let scenario = |a: &Architecture| {
+        let mut s = Scenario::new(a.clone(), net.clone())
+            .synthetic_profiles(8, zero_frac, 0xF16_10)
+            .with_sim(sim);
+        if let Some(fb) = fb {
+            s = s.prune_uniform(fb);
+        }
+        s
+    };
+    let without = ev.evaluate(&scenario(&arch))?;
     arch.sparsity.input_skipping = true;
-    let with = simulate(&arch, net, &mapping, Some(profiles), SimOptions::default())?;
+    let with = ev.evaluate(&scenario(&arch))?;
     Ok(InputSparsityPoint {
         label: label.to_string(),
         skip_ratio: with.mean_skip_ratio,
@@ -78,6 +88,7 @@ fn run_pair(
 pub fn run_dense_models_robust(
     nets: &[&Network],
     zero_frac: f64,
+    ctx: &EvalCtx,
     cfg: &SweepConfig,
 ) -> anyhow::Result<Sweep<InputSparsityPoint>> {
     let jobs: Vec<Job<Arc<Network>>> = nets
@@ -87,9 +98,17 @@ pub fn run_dense_models_robust(
             input: Arc::new((*n).clone()),
         })
         .collect();
+    let ev = ctx.evaluator.clone();
+    let sim = ctx.sim;
     let report = run_sweep(jobs, cfg, Some(input_codec()), move |net: &Arc<Network>| {
-        let profiles = InputProfiles::synthetic(net, 8, zero_frac, 0xF16_10);
-        run_pair(net, None, &profiles, &format!("{} (dense)", net.name))
+        run_pair(
+            &ev,
+            net,
+            None,
+            zero_frac,
+            sim,
+            &format!("{} (dense)", net.name),
+        )
     })?;
     Ok(Sweep::from_report(report))
 }
@@ -99,7 +118,13 @@ pub fn run_dense_models(
     zero_frac: f64,
     threads: usize,
 ) -> anyhow::Result<Vec<InputSparsityPoint>> {
-    run_dense_models_robust(nets, zero_frac, &SweepConfig::with_threads(threads))?.strict()
+    run_dense_models_robust(
+        nets,
+        zero_frac,
+        &EvalCtx::default(),
+        &SweepConfig::with_threads(threads),
+    )?
+    .strict()
 }
 
 /// Fig. 10 middle: interaction with weight-sparsity patterns at 80%,
@@ -108,6 +133,7 @@ pub fn run_dense_models(
 /// sparsity, the paper's observation).
 pub fn run_weight_patterns_robust(
     net: &Network,
+    ctx: &EvalCtx,
     cfg: &SweepConfig,
 ) -> anyhow::Result<Sweep<InputSparsityPoint>> {
     let net = Arc::new(net.clone());
@@ -126,9 +152,10 @@ pub fn run_weight_patterns_robust(
             input: fb,
         })
         .collect();
+    let ev = ctx.evaluator.clone();
+    let sim = ctx.sim;
     let report = run_sweep(jobs, cfg, Some(input_codec()), move |fb: &FlexBlock| {
-        let profiles = InputProfiles::synthetic(&net, 8, 0.62, 0xF16_10);
-        run_pair(&net, Some(fb), &profiles, &fb.name)
+        run_pair(&ev, &net, Some(fb), 0.62, sim, &fb.name)
     })?;
     Ok(Sweep::from_report(report))
 }
@@ -137,7 +164,12 @@ pub fn run_weight_patterns(
     net: &Network,
     threads: usize,
 ) -> anyhow::Result<Vec<InputSparsityPoint>> {
-    run_weight_patterns_robust(net, &SweepConfig::with_threads(threads))?.strict()
+    run_weight_patterns_robust(
+        net,
+        &EvalCtx::default(),
+        &SweepConfig::with_threads(threads),
+    )?
+    .strict()
 }
 
 /// Fig. 10 right: row-wise pattern across weight-sparsity ratios, under
@@ -145,6 +177,7 @@ pub fn run_weight_patterns(
 pub fn run_ratio_sweep_robust(
     net: &Network,
     ratios: &[f64],
+    ctx: &EvalCtx,
     cfg: &SweepConfig,
 ) -> anyhow::Result<Sweep<InputSparsityPoint>> {
     let net = Arc::new(net.clone());
@@ -155,12 +188,20 @@ pub fn run_ratio_sweep_robust(
             input: r,
         })
         .collect();
+    let ev = ctx.evaluator.clone();
+    let sim = ctx.sim;
     let report = run_sweep(jobs, cfg, Some(input_codec()), move |&r: &f64| {
         // activation zero-fraction grows with weight sparsity
         let zero_frac = 0.5 + 0.25 * r;
-        let profiles = InputProfiles::synthetic(&net, 8, zero_frac, 0xF16_10);
         let fb = FlexBlock::row_wise(r);
-        run_pair(&net, Some(&fb), &profiles, &format!("Row-wise@{r:.1}"))
+        run_pair(
+            &ev,
+            &net,
+            Some(&fb),
+            zero_frac,
+            sim,
+            &format!("Row-wise@{r:.1}"),
+        )
     })?;
     Ok(Sweep::from_report(report))
 }
@@ -170,7 +211,13 @@ pub fn run_ratio_sweep(
     ratios: &[f64],
     threads: usize,
 ) -> anyhow::Result<Vec<InputSparsityPoint>> {
-    run_ratio_sweep_robust(net, ratios, &SweepConfig::with_threads(threads))?.strict()
+    run_ratio_sweep_robust(
+        net,
+        ratios,
+        &EvalCtx::default(),
+        &SweepConfig::with_threads(threads),
+    )?
+    .strict()
 }
 
 #[cfg(test)]
@@ -214,6 +261,20 @@ mod tests {
             pts[1].speedup_from_input,
             pts[0].speedup_from_input
         );
+    }
+
+    #[test]
+    fn skip_pair_reuses_planning_artifacts() {
+        let net = Arc::new(zoo::resnet_mini());
+        let ev = Evaluator::new();
+        let fb = FlexBlock::hybrid(2, 16, 0.8);
+        run_pair(&ev, &net, Some(&fb), 0.55, SimOptions::default(), "pair").unwrap();
+        let s = ev.stats();
+        assert_eq!(s.mapping.misses, 1, "pair planned once: {s}");
+        assert_eq!(s.mapping.hits, 1, "second leg hit the plan cache: {s}");
+        assert_eq!(s.prune.misses, 1);
+        assert_eq!(s.prune.hits, 1);
+        assert_eq!(s.sim.misses, 2, "both legs simulated");
     }
 
     #[test]

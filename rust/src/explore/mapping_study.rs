@@ -3,12 +3,12 @@
 //! effect of ragged-matrix rearrangement.
 
 use super::executor::{run_sweep, Codec, Job, Sweep, SweepConfig};
+use crate::eval::{EvalCtx, Evaluator, Scenario};
 use crate::hw::presets;
+use crate::hw::units::UnitKind;
 use crate::mapping::duplication::{Strategy, StrategyPolicy};
-use crate::mapping::planner::{plan, MappingOptions};
-use crate::pruning::workflow::PruningWorkflow;
-use crate::sim::engine::{simulate, SimOptions};
-use crate::sim::input_sparsity::InputProfiles;
+use crate::mapping::planner::MappingOptions;
+use crate::sim::engine::SimOptions;
 use crate::sim::report::SimReport;
 use crate::sparsity::flexblock::FlexBlock;
 use crate::util::json::Json;
@@ -57,28 +57,36 @@ pub fn mapping_codec() -> Codec<MappingPoint> {
 pub const ORGS: [(usize, usize); 3] = [(8, 2), (4, 4), (2, 8)];
 
 fn run_one(
-    net: &Network,
+    ev: &Evaluator,
+    net: &Arc<Network>,
     org: (usize, usize),
     strategy: Strategy,
     fb: &FlexBlock,
     rearrange: bool,
+    sim: SimOptions,
 ) -> anyhow::Result<SimReport> {
-    let arch = presets::usecase_arch(16, org);
-    let prune = PruningWorkflow::default().run_uniform(net, fb, None)?;
+    let arch = Arc::new(presets::usecase_arch(16, org));
+    let bits = arch.input_bits;
     let opts = MappingOptions {
         policy: StrategyPolicy::Fixed(strategy),
         rearrange,
         ..Default::default()
     };
-    let mapping = plan(&arch, net, Some(&prune), opts)?;
-    let profiles = InputProfiles::synthetic(net, arch.input_bits, 0.6, 0xF16_11);
-    simulate(&arch, net, &mapping, Some(&profiles), SimOptions::default())
+    let s = Scenario::new(arch, net.clone())
+        .prune_uniform(fb)
+        .with_mapping(opts)
+        .synthetic_profiles(bits, 0.6, 0xF16_11)
+        .with_sim(sim);
+    ev.evaluate(&s)
 }
 
 /// Fig. 11 under the resilient executor: sweep organizations ×
-/// strategies for the given networks at the hybrid 80% pattern.
+/// strategies for the given networks at the hybrid 80% pattern. The
+/// shared evaluator serves the prune plan and profiles from cache
+/// across the strategy column of each (model, org) pair.
 pub fn run_fig11_robust(
     nets: &[&Network],
+    ctx: &EvalCtx,
     cfg: &SweepConfig,
 ) -> anyhow::Result<Sweep<MappingPoint>> {
     let fb = FlexBlock::hybrid(2, 16, 0.8);
@@ -100,12 +108,14 @@ pub fn run_fig11_robust(
             }
         }
     }
+    let ev = ctx.evaluator.clone();
+    let sim = ctx.sim;
     let report = run_sweep(
         jobs,
         cfg,
         Some(mapping_codec()),
         move |(net, org, strat): &(Arc<Network>, (usize, usize), Strategy)| {
-            let rep = run_one(net, *org, *strat, &fb, false)?;
+            let rep = run_one(&ev, net, *org, *strat, &fb, false, sim)?;
             Ok(MappingPoint {
                 model: net.name.clone(),
                 org: format!("{}x{}", org.0, org.1),
@@ -120,10 +130,17 @@ pub fn run_fig11_robust(
 }
 
 pub fn run_fig11(nets: &[&Network], threads: usize) -> anyhow::Result<Vec<MappingPoint>> {
-    run_fig11_robust(nets, &SweepConfig::with_threads(threads))?.strict()
+    run_fig11_robust(
+        nets,
+        &EvalCtx::default(),
+        &SweepConfig::with_threads(threads),
+    )?
+    .strict()
 }
 
-/// One Fig. 12 row: rearrangement off/on for a strategy.
+/// One Fig. 12 row: rearrangement off/on for a strategy. Carries the
+/// derived metrics only (not the full `SimReport`), so the sweep
+/// journals and resumes like every other study.
 #[derive(Debug, Clone)]
 pub struct RearrangePoint {
     pub strategy: String,
@@ -131,14 +148,58 @@ pub struct RearrangePoint {
     pub energy_pj: f64,
     pub latency_cycles: u64,
     pub utilization: f64,
-    pub report: SimReport,
+    /// Weight-buffer reads + writes — the buffer-traffic cost the
+    /// rearrangement trades against utilization.
+    pub weight_buf_accesses: u64,
+    /// Energy in the weight/global-in/global-out buffers.
+    pub buffer_energy_pj: f64,
+}
+
+fn rearrange_to_json(p: &RearrangePoint) -> Json {
+    let mut j = Json::obj();
+    j.set("strategy", Json::Str(p.strategy.clone()))
+        .set("rearranged", Json::Bool(p.rearranged))
+        .set("energy_pj", Json::Num(p.energy_pj))
+        .set("latency_cycles", Json::Num(p.latency_cycles as f64))
+        .set("utilization", Json::Num(p.utilization))
+        .set(
+            "weight_buf_accesses",
+            Json::Num(p.weight_buf_accesses as f64),
+        )
+        .set("buffer_energy_pj", Json::Num(p.buffer_energy_pj));
+    j
+}
+
+fn rearrange_from_json(j: &Json) -> anyhow::Result<RearrangePoint> {
+    Ok(RearrangePoint {
+        strategy: j.req_str("strategy")?.to_string(),
+        rearranged: j
+            .get("rearranged")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| anyhow::anyhow!("missing bool field `rearranged`"))?,
+        energy_pj: j.req_f64("energy_pj")?,
+        latency_cycles: j.req_f64("latency_cycles")? as u64,
+        utilization: j.req_f64("utilization")?,
+        weight_buf_accesses: j.req_f64("weight_buf_accesses")? as u64,
+        buffer_energy_pj: j.req_f64("buffer_energy_pj")?,
+    })
+}
+
+/// Checkpoint-journal codec for [`RearrangePoint`] sweeps — fig12 is
+/// checkpointable/resumable like every other study now that points
+/// journal derived metrics instead of an embedded report.
+pub fn rearrange_codec() -> Codec<RearrangePoint> {
+    Codec::new(rearrange_to_json, rearrange_from_json)
 }
 
 /// Fig. 12 under the resilient executor: hybrid Intra(2,1)+Full(2,16)
 /// on the 4×4 organization, with and without weight-data rearrangement,
-/// for both strategies. Points embed the full [`SimReport`], so this
-/// sweep has no checkpoint codec (`--checkpoint` is inert for it).
-pub fn run_fig12_robust(net: &Network, cfg: &SweepConfig) -> anyhow::Result<Sweep<RearrangePoint>> {
+/// for both strategies.
+pub fn run_fig12_robust(
+    net: &Network,
+    ctx: &EvalCtx,
+    cfg: &SweepConfig,
+) -> anyhow::Result<Sweep<RearrangePoint>> {
     let fb = FlexBlock::hybrid(2, 16, 0.8);
     let net = Arc::new(net.clone());
     let mut jobs: Vec<Job<(Strategy, bool)>> = Vec::new();
@@ -150,22 +211,38 @@ pub fn run_fig12_robust(net: &Network, cfg: &SweepConfig) -> anyhow::Result<Swee
             });
         }
     }
-    let report = run_sweep(jobs, cfg, None, move |(strat, rearr): &(Strategy, bool)| {
-        let rep = run_one(&net, (4, 4), *strat, &fb, *rearr)?;
-        Ok(RearrangePoint {
-            strategy: strat.label().to_string(),
-            rearranged: *rearr,
-            energy_pj: rep.energy.total_pj,
-            latency_cycles: rep.total_cycles,
-            utilization: rep.mean_utilization,
-            report: rep,
-        })
-    })?;
+    let ev = ctx.evaluator.clone();
+    let sim = ctx.sim;
+    let report = run_sweep(
+        jobs,
+        cfg,
+        Some(rearrange_codec()),
+        move |(strat, rearr): &(Strategy, bool)| {
+            let rep = run_one(&ev, &net, (4, 4), *strat, &fb, *rearr, sim)?;
+            Ok(RearrangePoint {
+                strategy: strat.label().to_string(),
+                rearranged: *rearr,
+                energy_pj: rep.energy.total_pj,
+                latency_cycles: rep.total_cycles,
+                utilization: rep.mean_utilization,
+                weight_buf_accesses: rep.counters.reads_of(UnitKind::WeightBuf)
+                    + rep.counters.writes_of(UnitKind::WeightBuf),
+                buffer_energy_pj: rep.energy.of(UnitKind::WeightBuf)
+                    + rep.energy.of(UnitKind::GlobalInBuf)
+                    + rep.energy.of(UnitKind::GlobalOutBuf),
+            })
+        },
+    )?;
     Ok(Sweep::from_report(report))
 }
 
 pub fn run_fig12(net: &Network, threads: usize) -> anyhow::Result<Vec<RearrangePoint>> {
-    run_fig12_robust(net, &SweepConfig::with_threads(threads))?.strict()
+    run_fig12_robust(
+        net,
+        &EvalCtx::default(),
+        &SweepConfig::with_threads(threads),
+    )?
+    .strict()
 }
 
 #[cfg(test)]
@@ -244,5 +321,25 @@ mod tests {
         let back = c.decode(&c.encode(&p)).unwrap();
         assert_eq!(back.model, p.model);
         assert_eq!(back.latency_cycles, p.latency_cycles);
+    }
+
+    #[test]
+    fn rearrange_codec_roundtrips() {
+        let p = RearrangePoint {
+            strategy: "spatial".into(),
+            rearranged: true,
+            energy_pj: 2.5e8,
+            latency_cycles: 42_000,
+            utilization: 0.66,
+            weight_buf_accesses: 9_876_543,
+            buffer_energy_pj: 1.2e7,
+        };
+        let c = rearrange_codec();
+        let back = c.decode(&c.encode(&p)).unwrap();
+        assert_eq!(back.strategy, p.strategy);
+        assert!(back.rearranged);
+        assert_eq!(back.latency_cycles, p.latency_cycles);
+        assert_eq!(back.weight_buf_accesses, p.weight_buf_accesses);
+        assert_eq!(back.buffer_energy_pj, p.buffer_energy_pj);
     }
 }

@@ -5,12 +5,10 @@
 //! Pareto frontier over (latency, energy) with optional constraints.
 
 use super::executor::{run_sweep, Codec, Job, Sweep, SweepConfig};
+use crate::eval::{EvalCtx, Scenario};
 use crate::hw::presets;
 use crate::mapping::duplication::{Strategy, StrategyPolicy};
-use crate::mapping::planner::{plan, MappingOptions};
-use crate::pruning::workflow::PruningWorkflow;
-use crate::sim::engine::{simulate, SimOptions};
-use crate::sim::input_sparsity::InputProfiles;
+use crate::mapping::planner::MappingOptions;
 use crate::sparsity::flexblock::FlexBlock;
 use crate::util::json::Json;
 use crate::workload::graph::Network;
@@ -132,9 +130,12 @@ pub fn search_robust(
     n_macros: usize,
     ratios: &[f64],
     cons: Constraints,
+    ctx: &EvalCtx,
     cfg: &SweepConfig,
 ) -> anyhow::Result<(Sweep<Option<DesignPoint>>, Vec<DesignPoint>)> {
     let net = Arc::new(net.clone());
+    let ev = ctx.evaluator.clone();
+    let sim = ctx.sim;
     let jobs: Vec<Job<(FlexBlock, (usize, usize), Strategy)>> = candidates(n_macros, ratios)
         .into_iter()
         .map(|(fb, org, strat)| Job {
@@ -160,14 +161,17 @@ pub fn search_robust(
                 }
             }
             let arch = presets::usecase_arch(n_macros, *org);
-            let prune = PruningWorkflow::default().run_uniform(&net, fb, None)?;
+            let bits = arch.input_bits;
             let opts = MappingOptions {
                 policy: StrategyPolicy::Fixed(*strat),
                 ..Default::default()
             };
-            let mapping = plan(&arch, &net, Some(&prune), opts)?;
-            let profiles = InputProfiles::synthetic(&net, arch.input_bits, 0.55, 0x5EA);
-            let rep = simulate(&arch, &net, &mapping, Some(&profiles), SimOptions::default())?;
+            let s = Scenario::new(arch, net.clone())
+                .prune_uniform(fb)
+                .with_mapping(opts)
+                .synthetic_profiles(bits, 0.55, 0x5EA)
+                .with_sim(sim);
+            let rep = ev.evaluate(&s)?;
             if let Some(minu) = cons.min_utilization {
                 if rep.mean_utilization < minu {
                     return Ok(None);
@@ -200,7 +204,14 @@ pub fn search(
     cons: Constraints,
     threads: usize,
 ) -> anyhow::Result<(Vec<DesignPoint>, Vec<DesignPoint>)> {
-    let (sweep, pareto) = search_robust(net, n_macros, ratios, cons, &SweepConfig::with_threads(threads))?;
+    let (sweep, pareto) = search_robust(
+        net,
+        n_macros,
+        ratios,
+        cons,
+        &EvalCtx::default(),
+        &SweepConfig::with_threads(threads),
+    )?;
     let all: Vec<DesignPoint> = sweep.strict()?.into_iter().flatten().collect();
     Ok((all, pareto))
 }

@@ -3,9 +3,10 @@
 //! ratios 0.5–0.9 on the 4-macro use-case architecture.
 
 use super::executor::{run_sweep, Codec, Job, Sweep, SweepConfig};
+use crate::eval::{EvalCtx, Scenario};
 use crate::hw::arch::Architecture;
 use crate::hw::presets;
-use crate::sim::engine::simulate_network_default;
+use crate::sim::engine::SimOptions;
 use crate::sim::report::SimReport;
 use crate::sparsity::flexblock::FlexBlock;
 use crate::util::json::Json;
@@ -96,23 +97,51 @@ fn sparsity_point(fb: &FlexBlock, ratio: f64, rep: &SimReport, dense: &SimReport
     }
 }
 
-fn dense_baseline(net: &Network) -> anyhow::Result<(Arc<SimReport>, Arc<Architecture>)> {
-    let dense_arch = presets::usecase_dense_baseline(4, (2, 2));
-    let dense = simulate_network_default(&dense_arch, net, None)?;
+/// The default-pipeline scenario these studies sweep: uniform pruning,
+/// synthetic activation profiles (the `simulate_network_default`
+/// numbers, now routed through the shared evaluator).
+fn usecase_scenario(
+    arch: &Arc<Architecture>,
+    net: &Arc<Network>,
+    fb: Option<&FlexBlock>,
+    sim: SimOptions,
+) -> Scenario {
+    let mut s = Scenario::new(arch.clone(), net.clone())
+        .synthetic_profiles(arch.input_bits, 0.5, 0xC1A0)
+        .with_sim(sim);
+    if let Some(fb) = fb {
+        s = s.prune_uniform(fb);
+    }
+    s
+}
+
+fn dense_baseline(
+    ctx: &EvalCtx,
+    net: &Arc<Network>,
+) -> anyhow::Result<(Arc<SimReport>, Arc<Architecture>)> {
+    let dense_arch = Arc::new(presets::usecase_dense_baseline(4, (2, 2)));
+    let dense = ctx
+        .evaluator
+        .evaluate(&usecase_scenario(&dense_arch, net, None, ctx.sim))?;
     Ok((Arc::new(dense), Arc::new(presets::usecase_arch(4, (2, 2)))))
 }
 
 /// Run the cost side of Fig. 8 under the resilient executor; failed
 /// points are reported in the returned [`Sweep`] instead of aborting
 /// the study. (Accuracy is attached separately by the caller when a
-/// PJRT session is available.)
+/// PJRT session is available.) All points share `ctx`'s evaluator, so
+/// the dense baseline's artifacts and repeated patterns are served
+/// from cache.
 pub fn run_fig8_robust(
     net: &Network,
     ratios: &[f64],
+    ctx: &EvalCtx,
     cfg: &SweepConfig,
 ) -> anyhow::Result<Sweep<SparsityPoint>> {
-    let (dense, arch) = dense_baseline(net)?;
     let net = Arc::new(net.clone());
+    let (dense, arch) = dense_baseline(ctx, &net)?;
+    let ev = ctx.evaluator.clone();
+    let sim = ctx.sim;
     let mut jobs = Vec::new();
     for &r in ratios {
         for fb in fig8_patterns(r) {
@@ -127,7 +156,7 @@ pub fn run_fig8_robust(
         cfg,
         Some(sparsity_codec()),
         move |(fb, r): &(FlexBlock, f64)| {
-            let rep = simulate_network_default(&arch, &net, Some(fb))?;
+            let rep = ev.evaluate(&usecase_scenario(&arch, &net, Some(fb), sim))?;
             Ok(sparsity_point(fb, *r, &rep, &dense))
         },
     )?;
@@ -140,7 +169,13 @@ pub fn run_fig8(
     ratios: &[f64],
     threads: usize,
 ) -> anyhow::Result<Vec<SparsityPoint>> {
-    run_fig8_robust(net, ratios, &SweepConfig::with_threads(threads))?.strict()
+    run_fig8_robust(
+        net,
+        ratios,
+        &EvalCtx::default(),
+        &SweepConfig::with_threads(threads),
+    )?
+    .strict()
 }
 
 /// Fig. 9(a): block-size sweep at fixed 80% sparsity. Sizes chosen to
@@ -162,9 +197,15 @@ pub fn fig9a_patterns() -> Vec<FlexBlock> {
 }
 
 /// Fig. 9(a) under the resilient executor.
-pub fn run_fig9a_robust(net: &Network, cfg: &SweepConfig) -> anyhow::Result<Sweep<SparsityPoint>> {
-    let (dense, arch) = dense_baseline(net)?;
+pub fn run_fig9a_robust(
+    net: &Network,
+    ctx: &EvalCtx,
+    cfg: &SweepConfig,
+) -> anyhow::Result<Sweep<SparsityPoint>> {
     let net = Arc::new(net.clone());
+    let (dense, arch) = dense_baseline(ctx, &net)?;
+    let ev = ctx.evaluator.clone();
+    let sim = ctx.sim;
     let jobs: Vec<Job<FlexBlock>> = fig9a_patterns()
         .into_iter()
         .map(|fb| Job {
@@ -173,14 +214,19 @@ pub fn run_fig9a_robust(net: &Network, cfg: &SweepConfig) -> anyhow::Result<Swee
         })
         .collect();
     let report = run_sweep(jobs, cfg, Some(sparsity_codec()), move |fb: &FlexBlock| {
-        let rep = simulate_network_default(&arch, &net, Some(fb))?;
+        let rep = ev.evaluate(&usecase_scenario(&arch, &net, Some(fb), sim))?;
         Ok(sparsity_point(fb, 0.8, &rep, &dense))
     })?;
     Ok(Sweep::from_report(report))
 }
 
 pub fn run_fig9a(net: &Network, threads: usize) -> anyhow::Result<Vec<SparsityPoint>> {
-    run_fig9a_robust(net, &SweepConfig::with_threads(threads))?.strict()
+    run_fig9a_robust(
+        net,
+        &EvalCtx::default(),
+        &SweepConfig::with_threads(threads),
+    )?
+    .strict()
 }
 
 /// Fig. 9(b): the cross-model comparison at 80% sparsity, under the
@@ -190,14 +236,20 @@ pub fn run_fig9a(net: &Network, threads: usize) -> anyhow::Result<Vec<SparsityPo
 /// accuracy collapse).
 pub fn run_fig9b_robust(
     nets: &[&Network],
+    ctx: &EvalCtx,
     cfg: &SweepConfig,
 ) -> anyhow::Result<Sweep<(String, SparsityPoint)>> {
     let arch = Arc::new(presets::usecase_arch(4, (2, 2)));
+    let dense_arch = Arc::new(presets::usecase_dense_baseline(4, (2, 2)));
+    let ev = ctx.evaluator.clone();
+    let sim = ctx.sim;
     let mut jobs: Vec<Job<(Arc<Network>, Arc<SimReport>, FlexBlock)>> = Vec::new();
     for net in nets {
-        let dense_arch = presets::usecase_dense_baseline(4, (2, 2));
-        let dense = Arc::new(simulate_network_default(&dense_arch, net, None)?);
         let netc = Arc::new((*net).clone());
+        let dense = Arc::new(
+            ctx.evaluator
+                .evaluate(&usecase_scenario(&dense_arch, &netc, None, ctx.sim))?,
+        );
         for fb in [
             FlexBlock::row_block(16, 0.8),
             FlexBlock::column_block(16, 0.8),
@@ -214,7 +266,7 @@ pub fn run_fig9b_robust(
         cfg,
         Some(model_point_codec()),
         move |(net, dense, fb): &(Arc<Network>, Arc<SimReport>, FlexBlock)| {
-            let rep = simulate_network_default(&arch, net, Some(fb))?;
+            let rep = ev.evaluate(&usecase_scenario(&arch, net, Some(fb), sim))?;
             Ok((net.name.clone(), sparsity_point(fb, 0.8, &rep, dense)))
         },
     )?;
@@ -225,7 +277,12 @@ pub fn run_fig9b(
     nets: &[&Network],
     threads: usize,
 ) -> anyhow::Result<Vec<(String, SparsityPoint)>> {
-    run_fig9b_robust(nets, &SweepConfig::with_threads(threads))?.strict()
+    run_fig9b_robust(
+        nets,
+        &EvalCtx::default(),
+        &SweepConfig::with_threads(threads),
+    )?
+    .strict()
 }
 
 /// Convenience: the use-case architectures of Sec. VII-A.
@@ -314,10 +371,14 @@ mod tests {
     #[test]
     fn fig8_robust_reports_sweep_shape() {
         let net = zoo::resnet_mini();
-        let sw = run_fig8_robust(&net, &[0.8], &SweepConfig::default()).unwrap();
+        let ctx = EvalCtx::default();
+        let sw = run_fig8_robust(&net, &[0.8], &ctx, &SweepConfig::default()).unwrap();
         assert_eq!(sw.total, fig8_patterns(0.8).len());
         assert!(sw.failures.is_empty(), "{}", sw.summary());
         assert_eq!(sw.points.len(), sw.total);
         assert_eq!(sw.resumed, 0);
+        // the shared evaluator reused artifacts across the pattern sweep
+        // (all points share one net and one profile spec)
+        assert!(ctx.evaluator.stats().total_hits() > 0);
     }
 }

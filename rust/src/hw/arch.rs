@@ -104,6 +104,28 @@ impl Architecture {
         Ok(())
     }
 
+    /// A copy of the architecture with simulation-only knobs forced to
+    /// canonical values: input skipping off and every buffer's
+    /// ping-pong off. The mapping planner never reads these knobs, so
+    /// two architectures that differ only in them produce identical
+    /// plans — the eval layer hashes this view for its planning-stage
+    /// cache key so such pairs (e.g. fig11's skip on/off) share one
+    /// cached `MappingPlan`.
+    pub fn planning_view(&self) -> Architecture {
+        let mut a = self.clone();
+        a.sparsity.input_skipping = false;
+        for b in [
+            &mut a.global_in_buf,
+            &mut a.global_out_buf,
+            &mut a.weight_buf,
+            &mut a.local_buf,
+            &mut a.index_mem,
+        ] {
+            b.ping_pong = false;
+        }
+        a
+    }
+
     /// Total weight words storable across all macros.
     pub fn total_weight_capacity_words(&self) -> usize {
         self.org.n_macros() * self.cim.capacity_words()

@@ -33,6 +33,7 @@
 //! ```
 
 pub mod cli;
+pub mod eval;
 pub mod explore;
 pub mod hw;
 pub mod mapping;
@@ -47,6 +48,7 @@ pub mod workload;
 
 /// Convenience re-exports for the common API surface.
 pub mod prelude {
+    pub use crate::eval::{EvalCtx, Evaluator, Scenario};
     pub use crate::hw::arch::Architecture;
     pub use crate::mapping::planner::MappingPlan;
     pub use crate::pruning::workflow::PruningWorkflow;

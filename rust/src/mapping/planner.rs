@@ -209,6 +209,37 @@ pub fn plan_with_faults(
     faults: Option<&FaultMap>,
 ) -> anyhow::Result<MappingPlan> {
     arch.validate()?;
+    plan_with_faults_unchecked(arch, net, prune, opts, faults)
+}
+
+/// [`plan`] for callers that have already validated the architecture —
+/// the `eval::Evaluator` hoists `arch.validate()` out of the per-point
+/// path and pays it once per distinct architecture instead.
+pub(crate) fn plan_prevalidated(
+    arch: &Architecture,
+    net: &Network,
+    prune: Option<&PrunePlan>,
+    opts: MappingOptions,
+) -> anyhow::Result<MappingPlan> {
+    debug_assert!(
+        arch.validate().is_ok(),
+        "plan_prevalidated() expects a pre-validated architecture"
+    );
+    let fmap = if arch.faults.is_zero() {
+        None
+    } else {
+        Some(arch.faults.instantiate(&arch.cim, &arch.org))
+    };
+    plan_with_faults_unchecked(arch, net, prune, opts, fmap.as_ref())
+}
+
+fn plan_with_faults_unchecked(
+    arch: &Architecture,
+    net: &Network,
+    prune: Option<&PrunePlan>,
+    opts: MappingOptions,
+    faults: Option<&FaultMap>,
+) -> anyhow::Result<MappingPlan> {
     let deg = match faults {
         Some(f) if !f.is_clean() => {
             let (eff_r, eff_c) = f.effective_geometry();

@@ -8,10 +8,10 @@ use super::energy::aggregate;
 use super::input_sparsity::InputProfiles;
 use super::pipeline::{pipeline_latency, StepLat};
 use super::report::{OpReport, SimReport};
+use crate::eval::{Evaluator, Scenario};
 use crate::hw::arch::Architecture;
 use crate::hw::units::UnitKind;
-use crate::mapping::planner::{plan, MappingOptions, MappingPlan};
-use crate::pruning::workflow::PruningWorkflow;
+use crate::mapping::planner::MappingPlan;
 use crate::sparsity::flexblock::FlexBlock;
 use crate::workload::graph::Network;
 use crate::workload::op::kind_label;
@@ -43,7 +43,13 @@ pub fn simulate(
     profiles: Option<&InputProfiles>,
     opts: SimOptions,
 ) -> anyhow::Result<SimReport> {
-    arch.validate()?;
+    // Validation is hoisted into `eval::Evaluator` construction (paid
+    // once per distinct architecture) — callers reach simulate()
+    // through the evaluator or via plan(), both of which validate.
+    debug_assert!(
+        arch.validate().is_ok(),
+        "simulate() expects a pre-validated architecture"
+    );
     let input_bits = arch.input_bits;
     let sub_rows = arch.cim.sub_rows;
     let sub_cols = arch.cim.sub_cols;
@@ -322,6 +328,7 @@ pub fn simulate(
         index_bytes: index_bytes_total,
         stage_totals,
         faults: mapping.faults.clone(),
+        cache: None,
     })
 }
 
@@ -332,16 +339,15 @@ pub fn simulate_network_default(
     net: &Network,
     fb: Option<&FlexBlock>,
 ) -> anyhow::Result<SimReport> {
-    let prune = match fb {
-        Some(fb) if !fb.is_dense() => {
-            let wf = PruningWorkflow::default();
-            Some(wf.run_uniform(net, fb, None)?)
-        }
-        _ => None,
-    };
-    let mapping = plan(arch, net, prune.as_ref(), MappingOptions::default())?;
-    let profiles = InputProfiles::synthetic(net, arch.input_bits, 0.5, 0xC1A0);
-    simulate(arch, net, &mapping, Some(&profiles), SimOptions::default())
+    let mut s = Scenario::new(arch.clone(), net.clone()).synthetic_profiles(
+        arch.input_bits,
+        0.5,
+        0xC1A0,
+    );
+    if let Some(fb) = fb {
+        s = s.prune_uniform(fb);
+    }
+    Evaluator::new().evaluate(&s)
 }
 
 #[cfg(test)]

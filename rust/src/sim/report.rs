@@ -7,6 +7,22 @@ use crate::mapping::planner::FaultPlanSummary;
 use crate::util::table::{fmt_cycles, fmt_energy_pj, Table};
 use crate::workload::op::OpId;
 
+/// Which pipeline stages were served from the evaluator's artifact
+/// cache when this report was produced. Stamped by
+/// [`crate::eval::Evaluator::evaluate`]; `None` on reports from a
+/// direct `simulate()` call. Provenance only — excluded from
+/// [`SimReport::content_digest`], so cached and fresh evaluations of
+/// the same scenario stay bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheNote {
+    /// `None` when the scenario had no prune stage to run.
+    pub prune_hit: Option<bool>,
+    pub mapping_hit: bool,
+    /// `None` when the scenario had no profile stage to run.
+    pub profiles_hit: Option<bool>,
+    pub sim_hit: bool,
+}
+
 /// Per-op simulation detail.
 #[derive(Debug, Clone)]
 pub struct OpReport {
@@ -46,9 +62,20 @@ pub struct SimReport {
     /// Degradation summary when the mapping was built against a faulty
     /// chip; `None` on the fault-free path.
     pub faults: Option<FaultPlanSummary>,
+    /// Artifact-cache provenance (see [`CacheNote`]).
+    pub cache: Option<CacheNote>,
 }
 
 impl SimReport {
+    /// Stable structural fingerprint of the simulation *content* —
+    /// every field except the cache-provenance note, which varies
+    /// between cached and fresh evaluations of the same scenario.
+    pub fn content_digest(&self) -> u128 {
+        let mut scrubbed = self.clone();
+        scrubbed.cache = None;
+        crate::eval::hash::fingerprint("sim-report", &scrubbed)
+    }
+
     /// Speedup of `self` relative to `baseline` (> 1 = faster).
     pub fn speedup_vs(&self, baseline: &SimReport) -> f64 {
         baseline.total_cycles as f64 / self.total_cycles.max(1) as f64
@@ -167,6 +194,7 @@ mod tests {
             index_bytes: 0,
             stage_totals: (0, cycles, 0),
             faults: None,
+            cache: None,
         }
     }
 
@@ -176,6 +204,21 @@ mod tests {
         let sparse = dummy(250, 40.0);
         assert!((sparse.speedup_vs(&dense) - 4.0).abs() < 1e-9);
         assert!((sparse.energy_saving_vs(&dense) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn content_digest_ignores_cache_note_only() {
+        let a = dummy(100, 10.0);
+        let mut b = a.clone();
+        b.cache = Some(CacheNote {
+            mapping_hit: true,
+            sim_hit: true,
+            ..Default::default()
+        });
+        assert_eq!(a.content_digest(), b.content_digest());
+        let mut c = a.clone();
+        c.total_cycles = 101;
+        assert_ne!(a.content_digest(), c.content_digest());
     }
 
     #[test]

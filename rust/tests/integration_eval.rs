@@ -1,0 +1,84 @@
+//! Integration: the staged evaluation pipeline is deterministic and
+//! actually reuses cached artifacts across scenarios (ROADMAP: unified
+//! eval pipeline).
+
+use ciminus::eval::{Evaluator, Scenario};
+use ciminus::hw::presets;
+use ciminus::sim::engine::SimOptions;
+use ciminus::sparsity::flexblock::FlexBlock;
+use ciminus::workload::zoo;
+use std::sync::Arc;
+
+fn scenario(zero_frac: f64) -> Scenario {
+    let arch = presets::usecase_arch(4, (2, 2));
+    let bits = arch.input_bits;
+    Scenario::new(arch, zoo::resnet_mini())
+        .prune_uniform(&FlexBlock::hybrid(2, 16, 0.8))
+        .synthetic_profiles(bits, zero_frac, 0xE7A1)
+}
+
+#[test]
+fn cached_and_fresh_evaluations_are_bit_identical() {
+    let s = scenario(0.55);
+    let ev = Evaluator::new();
+    let first = ev.evaluate(&s).unwrap();
+    // same evaluator again: full sim-cache hit
+    let cached = ev.evaluate(&s).unwrap();
+    // fresh evaluator: everything recomputed from scratch
+    let fresh = Evaluator::new().evaluate(&s).unwrap();
+    assert_eq!(first.content_digest(), cached.content_digest());
+    assert_eq!(first.content_digest(), fresh.content_digest());
+    // only the cache-provenance note differs between the runs
+    assert!(!first.cache.unwrap().sim_hit);
+    assert!(cached.cache.unwrap().sim_hit);
+    let stats = ev.stats();
+    assert_eq!(stats.sim.misses, 1, "{stats}");
+    assert_eq!(stats.sim.hits, 1, "{stats}");
+}
+
+#[test]
+fn sim_only_change_replans_nothing() {
+    let ev = Evaluator::new();
+    let s = scenario(0.55);
+    ev.evaluate(&s).unwrap();
+    let planned = ev.stats().mapping.misses;
+    let tweaked = s.with_sim(SimOptions {
+        postproc_throughput: 1,
+    });
+    let rep = ev.evaluate(&tweaked).unwrap();
+    let stats = ev.stats();
+    assert_eq!(
+        stats.mapping.misses, planned,
+        "a sim-only change must not replan: {stats}"
+    );
+    assert_eq!(stats.mapping.hits, 1, "{stats}");
+    assert_eq!(stats.prune.misses, 1, "{stats}");
+    assert_eq!(stats.sim.misses, 2, "different SimOptions resimulate: {stats}");
+    let note = rep.cache.unwrap();
+    assert!(note.mapping_hit);
+    assert!(!note.sim_hit);
+}
+
+#[test]
+fn input_skip_pair_shares_planning_artifacts() {
+    // the fig10/fig11-style skip vs no-skip pair: `input_skipping` is
+    // canonicalized out of the planning-stage cache key
+    let ev = Evaluator::new();
+    let mut arch = presets::usecase_arch(4, (2, 2));
+    let bits = arch.input_bits;
+    let net = Arc::new(zoo::resnet_mini());
+    let fb = FlexBlock::hybrid(2, 16, 0.8);
+    for skip in [false, true] {
+        arch.sparsity.input_skipping = skip;
+        let s = Scenario::new(arch.clone(), net.clone())
+            .prune_uniform(&fb)
+            .synthetic_profiles(bits, 0.6, 0xE7A2);
+        ev.evaluate(&s).unwrap();
+    }
+    let stats = ev.stats();
+    assert_eq!(stats.mapping.misses, 1, "one plan for the pair: {stats}");
+    assert_eq!(stats.mapping.hits, 1, "{stats}");
+    assert_eq!(stats.prune.misses, 1, "{stats}");
+    assert_eq!(stats.prune.hits, 1, "{stats}");
+    assert_eq!(stats.sim.misses, 2, "both legs simulate: {stats}");
+}
