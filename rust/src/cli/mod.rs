@@ -8,7 +8,7 @@ use crate::eval::{EvalCtx, Evaluator, Scenario};
 use crate::explore::{
     ablation_study, executor, fault_study, input_study, mapping_study, sparsity_study,
 };
-use crate::explore::{Sweep, SweepConfig, SweepFailure};
+use crate::explore::{IsolationMode, Sweep, SweepConfig, SweepFailure, TaskSpec};
 use crate::hw::arch::Architecture;
 use crate::hw::faults::FaultSpatial;
 use crate::hw::presets;
@@ -45,7 +45,8 @@ commands:
             [--no-input-sparsity] [--postproc-throughput N] [--detail]
   validate                         Fig. 6 validation vs MARS/SDP
   explore   --study fig8|fig9|fig10|fig11|fig12|ablation|smoke
-            [--model M] [sweep options]
+            [--model M] [--smoke-points N --smoke-job-ms MS]
+            [sweep options]
   faults    --arch <preset|file>[,...] [--model M] [--pattern P --ratio R]
             [--rates r1,r2,...] [--spatial uniform|row|column|cluster]
             [--seed N] [--json] [sweep options]
@@ -59,15 +60,23 @@ commands:
             [sweep options]        Pareto design-space search
   trace     --model M [--arch A] [--pattern P --ratio R] [--limit N]
                                    per-round schedule + bound analysis
+  journal   merge --into <canonical.jsonl> <shard.jsonl>...
+                                   fold shard journals into a canonical
+                                   checkpoint (last-writer-wins keys)
 
 sweep options (explore / faults / search):
   --threads N        worker threads (0 = available parallelism)
-  --job-timeout S    per-job soft timeout in seconds; stuck jobs are
-                     reported as failures and the sweep continues
+  --job-timeout S    per-job timeout in seconds; soft in thread mode
+                     (stuck jobs are shed and reported), hard in
+                     process mode (the worker is killed and respawned)
   --retries N        retry transient job errors up to N times
   --max-failures N   abort remaining jobs after N failures
   --checkpoint PATH  append finished points to a JSONL journal
   --resume           skip points already present in --checkpoint
+  --isolation MODE   thread (default) runs jobs in-process; process
+                     forks one worker per shard, surviving aborts,
+                     OOM kills and segfaults as structured failures
+  --shards N         worker processes in process mode (0 = auto)
 
 simulation options (simulate / explore / faults / search):
   --postproc-throughput N  elements per cycle per post-processing lane
@@ -80,7 +89,7 @@ patterns: row_wise | row_block[:w] | column_wise | channel_wise |
           full:MxN | dense
 ";
 
-fn load_arch(spec: &str) -> Result<Architecture> {
+pub(crate) fn load_arch(spec: &str) -> Result<Architecture> {
     if spec.ends_with(".json") {
         let j = Json::parse_file(std::path::Path::new(spec))
             .with_context(|| format!("reading architecture file `{spec}`"))?;
@@ -91,7 +100,7 @@ fn load_arch(spec: &str) -> Result<Architecture> {
     }
 }
 
-fn load_net(spec: &str) -> Result<Network> {
+pub(crate) fn load_net(spec: &str) -> Result<Network> {
     if spec.ends_with(".json") {
         import::network_from_file(std::path::Path::new(spec))
             .with_context(|| format!("loading network from `{spec}`"))
@@ -118,7 +127,25 @@ fn sweep_config(a: &Args) -> Result<SweepConfig> {
         !cfg.resume || cfg.checkpoint.is_some(),
         "--resume requires --checkpoint <path>"
     );
+    if let Some(mode) = a.get("isolation") {
+        cfg.isolation = IsolationMode::parse(mode)?;
+    }
+    cfg.shards = a.usize_or("shards", 0)?;
     Ok(cfg)
+}
+
+/// Stamp the process-mode task descriptor for one sub-sweep onto a copy
+/// of the shared sweep config. Inert in thread mode; in process mode
+/// each worker re-builds exactly this job list from the descriptor.
+fn task_cfg(cfg: &SweepConfig, a: &Args, name: &str, extra: &[(&str, Json)]) -> Result<SweepConfig> {
+    let mut p = Json::obj();
+    if let Some(t) = a.usize_opt("postproc-throughput")? {
+        p.set("postproc", Json::Num(t as f64));
+    }
+    for (k, v) in extra {
+        p.set(k, v.clone());
+    }
+    Ok(cfg.tasked(TaskSpec::new(name, p)))
 }
 
 /// Build the simulation options from the shared `--postproc-throughput`
@@ -189,6 +216,10 @@ pub fn run<I: IntoIterator<Item = String>>(raw: I) -> Result<i32> {
         "report" => cmd_report(&a),
         "search" => cmd_search(&a),
         "trace" => cmd_trace(&a),
+        "journal" => cmd_journal(&a),
+        // hidden mode: this process was re-exec'd by the
+        // process-isolation supervisor to run one sweep shard
+        "__worker" => crate::explore::worker::worker_main(),
         other => {
             eprintln!("unknown command `{other}`\n{USAGE}");
             Ok(EXIT_USAGE)
@@ -273,7 +304,9 @@ fn cmd_explore(a: &Args) -> Result<i32> {
     let mut agg = SweepAgg::default();
     match study {
         "fig8" => {
-            let net = load_net(a.str_or("model", "resnet50"))?;
+            let model = a.str_or("model", "resnet50");
+            let net = load_net(model)?;
+            let cfg = task_cfg(&cfg, a, "fig8", &[("model", Json::Str(model.to_string()))])?;
             let sweep =
                 sparsity_study::run_fig8_robust(&net, &sparsity_study::RATIOS, &ectx, &cfg)?;
             println!(
@@ -287,8 +320,10 @@ fn cmd_explore(a: &Args) -> Result<i32> {
             agg.add(&sweep);
         }
         "fig9" => {
-            let net = load_net(a.str_or("model", "resnet50"))?;
-            let sweep_a = sparsity_study::run_fig9a_robust(&net, &ectx, &cfg)?;
+            let model = a.str_or("model", "resnet50");
+            let net = load_net(model)?;
+            let cfg_a = task_cfg(&cfg, a, "fig9a", &[("model", Json::Str(model.to_string()))])?;
+            let sweep_a = sparsity_study::run_fig9a_robust(&net, &ectx, &cfg_a)?;
             println!(
                 "{}",
                 crate::report::sparsity_table("Fig. 9(a): block sizes @80%", &sweep_a.points)
@@ -298,7 +333,8 @@ fn cmd_explore(a: &Args) -> Result<i32> {
             let r50 = zoo::resnet50(32, 100);
             let v16 = zoo::vgg16(32, 100);
             let mb = zoo::mobilenetv2(32, 100);
-            let sweep_b = sparsity_study::run_fig9b_robust(&[&r50, &v16, &mb], &ectx, &cfg)?;
+            let cfg_b = task_cfg(&cfg, a, "fig9b", &[])?;
+            let sweep_b = sparsity_study::run_fig9b_robust(&[&r50, &v16, &mb], &ectx, &cfg_b)?;
             let flat: Vec<_> = sweep_b
                 .points
                 .iter()
@@ -318,15 +354,18 @@ fn cmd_explore(a: &Args) -> Result<i32> {
             let r50 = zoo::resnet50(32, 100);
             let v16 = zoo::vgg16(32, 100);
             let mb = zoo::mobilenetv2(32, 100);
+            let cfg_d = task_cfg(&cfg, a, "fig10-dense", &[("zero_frac", Json::Num(0.55))])?;
             let dense =
-                input_study::run_dense_models_robust(&[&r50, &v16, &mb], 0.55, &ectx, &cfg)?;
+                input_study::run_dense_models_robust(&[&r50, &v16, &mb], 0.55, &ectx, &cfg_d)?;
             println!(
                 "{}",
                 crate::report::input_sparsity_table("Fig. 10: dense models", &dense.points)
                     .render()
             );
             agg.add(&dense);
-            let pats = input_study::run_weight_patterns_robust(&r50, &ectx, &cfg)?;
+            let cfg_p =
+                task_cfg(&cfg, a, "fig10-pattern", &[("model", Json::Str("resnet50".into()))])?;
+            let pats = input_study::run_weight_patterns_robust(&r50, &ectx, &cfg_p)?;
             println!(
                 "{}",
                 crate::report::input_sparsity_table(
@@ -336,11 +375,13 @@ fn cmd_explore(a: &Args) -> Result<i32> {
                 .render()
             );
             agg.add(&pats);
+            let cfg_r =
+                task_cfg(&cfg, a, "fig10-ratio", &[("model", Json::Str("resnet50".into()))])?;
             let ratios = input_study::run_ratio_sweep_robust(
                 &r50,
                 &[0.5, 0.6, 0.7, 0.8, 0.9],
                 &ectx,
-                &cfg,
+                &cfg_r,
             )?;
             println!(
                 "{}",
@@ -355,18 +396,23 @@ fn cmd_explore(a: &Args) -> Result<i32> {
         "fig11" => {
             let r50 = zoo::resnet50(32, 100);
             let v16 = zoo::vgg16(32, 100);
+            let cfg = task_cfg(&cfg, a, "fig11", &[])?;
             let sweep = mapping_study::run_fig11_robust(&[&r50, &v16], &ectx, &cfg)?;
             println!("{}", crate::report::mapping_table(&sweep.points).render());
             agg.add(&sweep);
         }
         "fig12" => {
-            let net = load_net(a.str_or("model", "resnet50"))?;
+            let model = a.str_or("model", "resnet50");
+            let net = load_net(model)?;
+            let cfg = task_cfg(&cfg, a, "fig12", &[("model", Json::Str(model.to_string()))])?;
             let sweep = mapping_study::run_fig12_robust(&net, &ectx, &cfg)?;
             println!("{}", crate::report::rearrange_table(&sweep.points).render());
             agg.add(&sweep);
         }
         "ablation" => {
-            let net = load_net(a.str_or("model", "resnet_mini"))?;
+            let model = a.str_or("model", "resnet_mini");
+            let net = load_net(model)?;
+            let cfg = task_cfg(&cfg, a, "ablation", &[("model", Json::Str(model.to_string()))])?;
             let sweep = ablation_study::run_all_robust(&net, &ectx, &cfg)?;
             let mut t = crate::util::table::Table::new(&[
                 "label", "cycles", "energy(uJ)", "skip%",
@@ -389,7 +435,14 @@ fn cmd_explore(a: &Args) -> Result<i32> {
         // exercises the full failure/checkpoint path without the
         // simulator (used by CI and for demoing --resume)
         "smoke" => {
-            let sweep = executor::smoke_sweep(&cfg)?;
+            let points = a.usize_opt("smoke-points")?;
+            let job_ms = a.usize_or("smoke-job-ms", 0)? as u64;
+            let mut extra = vec![("job_ms", Json::Num(job_ms as f64))];
+            if let Some(n) = points {
+                extra.push(("points", Json::Num(n as f64)));
+            }
+            let cfg = task_cfg(&cfg, a, "smoke", &extra)?;
+            let sweep = executor::smoke_sweep_sized(&cfg, points, job_ms)?;
             println!(
                 "smoke sweep: {} of {} points completed",
                 sweep.points.len(),
@@ -424,8 +477,22 @@ fn cmd_faults(a: &Args) -> Result<i32> {
             continue;
         }
         let arch = load_arch(spec)?;
+        let fcfg = task_cfg(
+            &cfg,
+            a,
+            "faults",
+            &[
+                ("arch", Json::Str(spec.to_string())),
+                ("model", Json::Str(a.str_or("model", "resnet_mini").to_string())),
+                ("pattern", Json::Str(a.str_or("pattern", "dense").to_string())),
+                ("ratio", Json::Num(ratio)),
+                ("rates", Json::Arr(rates.iter().map(|r| Json::Num(*r)).collect())),
+                ("spatial", Json::Str(a.str_or("spatial", "uniform").to_string())),
+                ("seed", Json::Num(seed as f64)),
+            ],
+        )?;
         let sweep = fault_study::run_resilience_robust(
-            &arch, &net, fb_opt, &rates, spatial, seed, &ectx, &cfg,
+            &arch, &net, fb_opt, &rates, spatial, seed, &ectx, &fcfg,
         )?;
         if !a.bool("json") {
             println!(
@@ -547,6 +614,17 @@ fn cmd_search(a: &Args) -> Result<i32> {
         candidates(n_macros, &ratios).len(),
         n_macros
     );
+    let mut extra = vec![
+        ("model", Json::Str(a.str_or("model", "resnet50").to_string())),
+        ("macros", Json::Num(n_macros as f64)),
+    ];
+    if let Some(s) = cons.max_sparsity {
+        extra.push(("max_sparsity", Json::Num(s)));
+    }
+    if let Some(u) = cons.min_utilization {
+        extra.push(("min_util", Json::Num(u)));
+    }
+    let cfg = task_cfg(&cfg, a, "search", &extra)?;
     let (sweep, pareto) = search_robust(&net, n_macros, &ratios, cons, &ectx, &cfg)?;
     let feasible = sweep.points.iter().flatten().count();
     println!("{} feasible points, {} Pareto-optimal:\n", feasible, pareto.len());
@@ -572,6 +650,33 @@ fn cmd_search(a: &Args) -> Result<i32> {
     let mut agg = SweepAgg::default();
     agg.add(&sweep);
     Ok(agg.finish())
+}
+
+/// `ciminus journal merge --into <canonical> <shard>...`: offline
+/// last-writer-wins merge of shard journals (e.g. from independently
+/// run or killed sweeps) into one canonical checkpoint.
+fn cmd_journal(a: &Args) -> Result<i32> {
+    const MERGE_USAGE: &str =
+        "usage: ciminus journal merge --into <canonical.jsonl> <shard.jsonl>...";
+    if a.positional.get(1).map(|s| s.as_str()) != Some("merge") {
+        eprintln!("{MERGE_USAGE}");
+        return Ok(EXIT_USAGE);
+    }
+    let into = match a.get("into") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            eprintln!("journal merge: missing --into <canonical.jsonl>\n{MERGE_USAGE}");
+            return Ok(EXIT_USAGE);
+        }
+    };
+    let shards: Vec<PathBuf> = a.positional[2..].iter().map(PathBuf::from).collect();
+    if shards.is_empty() {
+        eprintln!("journal merge: no shard journals given\n{MERGE_USAGE}");
+        return Ok(EXIT_USAGE);
+    }
+    let n = executor::Journal::merge_files(&into, &shards)?;
+    println!("merged {n} new entries into {}", into.display());
+    Ok(EXIT_OK)
 }
 
 fn cmd_trace(a: &Args) -> Result<i32> {
@@ -717,6 +822,59 @@ mod tests {
             ["--job-timeout", "-1"].iter().map(|s| s.to_string()),
         );
         assert!(sweep_config(&bad_timeout).is_err());
+    }
+
+    #[test]
+    fn sweep_config_parses_isolation_and_shards() {
+        let a = Args::parse(
+            ["--isolation", "process", "--shards", "3"].iter().map(|s| s.to_string()),
+        );
+        let cfg = sweep_config(&a).unwrap();
+        assert_eq!(cfg.isolation, IsolationMode::Process);
+        assert_eq!(cfg.shards, 3);
+        let dflt = Args::parse(std::iter::empty::<String>());
+        assert_eq!(sweep_config(&dflt).unwrap().isolation, IsolationMode::Thread);
+        let bad = Args::parse(["--isolation", "vm"].iter().map(|s| s.to_string()));
+        assert!(sweep_config(&bad).is_err(), "unknown isolation mode rejected");
+    }
+
+    #[test]
+    fn journal_merge_usage_errors() {
+        assert_eq!(run_args(&["journal"]).unwrap(), EXIT_USAGE);
+        assert_eq!(run_args(&["journal", "frobnicate"]).unwrap(), EXIT_USAGE);
+        assert_eq!(run_args(&["journal", "merge", "/tmp/s.jsonl"]).unwrap(), EXIT_USAGE);
+        assert_eq!(
+            run_args(&["journal", "merge", "--into", "/tmp/c.jsonl"]).unwrap(),
+            EXIT_USAGE,
+            "no shard journals given"
+        );
+    }
+
+    #[test]
+    fn journal_merge_folds_shards_into_canonical() {
+        let dir = std::env::temp_dir().join(format!(
+            "ciminus-cli-merge-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let canon = dir.join("canon.jsonl");
+        let shard = dir.join("canon.jsonl.shard-0");
+        std::fs::write(&canon, "{\"key\":\"a\",\"ok\":1}\n").unwrap();
+        std::fs::write(&shard, "{\"key\":\"a\",\"ok\":1}\n{\"key\":\"b\",\"ok\":2}\n").unwrap();
+        let code = run_args(&[
+            "journal",
+            "merge",
+            "--into",
+            canon.to_str().unwrap(),
+            shard.to_str().unwrap(),
+        ])
+        .unwrap();
+        assert_eq!(code, EXIT_OK);
+        let map = executor::Journal::load_map(&canon).unwrap();
+        assert_eq!(map.len(), 2, "duplicate key skipped, new key appended");
+        assert_eq!(map.get("b").and_then(|v| v.as_f64()), Some(2.0));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

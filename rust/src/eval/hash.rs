@@ -14,6 +14,13 @@ use std::fmt::{self, Debug, Write};
 const FNV_OFFSET_128: u128 = 0x6c62272e07bb014262b821756295c58d;
 const FNV_PRIME_128: u128 = 0x0000000001000000000000000000013B;
 
+/// Hash-schema version mixed into every fingerprint. Bump whenever the
+/// *layout* of a hashed artifact changes without its `Debug` rendering
+/// changing (e.g. a field is reinterpreted, or stage boundaries move),
+/// so stale cached stage results from an older build can never alias
+/// a new build's keys.
+pub const HASH_SCHEMA_VERSION: u32 = 1;
+
 /// Streaming FNV-1a/128 hasher over bytes or `Debug` renderings.
 pub struct StableHasher {
     state: u128,
@@ -21,9 +28,11 @@ pub struct StableHasher {
 
 impl StableHasher {
     pub fn new() -> Self {
-        Self {
+        let mut h = Self {
             state: FNV_OFFSET_128,
-        }
+        };
+        h.write_bytes(&HASH_SCHEMA_VERSION.to_le_bytes());
+        h
     }
 
     pub fn write_bytes(&mut self, bytes: &[u8]) {
@@ -108,5 +117,20 @@ mod tests {
     fn combine_is_order_sensitive() {
         let (x, y) = (fingerprint("t", &1u64), fingerprint("t", &2u64));
         assert_ne!(combine("c", &[x, y]), combine("c", &[y, x]));
+    }
+
+    #[test]
+    fn schema_version_is_mixed_into_every_hash() {
+        // a fresh hasher already differs from the bare FNV offset basis,
+        // so keys from builds without (or with another) schema version
+        // cannot collide with this build's keys
+        assert_ne!(StableHasher::new().finish(), FNV_OFFSET_128);
+        let mut v0 = StableHasher {
+            state: FNV_OFFSET_128,
+        };
+        v0.write_bytes(b"same payload");
+        let mut v1 = StableHasher::new();
+        v1.write_bytes(b"same payload");
+        assert_ne!(v0.finish(), v1.finish());
     }
 }

@@ -16,13 +16,21 @@
 //!   ([`JobError::Aborted`]) once too many points have failed;
 //! * **checkpointed resume** — each completed point is appended to a
 //!   crash-safe JSONL journal; a re-run with `resume` replays finished
-//!   points from the journal instead of recomputing them.
+//!   points from the journal instead of recomputing them;
+//! * **process isolation** — with [`IsolationMode::Process`] the job
+//!   queue is partitioned into shards and each shard runs in a forked
+//!   worker *process* (see `explore::worker`): aborts, OOM kills and
+//!   segfaults become structured [`JobError::Crashed`] failures, and
+//!   `job_timeout` turns into a **hard** kill-and-respawn timeout.
+//!   Workers checkpoint to per-shard journals that are merged into the
+//!   canonical journal (last-writer-wins), so even a SIGKILL'd sweep
+//!   resumes cleanly.
 //!
 //! Results are always reported in input order, independent of thread
 //! count, so sweeps are deterministic under `--threads` variation.
 
 use crate::util::json::Json;
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::fmt;
 use std::panic::{self, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
@@ -53,6 +61,10 @@ pub enum JobError {
     Timeout(Duration),
     /// The sweep's failure budget was exhausted before this job ran.
     Aborted(String),
+    /// The worker process executing the job died — abort, OOM kill,
+    /// segfault. Only produced under `--isolation=process`, which is
+    /// the point: `catch_unwind` cannot see any of these.
+    Crashed { signal: i32, shard: usize },
 }
 
 impl JobError {
@@ -63,6 +75,18 @@ impl JobError {
             JobError::Failed(_) => "error",
             JobError::Timeout(_) => "timeout",
             JobError::Aborted(_) => "aborted",
+            JobError::Crashed { .. } => "crashed",
+        }
+    }
+
+    /// The bare payload, without the kind prefix `Display` adds. Used
+    /// by the worker protocol so messages survive a round trip through
+    /// frames without accumulating `panic: panic: …` prefixes.
+    pub fn message(&self) -> String {
+        match self {
+            JobError::Panic(m) | JobError::Failed(m) | JobError::Aborted(m) => m.clone(),
+            JobError::Timeout(d) => format!("after {:.2}s", d.as_secs_f64()),
+            JobError::Crashed { .. } => self.to_string(),
         }
     }
 }
@@ -74,6 +98,13 @@ impl fmt::Display for JobError {
             JobError::Failed(m) => write!(f, "error: {m}"),
             JobError::Timeout(d) => write!(f, "timeout after {:.2}s", d.as_secs_f64()),
             JobError::Aborted(m) => write!(f, "aborted: {m}"),
+            JobError::Crashed { signal, shard } => {
+                if *signal > 0 {
+                    write!(f, "crashed: worker for shard {shard} killed by signal {signal}")
+                } else {
+                    write!(f, "crashed: worker for shard {shard} exited abnormally")
+                }
+            }
         }
     }
 }
@@ -95,6 +126,75 @@ pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 // configuration
 // ---------------------------------------------------------------------
 
+/// How sweep jobs are isolated from each other.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IsolationMode {
+    /// In-process worker threads with `catch_unwind` (the default).
+    Thread,
+    /// One worker *process* per shard: survives aborts, OOM kills and
+    /// segfaults, and enforces hard kill-on-timeout.
+    Process,
+}
+
+impl IsolationMode {
+    pub fn parse(s: &str) -> anyhow::Result<IsolationMode> {
+        match s {
+            "thread" => Ok(IsolationMode::Thread),
+            "process" => Ok(IsolationMode::Process),
+            other => anyhow::bail!("unknown isolation mode `{other}` (thread|process)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            IsolationMode::Thread => "thread",
+            IsolationMode::Process => "process",
+        }
+    }
+}
+
+/// Names a study sub-sweep so a `__worker` process can rebuild the same
+/// job list from scratch. The CLI stamps one on the `SweepConfig` before
+/// each sub-sweep it launches; `explore::worker` keeps the registry that
+/// maps `name` back to the study runner.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub name: String,
+    /// Task parameters (model/arch specs, ratios, seeds, …) as JSON so
+    /// they serialize straight into the worker header frame.
+    pub params: Json,
+}
+
+impl TaskSpec {
+    pub fn new(name: &str, params: Json) -> TaskSpec {
+        TaskSpec {
+            name: name.to_string(),
+            params,
+        }
+    }
+}
+
+/// Per-job lifecycle events emitted by the in-thread engine when a
+/// `progress` hook is configured. Process-mode workers use the hook to
+/// stream results to their supervisor as they complete.
+#[derive(Debug, Clone)]
+pub enum ProgressEvent {
+    Started { key: String },
+    Ok { key: String, value: Json },
+    Failed { key: String, kind: &'static str, message: String },
+}
+
+/// Cloneable progress callback; wrapped so `SweepConfig` keeps deriving
+/// `Debug`/`Clone`.
+#[derive(Clone)]
+pub struct ProgressHook(pub Arc<dyn Fn(&ProgressEvent) + Send + Sync>);
+
+impl fmt::Debug for ProgressHook {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("ProgressHook(..)")
+    }
+}
+
 /// Execution policy for a sweep. `Default` reproduces the historical
 /// behavior (all cores, no timeout, no retries, no checkpoint) except
 /// that panics are captured instead of aborting the process.
@@ -102,7 +202,9 @@ pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 pub struct SweepConfig {
     /// Worker threads; 0 = available parallelism.
     pub threads: usize,
-    /// Per-job (per-attempt) soft timeout. `None` disables the watchdog.
+    /// Per-job (per-attempt) timeout. `None` disables it. Soft (the
+    /// stuck thread is shed) in thread mode; **hard** (the worker
+    /// process is killed and respawned) in process mode.
     pub job_timeout: Option<Duration>,
     /// Extra attempts after a transient `Err` (panics are not retried).
     pub max_retries: u32,
@@ -116,6 +218,18 @@ pub struct SweepConfig {
     pub checkpoint: Option<PathBuf>,
     /// Replay completed points from the journal instead of recomputing.
     pub resume: bool,
+    /// Job isolation: in-thread `catch_unwind` or per-shard worker
+    /// processes (requires a `task` so workers can rebuild the jobs).
+    pub isolation: IsolationMode,
+    /// Worker processes in process mode; 0 = auto.
+    pub shards: usize,
+    /// Process-mode task identity; set by the CLI per sub-sweep.
+    pub task: Option<TaskSpec>,
+    /// Restrict execution to these job keys; everything else resolves
+    /// as `Aborted` without running. Set for process-mode workers.
+    pub key_filter: Option<BTreeSet<String>>,
+    /// Per-job progress callback (process-mode workers stream frames).
+    pub progress: Option<ProgressHook>,
 }
 
 impl Default for SweepConfig {
@@ -129,6 +243,11 @@ impl Default for SweepConfig {
             max_failures: None,
             checkpoint: None,
             resume: false,
+            isolation: IsolationMode::Thread,
+            shards: 0,
+            task: None,
+            key_filter: None,
+            progress: None,
         }
     }
 }
@@ -140,6 +259,14 @@ impl SweepConfig {
         SweepConfig {
             threads,
             ..SweepConfig::default()
+        }
+    }
+
+    /// This configuration with a process-mode task identity attached.
+    pub fn tasked(&self, task: TaskSpec) -> SweepConfig {
+        SweepConfig {
+            task: Some(task),
+            ..self.clone()
         }
     }
 }
@@ -311,26 +438,114 @@ pub struct Journal {
 
 impl Journal {
     /// Load `key -> encoded point` from an existing journal. A missing
-    /// file is an empty journal; unparseable (torn) lines are skipped.
+    /// file is an empty journal. Torn or corrupt lines — a crash
+    /// mid-append can truncate anywhere, including inside a multi-byte
+    /// UTF-8 sequence — are skipped with a warning so they cost one
+    /// recomputed point instead of the whole resume. Duplicate keys are
+    /// last-writer-wins, which is what makes shard-journal merging and
+    /// re-runs over the same journal safe.
     pub fn load_map(path: &Path) -> anyhow::Result<BTreeMap<String, Json>> {
-        let text = match std::fs::read_to_string(path) {
-            Ok(t) => t,
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(BTreeMap::new()),
             Err(e) => anyhow::bail!("reading checkpoint journal {}: {e}", path.display()),
         };
+        let text = String::from_utf8_lossy(&bytes);
         let mut map = BTreeMap::new();
-        for line in text.lines() {
+        for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() {
                 continue;
             }
-            if let Ok(j) = Json::parse(line) {
-                if let (Some(k), Some(v)) = (j.get("key").and_then(Json::as_str), j.get("ok")) {
-                    map.insert(k.to_string(), v.clone());
-                }
+            match Json::parse(line) {
+                Ok(j) => match (j.get("key").and_then(Json::as_str), j.get("ok")) {
+                    (Some(k), Some(v)) => {
+                        map.insert(k.to_string(), v.clone());
+                    }
+                    _ => eprintln!(
+                        "warning: {}:{}: journal line lacks key/ok fields, skipped",
+                        path.display(),
+                        lineno + 1
+                    ),
+                },
+                Err(_) => eprintln!(
+                    "warning: {}:{}: torn or corrupt journal line skipped",
+                    path.display(),
+                    lineno + 1
+                ),
             }
         }
         Ok(map)
+    }
+
+    /// Merge shard journals into a canonical journal: every (key,
+    /// value) pair whose *effective* value (after last-writer-wins
+    /// collapse) differs from the canonical journal's is appended to
+    /// it. Later shard files win over earlier ones. Returns the number
+    /// of entries appended. Used by the supervisor at end of run, by
+    /// `--resume` to absorb shard journals orphaned by a killed
+    /// supervisor, and by the `journal merge` CLI subcommand for
+    /// independently-run (distributed) shards.
+    pub fn merge_files(canonical: &Path, shards: &[PathBuf]) -> anyhow::Result<usize> {
+        let have = Journal::load_map(canonical)?;
+        // collapse across ALL shards first (later shards win), then
+        // diff once against the canonical map — appending per shard
+        // instead would re-append both sides of a cross-shard conflict
+        // on every re-merge, breaking idempotency
+        let mut incoming = BTreeMap::new();
+        for shard in shards {
+            for (key, val) in Journal::load_map(shard)? {
+                incoming.insert(key, val);
+            }
+        }
+        let mut out = Journal::open_append(canonical)?;
+        let mut appended = 0usize;
+        for (key, val) in incoming {
+            if have.get(&key) == Some(&val) {
+                continue;
+            }
+            out.append(&key, &val)
+                .map_err(|e| anyhow::anyhow!("appending to {}: {e}", canonical.display()))?;
+            appended += 1;
+        }
+        Ok(appended)
+    }
+
+    /// Fold `<canonical>.shard-N` journals left behind by a killed
+    /// process-mode supervisor into the canonical journal, then delete
+    /// them. Returns the number of merged entries; quietly a no-op when
+    /// there is nothing to fold.
+    pub fn merge_orphan_shards(canonical: &Path) -> anyhow::Result<usize> {
+        let parent = match canonical.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+            _ => PathBuf::from("."),
+        };
+        let prefix = match canonical.file_name().and_then(|s| s.to_str()) {
+            Some(name) => format!("{name}.shard-"),
+            None => return Ok(0),
+        };
+        let entries = match std::fs::read_dir(&parent) {
+            Ok(rd) => rd,
+            Err(_) => return Ok(0),
+        };
+        let mut shards: Vec<PathBuf> = entries
+            .flatten()
+            .filter(|e| {
+                e.file_name()
+                    .to_str()
+                    .is_some_and(|n| n.starts_with(&prefix))
+            })
+            .map(|e| e.path())
+            .collect();
+        if shards.is_empty() {
+            return Ok(0);
+        }
+        shards.sort();
+        let merged = Journal::merge_files(canonical, &shards)?;
+        for s in &shards {
+            let _ = std::fs::remove_file(s);
+        }
+        Ok(merged)
     }
 
     pub fn open_append(path: &Path) -> anyhow::Result<Journal> {
@@ -387,7 +602,7 @@ enum Event<R> {
     },
 }
 
-fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     // a worker panic can never poison these locks (jobs run outside the
     // critical sections and under catch_unwind), but never abort a
     // sweep over a poisoned mutex either way
@@ -516,6 +731,17 @@ where
     // resume: replay completed points recorded by a previous run
     if cfg.resume {
         if let (Some(path), Some(codec)) = (cfg.checkpoint.as_ref(), codec.as_ref()) {
+            // a SIGKILL'd process-mode supervisor leaves its progress in
+            // per-shard journals; fold them in before loading
+            if cfg.isolation == IsolationMode::Process && cfg.key_filter.is_none() {
+                match Journal::merge_orphan_shards(path) {
+                    Ok(0) => {}
+                    Ok(m) => eprintln!(
+                        "sweep: recovered {m} completed points from orphaned shard journals"
+                    ),
+                    Err(e) => eprintln!("warning: shard journal recovery failed: {e}"),
+                }
+            }
             let seen = Journal::load_map(path)?;
             for (i, job) in jobs.iter().enumerate() {
                 if let Some(saved) = seen.get(&job.key) {
@@ -532,6 +758,41 @@ where
             }
         }
     }
+    // shard filter (process-mode workers): jobs outside the assigned
+    // key set resolve immediately without running
+    if let Some(filter) = cfg.key_filter.as_ref() {
+        for (i, job) in jobs.iter().enumerate() {
+            if outcomes[i].is_none() && !filter.contains(&job.key) {
+                outcomes[i] = Some(JobOutcome {
+                    key: job.key.clone(),
+                    index: i,
+                    attempts: 0,
+                    from_checkpoint: false,
+                    result: Err(JobError::Aborted("outside this worker's shard".into())),
+                });
+            }
+        }
+    }
+
+    // process isolation: delegate the remaining queue to the shard
+    // supervisor, which forks one worker process per shard
+    if cfg.isolation == IsolationMode::Process && cfg.key_filter.is_none() {
+        match (cfg.task.as_ref(), codec.as_ref()) {
+            (Some(task), Some(c)) => {
+                let keys: Vec<String> = jobs.iter().map(|j| j.key.clone()).collect();
+                return super::worker::supervise(keys, outcomes, cfg, c, task);
+            }
+            (None, _) => eprintln!(
+                "warning: this sweep has no process-mode task registered; \
+                 falling back to --isolation=thread"
+            ),
+            (Some(_), None) => eprintln!(
+                "warning: --isolation=process needs a checkpoint codec; \
+                 falling back to --isolation=thread"
+            ),
+        }
+    }
+
     let mut journal = match (&cfg.checkpoint, &codec) {
         (Some(path), Some(_)) => Some(Journal::open_append(path)?),
         _ => None,
@@ -560,9 +821,20 @@ where
         // idx -> (attempt, watchdog deadline)
         let mut running: BTreeMap<usize, (u32, Instant)> = BTreeMap::new();
 
+        let emit = |ev: ProgressEvent| {
+            if let Some(h) = cfg.progress.as_ref() {
+                (h.0)(&ev);
+            }
+        };
+
         while done < n {
             match rx.recv_timeout(WATCHDOG_TICK) {
                 Ok(Event::Started { idx, attempt, at }) => {
+                    if attempt == 1 {
+                        emit(ProgressEvent::Started {
+                            key: shared.items[idx].key.clone(),
+                        });
+                    }
                     if let Some(t) = cfg.job_timeout {
                         running.insert(idx, (attempt, at + t));
                     }
@@ -576,15 +848,28 @@ where
                     if outcomes[idx].is_some() {
                         continue; // late result of a job already timed out
                     }
-                    if let (Ok(r), Some(j), Some(c)) =
-                        (&result, journal.as_mut(), codec.as_ref())
-                    {
-                        if let Err(e) = j.append(&shared.items[idx].key, &c.encode(r)) {
-                            eprintln!(
-                                "warning: checkpoint append failed for `{}`: {e}",
-                                shared.items[idx].key
-                            );
+                    match (&result, codec.as_ref()) {
+                        (Ok(r), Some(c)) => {
+                            let encoded = c.encode(r);
+                            if let Some(j) = journal.as_mut() {
+                                if let Err(e) = j.append(&shared.items[idx].key, &encoded) {
+                                    eprintln!(
+                                        "warning: checkpoint append failed for `{}`: {e}",
+                                        shared.items[idx].key
+                                    );
+                                }
+                            }
+                            emit(ProgressEvent::Ok {
+                                key: shared.items[idx].key.clone(),
+                                value: encoded,
+                            });
                         }
+                        (Ok(_), None) => {}
+                        (Err(e), _) => emit(ProgressEvent::Failed {
+                            key: shared.items[idx].key.clone(),
+                            kind: e.kind(),
+                            message: e.message(),
+                        }),
                     }
                     if result.is_err() {
                         failures += 1;
@@ -616,6 +901,11 @@ where
                         continue;
                     }
                     let t = cfg.job_timeout.unwrap_or(WATCHDOG_TICK);
+                    emit(ProgressEvent::Failed {
+                        key: shared.items[idx].key.clone(),
+                        kind: "timeout",
+                        message: format!("after {:.2}s", t.as_secs_f64()),
+                    });
                     outcomes[idx] = Some(JobOutcome {
                         key: shared.items[idx].key.clone(),
                         index: idx,
@@ -646,14 +936,20 @@ where
                         if outcomes[idx].is_some() {
                             continue;
                         }
+                        let msg = format!(
+                            "sweep aborted after {failures} failures (--max-failures {maxf})"
+                        );
+                        emit(ProgressEvent::Failed {
+                            key: shared.items[idx].key.clone(),
+                            kind: "aborted",
+                            message: msg.clone(),
+                        });
                         outcomes[idx] = Some(JobOutcome {
                             key: shared.items[idx].key.clone(),
                             index: idx,
                             attempts: 0,
                             from_checkpoint: false,
-                            result: Err(JobError::Aborted(format!(
-                                "sweep aborted after {failures} failures (--max-failures {maxf})"
-                            ))),
+                            result: Err(JobError::Aborted(msg)),
                         });
                         done += 1;
                     }
@@ -676,33 +972,69 @@ where
 // ---------------------------------------------------------------------
 
 /// A tiny self-contained sweep with one deliberately panicking job and
-/// one deliberately hanging job. Exercises the full engine — panic
-/// capture, watchdog timeout, checkpointing — without touching the
-/// simulator, so CI can assert partial-failure exit behavior cheaply.
-/// If no timeout is configured, a 500 ms default is applied so the hang
-/// is always caught.
+/// one deliberately hanging job — and, under process isolation, one job
+/// that aborts its whole worker process. Exercises the full engine —
+/// panic capture, timeouts, crash recovery, checkpointing — without
+/// touching the simulator, so CI can assert partial-failure exit
+/// behavior cheaply. If no timeout is configured, a 500 ms default is
+/// applied so the hang is always caught.
 pub fn smoke_sweep(cfg: &SweepConfig) -> anyhow::Result<Sweep<f64>> {
+    smoke_sweep_sized(cfg, None, 0)
+}
+
+/// The smoke sweep, optionally resized: with `points = Some(n)` the
+/// sweep becomes `n` clean jobs that each sleep `job_ms` — the shape
+/// the CI kill/resume smoke needs (a long, steadily-checkpointing run
+/// with nothing else injected). `points = None` is the canonical
+/// 8-point (thread) / 9-point (process) smoke with injected failures.
+pub fn smoke_sweep_sized(
+    cfg: &SweepConfig,
+    points: Option<usize>,
+    job_ms: u64,
+) -> anyhow::Result<Sweep<f64>> {
     let mut cfg = cfg.clone();
     let timeout = cfg.job_timeout.unwrap_or(Duration::from_millis(500));
-    cfg.job_timeout = Some(timeout);
+    let in_worker = cfg.key_filter.is_some();
+    // inside a process-mode worker the supervisor owns the (hard)
+    // timeout: leave the in-thread watchdog off so the hanging point is
+    // killed, not shed
+    cfg.job_timeout = if in_worker { None } else { Some(timeout) };
     // long enough to trip the watchdog, short enough that the detached
     // straggler thread dies quickly after the sweep completes
     let hang = (timeout * 10)
         .max(timeout + Duration::from_millis(250))
         .min(Duration::from_secs(5));
-    let jobs: Vec<Job<usize>> = (0..8)
+    let canonical = points.is_none();
+    // the aborting point only exists where a worker process can die for
+    // it: in a worker, or in a supervisor that will fork workers
+    let with_abort = canonical
+        && (in_worker || (cfg.isolation == IsolationMode::Process && cfg.task.is_some()));
+    let n = points.unwrap_or(if with_abort { 9 } else { 8 });
+    let jobs: Vec<Job<usize>> = (0..n)
         .map(|i| Job {
             key: format!("smoke-{i}"),
             input: i,
         })
         .collect();
-    let report = run_sweep(jobs, &cfg, Some(smoke_codec()), move |&i: &usize| match i {
-        3 => panic!("injected panic (smoke study)"),
-        5 => {
-            std::thread::sleep(hang);
-            Ok(i as f64)
+    let report = run_sweep(jobs, &cfg, Some(smoke_codec()), move |&i: &usize| {
+        if !canonical {
+            if job_ms > 0 {
+                std::thread::sleep(Duration::from_millis(job_ms));
+            }
+            return Ok((i * i) as f64);
         }
-        _ => Ok((i * i) as f64),
+        match i {
+            3 => panic!("injected panic (smoke study)"),
+            5 => {
+                std::thread::sleep(hang);
+                Ok(i as f64)
+            }
+            7 if with_abort => {
+                eprintln!("smoke: aborting worker process (injected)");
+                std::process::abort()
+            }
+            _ => Ok((i * i) as f64),
+        }
     })?;
     Ok(Sweep::from_report(report))
 }
@@ -794,5 +1126,148 @@ mod tests {
         let map =
             Journal::load_map(Path::new("/definitely/not/here/ciminus.jsonl")).unwrap();
         assert!(map.is_empty());
+    }
+
+    #[test]
+    fn truncated_mid_record_journal_still_resumes() {
+        let dir = std::env::temp_dir().join(format!("ciminus_torn_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.jsonl");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut j = Journal::open_append(&path).unwrap();
+            j.append("a", &Json::Num(1.0)).unwrap();
+            j.append("b", &Json::Str("héllo".into())).unwrap();
+        }
+        // SIGKILL mid-append: truncate the file at an arbitrary byte
+        // inside the final record (here: inside a multi-byte char)
+        let bytes = std::fs::read(&path).unwrap();
+        let cut = bytes.len() - 7;
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let map = Journal::load_map(&path).unwrap();
+        assert_eq!(map.len(), 1, "intact prefix survives");
+        assert_eq!(map.get("a").unwrap().as_f64(), Some(1.0));
+        assert!(!map.contains_key("b"), "torn record dropped");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_files_is_last_writer_wins_and_idempotent() {
+        let dir = std::env::temp_dir().join(format!("ciminus_merge_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let canon = dir.join("canon.jsonl");
+        let s0 = dir.join("canon.jsonl.shard-0");
+        let s1 = dir.join("canon.jsonl.shard-1");
+        for p in [&canon, &s0, &s1] {
+            std::fs::remove_file(p).ok();
+        }
+        {
+            let mut j = Journal::open_append(&canon).unwrap();
+            j.append("a", &Json::Num(1.0)).unwrap();
+        }
+        {
+            let mut j = Journal::open_append(&s0).unwrap();
+            j.append("a", &Json::Num(1.0)).unwrap(); // duplicate: skipped
+            j.append("b", &Json::Num(2.0)).unwrap();
+        }
+        {
+            let mut j = Journal::open_append(&s1).unwrap();
+            j.append("b", &Json::Num(3.0)).unwrap(); // later shard wins
+        }
+        let n = Journal::merge_files(&canon, &[s0.clone(), s1.clone()]).unwrap();
+        assert_eq!(n, 1, "only the collapsed winner `b = 3` is new");
+        let map = Journal::load_map(&canon).unwrap();
+        assert_eq!(map.get("b").unwrap().as_f64(), Some(3.0));
+        assert_eq!(map.len(), 2);
+        // merging the same shards again adds nothing
+        assert_eq!(Journal::merge_files(&canon, &[s0, s1]).unwrap(), 0);
+
+        // orphan recovery sweeps up *.shard-N files and deletes them
+        let s2 = dir.join("canon.jsonl.shard-2");
+        {
+            let mut j = Journal::open_append(&s2).unwrap();
+            j.append("c", &Json::Num(9.0)).unwrap();
+        }
+        assert_eq!(Journal::merge_orphan_shards(&canon).unwrap(), 1);
+        assert!(!s2.exists(), "orphan shard journal removed after merge");
+        assert_eq!(Journal::load_map(&canon).unwrap().len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn key_filter_runs_only_assigned_jobs() {
+        use std::sync::atomic::AtomicUsize;
+        let mut cfg = SweepConfig::with_threads(2);
+        cfg.key_filter = Some(["j0".to_string(), "j2".to_string()].into_iter().collect());
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let r = run_sweep(jobs_of(4), &cfg, None::<Codec<f64>>, move |&i: &usize| {
+            c.fetch_add(1, Ordering::Relaxed);
+            Ok(i as f64)
+        })
+        .unwrap();
+        assert_eq!(calls.load(Ordering::Relaxed), 2);
+        assert!(r.outcomes[0].result.is_ok());
+        assert!(r.outcomes[2].result.is_ok());
+        for idx in [1, 3] {
+            match &r.outcomes[idx].result {
+                Err(e) => assert_eq!(e.kind(), "aborted"),
+                Ok(_) => panic!("job {idx} should have been filtered out"),
+            }
+        }
+    }
+
+    #[test]
+    fn crashed_error_shape() {
+        let e = JobError::Crashed { signal: 9, shard: 2 };
+        assert_eq!(e.kind(), "crashed");
+        assert_eq!(e.to_string(), "crashed: worker for shard 2 killed by signal 9");
+        let e0 = JobError::Crashed { signal: 0, shard: 1 };
+        assert!(e0.to_string().contains("exited abnormally"));
+        let s = summary_line(
+            1,
+            &[SweepFailure {
+                key: "x".into(),
+                error: e,
+            }],
+            0,
+        );
+        assert_eq!(s, "1 ok / 1 failed (1 crashed)");
+    }
+
+    #[test]
+    fn sized_smoke_is_clean() {
+        let sweep = smoke_sweep_sized(&SweepConfig::with_threads(2), Some(5), 0).unwrap();
+        assert_eq!(sweep.total, 5);
+        assert_eq!(sweep.points.len(), 5);
+        assert!(sweep.failures.is_empty());
+    }
+
+    #[test]
+    fn progress_hook_sees_every_terminal_event() {
+        use std::sync::atomic::AtomicUsize;
+        let ok = Arc::new(AtomicUsize::new(0));
+        let failed = Arc::new(AtomicUsize::new(0));
+        let (ok2, failed2) = (Arc::clone(&ok), Arc::clone(&failed));
+        let mut cfg = SweepConfig::with_threads(2);
+        cfg.progress = Some(ProgressHook(Arc::new(move |ev: &ProgressEvent| match ev {
+            ProgressEvent::Ok { .. } => {
+                ok2.fetch_add(1, Ordering::Relaxed);
+            }
+            ProgressEvent::Failed { .. } => {
+                failed2.fetch_add(1, Ordering::Relaxed);
+            }
+            ProgressEvent::Started { .. } => {}
+        })));
+        let r = run_sweep(jobs_of(4), &cfg, Some(num_codec()), |&i: &usize| {
+            if i == 1 {
+                anyhow::bail!("boom");
+            }
+            Ok(i as f64)
+        })
+        .unwrap();
+        assert_eq!(r.n_ok(), 3);
+        assert_eq!(ok.load(Ordering::Relaxed), 3);
+        assert_eq!(failed.load(Ordering::Relaxed), 1);
     }
 }

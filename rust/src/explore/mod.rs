@@ -14,8 +14,10 @@ pub mod mapping_study;
 pub mod search;
 pub mod sparsity_study;
 pub mod sweep;
+pub mod worker;
 
 pub use executor::{
-    run_sweep, Codec, Job, JobError, JobOutcome, Sweep, SweepConfig, SweepFailure, SweepReport,
+    run_sweep, Codec, IsolationMode, Job, JobError, JobOutcome, ProgressEvent, ProgressHook,
+    Sweep, SweepConfig, SweepFailure, SweepReport, TaskSpec,
 };
 pub use sweep::{parallel_map, try_parallel_map};

@@ -1,0 +1,859 @@
+//! Process-level shard workers for `--isolation=process` sweeps.
+//!
+//! The in-thread engine (`explore::executor`) survives panics, but a
+//! job that calls `abort()`, gets OOM-killed, or segfaults (e.g. inside
+//! the optional PJRT runtime) still takes the whole sweep down, and a
+//! truly hung job can only be shed, never stopped. This module trades a
+//! process boundary for both problems:
+//!
+//! * [`supervise`] partitions the pending job queue into shards and
+//!   forks one worker process per shard by re-exec'ing the `ciminus`
+//!   binary in the hidden `__worker` mode;
+//! * each worker re-builds the study's job list from a [`TaskSpec`]
+//!   header frame, runs only its assigned keys in-thread, checkpoints
+//!   to a per-shard journal, and streams per-job result frames
+//!   (length-prefixed JSON) back over its stdout pipe;
+//! * the shard manager enforces the configured `job_timeout` as a
+//!   **hard** timeout — the worker is killed and respawned with the
+//!   remaining keys — and turns abnormal worker deaths into structured
+//!   [`JobError::Crashed`] failures for exactly the in-flight job;
+//! * at end of run the shard journals are merged into the canonical
+//!   checkpoint journal (last-writer-wins), so `--resume` works the
+//!   same in both isolation modes, and even a SIGKILL'd supervisor
+//!   leaves mergeable shard journals behind.
+//!
+//! Workers that outlive a killed supervisor notice re-parenting (ppid
+//! becomes 1) at their next progress event and exit instead of burning
+//! CPU on a sweep nobody will collect.
+
+use super::executor::{
+    lock, Codec, IsolationMode, JobError, JobOutcome, Journal, ProgressEvent, ProgressHook,
+    SweepConfig, SweepReport, TaskSpec,
+};
+use crate::eval::EvalCtx;
+use crate::sim::engine::SimOptions;
+use crate::util::json::Json;
+use crate::workload::{graph::Network, zoo};
+use anyhow::Context;
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{BufReader, Read, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Upper bound on a single protocol frame; a length prefix beyond this
+/// means the stream is corrupt, not that a result is this large.
+const MAX_FRAME: usize = 64 << 20;
+
+/// Manager poll granularity for hard-timeout checks.
+const SHARD_TICK: Duration = Duration::from_millis(25);
+
+/// Consecutive worker spawns that die without resolving a single job
+/// before the manager gives up on the shard.
+const MAX_BARREN_SPAWNS: u32 = 2;
+
+// ---------------------------------------------------------------------
+// frame protocol
+// ---------------------------------------------------------------------
+
+/// Write one `u32`-length-prefixed (little-endian) JSON frame.
+pub(crate) fn write_frame<W: Write>(w: &mut W, frame: &Json) -> std::io::Result<()> {
+    let bytes = frame.to_string().into_bytes();
+    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    w.write_all(&bytes)?;
+    w.flush()
+}
+
+/// Read one frame. `Ok(None)` is a clean EOF at a frame boundary; a
+/// torn header/body (stream killed mid-write) or an over-long length
+/// prefix is an error.
+pub(crate) fn read_frame<R: Read>(r: &mut R) -> anyhow::Result<Option<Json>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => anyhow::bail!("torn frame header ({got} of 4 length bytes)"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    anyhow::ensure!(len <= MAX_FRAME, "frame length {len} exceeds {MAX_FRAME}");
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)
+        .map_err(|e| anyhow::anyhow!("torn frame body: {e}"))?;
+    let text = std::str::from_utf8(&buf)
+        .map_err(|e| anyhow::anyhow!("frame is not UTF-8: {e}"))?;
+    let frame = Json::parse(text).map_err(|e| anyhow::anyhow!("frame parse error: {e}"))?;
+    Ok(Some(frame))
+}
+
+// ---------------------------------------------------------------------
+// platform shims
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+fn exit_signal(status: &std::process::ExitStatus) -> Option<i32> {
+    use std::os::unix::process::ExitStatusExt;
+    status.signal()
+}
+
+#[cfg(not(unix))]
+fn exit_signal(_status: &std::process::ExitStatus) -> Option<i32> {
+    None
+}
+
+/// True when this worker's supervisor is gone and init adopted us.
+#[cfg(unix)]
+fn orphaned() -> bool {
+    std::os::unix::process::parent_id() == 1
+}
+
+#[cfg(not(unix))]
+fn orphaned() -> bool {
+    false
+}
+
+// ---------------------------------------------------------------------
+// supervisor side
+// ---------------------------------------------------------------------
+
+enum RawResult {
+    Ok(Json),
+    Err(JobError),
+}
+
+/// Results and failure accounting shared by all shard managers. Raw
+/// (still-encoded) results are kept here because `Codec` closures are
+/// not `Send`; the main thread decodes after the managers join.
+struct ShardState {
+    results: Mutex<Vec<Option<RawResult>>>,
+    failures: AtomicUsize,
+    abort: AtomicBool,
+    max_failures: Option<usize>,
+}
+
+impl ShardState {
+    fn record(&self, idx: usize, r: RawResult) {
+        let mut slots = lock(&self.results);
+        if slots[idx].is_some() {
+            return; // first writer wins (e.g. late frame after a kill)
+        }
+        let is_err = matches!(r, RawResult::Err(_));
+        slots[idx] = Some(r);
+        drop(slots);
+        if is_err {
+            let f = self.failures.fetch_add(1, Ordering::Relaxed) + 1;
+            if let Some(maxf) = self.max_failures {
+                if f >= maxf {
+                    self.abort.store(true, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+fn shard_count(requested: usize, n_pending: usize) -> usize {
+    let want = if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(4)
+    } else {
+        requested
+    };
+    want.clamp(1, n_pending.max(1))
+}
+
+fn header_for(task: &TaskSpec, cfg: &SweepConfig, shard: usize, journal: &Path) -> Json {
+    let mut h = Json::obj();
+    h.set("task", Json::Str(task.name.clone()));
+    h.set("params", task.params.clone());
+    h.set("shard", Json::Num(shard as f64));
+    h.set("journal", Json::Str(journal.display().to_string()));
+    h.set("retries", Json::Num(cfg.max_retries as f64));
+    h.set("backoff_ms", Json::Num(cfg.retry_backoff.as_millis() as f64));
+    h.set(
+        "backoff_cap_ms",
+        Json::Num(cfg.backoff_cap.as_millis() as f64),
+    );
+    h
+}
+
+/// Run the pending jobs of a sweep in per-shard worker processes and
+/// assemble the full report. Called by `run_sweep` once resume replay
+/// has filled `outcomes` for already-completed keys.
+pub(crate) fn supervise<R>(
+    keys: Vec<String>,
+    mut outcomes: Vec<Option<JobOutcome<R>>>,
+    cfg: &SweepConfig,
+    codec: &Codec<R>,
+    task: &TaskSpec,
+) -> anyhow::Result<SweepReport<R>> {
+    let n = keys.len();
+    let pending: Vec<usize> = (0..n).filter(|&i| outcomes[i].is_none()).collect();
+    if pending.is_empty() {
+        let outcomes = outcomes
+            .into_iter()
+            .map(|o| o.expect("every job has an outcome"))
+            .collect();
+        return Ok(SweepReport { outcomes });
+    }
+    let exe =
+        std::env::current_exe().context("locating the ciminus binary for worker re-exec")?;
+
+    let nshards = shard_count(cfg.shards, pending.len());
+    // round-robin partition keeps shards balanced even when expensive
+    // jobs cluster at one end of the queue
+    let mut partitions: Vec<Vec<(usize, String)>> = vec![Vec::new(); nshards];
+    for (pos, &idx) in pending.iter().enumerate() {
+        partitions[pos % nshards].push((idx, keys[idx].clone()));
+    }
+
+    // shard journals live next to the canonical journal — a killed
+    // supervisor leaves them behind for `--resume` to fold in — or in a
+    // temp dir for checkpoint-less sweeps
+    let (journal_base, temp_dir) = match cfg.checkpoint.as_ref() {
+        Some(p) => (p.clone(), None),
+        None => {
+            let dir =
+                std::env::temp_dir().join(format!("ciminus-shards-{}", std::process::id()));
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+            (dir.join("sweep.jsonl"), Some(dir))
+        }
+    };
+    let shard_paths: Vec<PathBuf> = (0..nshards)
+        .map(|i| PathBuf::from(format!("{}.shard-{i}", journal_base.display())))
+        .collect();
+
+    let state = Arc::new(ShardState {
+        results: Mutex::new((0..n).map(|_| None).collect()),
+        failures: AtomicUsize::new(0),
+        abort: AtomicBool::new(false),
+        max_failures: cfg.max_failures,
+    });
+
+    let mut managers = Vec::new();
+    for (shard_id, assigned) in partitions.into_iter().enumerate() {
+        if assigned.is_empty() {
+            continue;
+        }
+        let st = Arc::clone(&state);
+        let header = header_for(task, cfg, shard_id, &shard_paths[shard_id]);
+        let exe = exe.clone();
+        let hard = cfg.job_timeout;
+        let m = std::thread::Builder::new()
+            .name(format!("ciminus-shard-{shard_id}"))
+            .spawn(move || run_shard(shard_id, assigned, st, exe, header, hard))
+            .map_err(|e| anyhow::anyhow!("spawning shard manager {shard_id}: {e}"))?;
+        managers.push(m);
+    }
+    for m in managers {
+        let _ = m.join();
+    }
+
+    // fold the shard journals into the canonical journal so a plain
+    // `--resume` (and thread-mode runs) see one coherent checkpoint
+    if cfg.checkpoint.is_some() {
+        match Journal::merge_files(&journal_base, &shard_paths) {
+            Ok(_) => {
+                for p in &shard_paths {
+                    let _ = std::fs::remove_file(p);
+                }
+            }
+            Err(e) => {
+                eprintln!("warning: shard journal merge failed (shard files kept): {e}")
+            }
+        }
+    } else {
+        for p in &shard_paths {
+            let _ = std::fs::remove_file(p);
+        }
+        if let Some(dir) = temp_dir {
+            let _ = std::fs::remove_file(&journal_base);
+            let _ = std::fs::remove_dir(&dir);
+        }
+    }
+
+    // decode on the main thread (codecs are not Send)
+    let mut slots = lock(&state.results);
+    for (i, slot) in slots.iter_mut().enumerate() {
+        if outcomes[i].is_some() {
+            continue;
+        }
+        let (attempts, result) = match slot.take() {
+            Some(RawResult::Ok(v)) => match codec.decode(&v) {
+                Ok(r) => (1, Ok(r)),
+                Err(e) => (
+                    1,
+                    Err(JobError::Failed(format!("decoding worker result: {e:#}"))),
+                ),
+            },
+            Some(RawResult::Err(e)) => (1, Err(e)),
+            None => (
+                0,
+                Err(JobError::Aborted("no worker produced this point".into())),
+            ),
+        };
+        outcomes[i] = Some(JobOutcome {
+            key: keys[i].clone(),
+            index: i,
+            attempts,
+            from_checkpoint: false,
+            result,
+        });
+    }
+    drop(slots);
+
+    let outcomes = outcomes
+        .into_iter()
+        .map(|o| o.expect("every job has an outcome"))
+        .collect();
+    Ok(SweepReport { outcomes })
+}
+
+enum ShardMsg {
+    Frame(Json),
+    Eof,
+}
+
+/// Own one shard: spawn a worker over the unresolved keys, relay its
+/// frames into results, kill it on hard timeout or crash, and respawn
+/// until the shard is drained or hopeless.
+fn run_shard(
+    shard: usize,
+    assigned: Vec<(usize, String)>,
+    state: Arc<ShardState>,
+    exe: PathBuf,
+    header_base: Json,
+    hard_timeout: Option<Duration>,
+) {
+    let key_to_idx: BTreeMap<&str, usize> =
+        assigned.iter().map(|(i, k)| (k.as_str(), *i)).collect();
+    let mut resolved: BTreeSet<usize> = BTreeSet::new();
+    let mut barren = 0u32;
+    let mut last_signal = 0i32;
+    loop {
+        if state.abort.load(Ordering::Relaxed) {
+            break;
+        }
+        let remaining: Vec<(usize, String)> = assigned
+            .iter()
+            .filter(|(i, _)| !resolved.contains(i))
+            .cloned()
+            .collect();
+        if remaining.is_empty() {
+            break;
+        }
+        let mut header = header_base.clone();
+        header.set(
+            "keys",
+            Json::Arr(remaining.iter().map(|(_, k)| Json::Str(k.clone())).collect()),
+        );
+        let mut child = match Command::new(&exe)
+            .arg("__worker")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+        {
+            Ok(c) => c,
+            Err(e) => {
+                for (i, _) in &remaining {
+                    state.record(
+                        *i,
+                        RawResult::Err(JobError::Failed(format!("spawning worker: {e}"))),
+                    );
+                    resolved.insert(*i);
+                }
+                break;
+            }
+        };
+        if let Some(mut stdin) = child.stdin.take() {
+            // a write failure means the worker died instantly; the
+            // event loop below sees EOF and handles it as a crash
+            let _ = write_frame(&mut stdin, &header);
+        }
+        let stdout = match child.stdout.take() {
+            Some(s) => s,
+            None => {
+                let _ = child.kill();
+                let _ = child.wait();
+                for (i, _) in &remaining {
+                    state.record(
+                        *i,
+                        RawResult::Err(JobError::Failed("worker stdout unavailable".into())),
+                    );
+                    resolved.insert(*i);
+                }
+                break;
+            }
+        };
+        let (tx, rx) = mpsc::channel::<ShardMsg>();
+        let reader = std::thread::spawn(move || {
+            let mut r = BufReader::new(stdout);
+            loop {
+                match read_frame(&mut r) {
+                    Ok(Some(frame)) => {
+                        if tx.send(ShardMsg::Frame(frame)).is_err() {
+                            return;
+                        }
+                    }
+                    // clean EOF, or a frame torn by a kill: either way
+                    // this worker's stream is over
+                    _ => {
+                        let _ = tx.send(ShardMsg::Eof);
+                        return;
+                    }
+                }
+            }
+        });
+
+        let mut in_flight: Option<(usize, Option<Instant>)> = None;
+        let mut progressed = false;
+        let mut got_done = false;
+        let mut killed_by_us = false;
+        loop {
+            match rx.recv_timeout(SHARD_TICK) {
+                Ok(ShardMsg::Frame(frame)) => {
+                    let idx_of = |f: &Json| -> Option<usize> {
+                        f.get("key")
+                            .and_then(|k| k.as_str())
+                            .and_then(|k| key_to_idx.get(k).copied())
+                    };
+                    match frame.opt_str("ev", "") {
+                        "start" => {
+                            if let Some(idx) = idx_of(&frame) {
+                                in_flight =
+                                    Some((idx, hard_timeout.map(|t| Instant::now() + t)));
+                            }
+                        }
+                        "ok" => {
+                            if let Some(idx) = idx_of(&frame) {
+                                let val = frame.get("val").cloned().unwrap_or(Json::Null);
+                                state.record(idx, RawResult::Ok(val));
+                                resolved.insert(idx);
+                                progressed = true;
+                            }
+                            in_flight = None;
+                        }
+                        "err" => {
+                            if let Some(idx) = idx_of(&frame) {
+                                let msg = frame.opt_str("msg", "").to_string();
+                                let err = match frame.opt_str("kind", "error") {
+                                    "panic" => JobError::Panic(msg),
+                                    "aborted" => JobError::Aborted(msg),
+                                    "timeout" => JobError::Timeout(
+                                        hard_timeout.unwrap_or(Duration::ZERO),
+                                    ),
+                                    _ => JobError::Failed(msg),
+                                };
+                                state.record(idx, RawResult::Err(err));
+                                resolved.insert(idx);
+                                progressed = true;
+                            }
+                            in_flight = None;
+                        }
+                        "done" => got_done = true,
+                        "fatal" => {
+                            // the worker could not even build the job
+                            // list (bad task/model spec): fail the
+                            // whole shard, respawning cannot help
+                            let msg = frame.opt_str("msg", "worker failed").to_string();
+                            let left: Vec<usize> = assigned
+                                .iter()
+                                .map(|(i, _)| *i)
+                                .filter(|i| !resolved.contains(i))
+                                .collect();
+                            for i in left {
+                                state.record(
+                                    i,
+                                    RawResult::Err(JobError::Failed(format!(
+                                        "worker for shard {shard}: {msg}"
+                                    ))),
+                                );
+                                resolved.insert(i);
+                            }
+                            progressed = true;
+                        }
+                        _ => {}
+                    }
+                }
+                Ok(ShardMsg::Eof) | Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if state.abort.load(Ordering::Relaxed) && !killed_by_us {
+                        let _ = child.kill();
+                        killed_by_us = true;
+                    }
+                    if let Some((idx, Some(deadline))) = in_flight {
+                        if Instant::now() >= deadline {
+                            // hard timeout: kill the worker process; a
+                            // respawn picks up the rest of the shard
+                            let _ = child.kill();
+                            killed_by_us = true;
+                            state.record(
+                                idx,
+                                RawResult::Err(JobError::Timeout(
+                                    hard_timeout.unwrap_or(Duration::ZERO),
+                                )),
+                            );
+                            resolved.insert(idx);
+                            progressed = true;
+                            in_flight = None;
+                        }
+                    }
+                }
+            }
+        }
+        let status = child.wait();
+        let _ = reader.join();
+
+        if got_done {
+            // a worker that said `done` but skipped assigned keys has
+            // an inconsistent job list — an engine bug, not transient
+            let left: Vec<(usize, String)> = assigned
+                .iter()
+                .filter(|(i, _)| !resolved.contains(i))
+                .cloned()
+                .collect();
+            for (i, k) in left {
+                state.record(
+                    i,
+                    RawResult::Err(JobError::Failed(format!(
+                        "worker for shard {shard} completed without reporting `{k}`"
+                    ))),
+                );
+                resolved.insert(i);
+            }
+            break;
+        }
+        if !killed_by_us {
+            // abnormal worker death: attribute it to the in-flight job
+            let signal = status.ok().and_then(|s| exit_signal(&s)).unwrap_or(0);
+            last_signal = signal;
+            if let Some((idx, _)) = in_flight.take() {
+                if !resolved.contains(&idx) {
+                    state.record(idx, RawResult::Err(JobError::Crashed { signal, shard }));
+                    resolved.insert(idx);
+                    progressed = true;
+                }
+            }
+        }
+        if state.abort.load(Ordering::Relaxed) {
+            break;
+        }
+        if progressed {
+            barren = 0;
+        } else {
+            barren += 1;
+        }
+        if barren >= MAX_BARREN_SPAWNS {
+            // repeated spawns died before resolving anything (e.g. a
+            // crash during job-list construction): stop burning
+            // processes and fail what is left of the shard
+            let left: Vec<usize> = assigned
+                .iter()
+                .map(|(i, _)| *i)
+                .filter(|i| !resolved.contains(i))
+                .collect();
+            for i in left {
+                state.record(
+                    i,
+                    RawResult::Err(JobError::Crashed {
+                        signal: last_signal,
+                        shard,
+                    }),
+                );
+                resolved.insert(i);
+            }
+            break;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------
+
+fn emit_frame(frame: &Json) {
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    let _ = write_frame(&mut out, frame);
+}
+
+/// Progress hook that streams per-job frames to the supervisor and
+/// exits if the supervisor is gone.
+fn stdout_sink() -> ProgressHook {
+    ProgressHook(Arc::new(|ev: &ProgressEvent| {
+        if orphaned() {
+            std::process::exit(17);
+        }
+        let mut f = Json::obj();
+        match ev {
+            ProgressEvent::Started { key } => {
+                f.set("ev", Json::Str("start".into()));
+                f.set("key", Json::Str(key.clone()));
+            }
+            ProgressEvent::Ok { key, value } => {
+                f.set("ev", Json::Str("ok".into()));
+                f.set("key", Json::Str(key.clone()));
+                f.set("val", value.clone());
+            }
+            ProgressEvent::Failed { key, kind, message } => {
+                f.set("ev", Json::Str("err".into()));
+                f.set("key", Json::Str(key.clone()));
+                f.set("kind", Json::Str((*kind).to_string()));
+                f.set("msg", Json::Str(message.clone()));
+            }
+        }
+        emit_frame(&f);
+    }))
+}
+
+/// Entry point for the hidden `ciminus __worker` mode: read the header
+/// frame from stdin, re-build the study's job list, run only the
+/// assigned keys in-thread (checkpointing to the shard journal and
+/// streaming result frames on stdout), then report `done`. Returns the
+/// process exit code.
+pub fn worker_main() -> anyhow::Result<i32> {
+    let header = {
+        let stdin = std::io::stdin();
+        let mut input = stdin.lock();
+        match read_frame(&mut input)? {
+            Some(h) => h,
+            None => anyhow::bail!("worker started without a header frame"),
+        }
+    };
+    let task = header.req_str("task")?.to_string();
+    let params = header.get("params").cloned().unwrap_or_else(Json::obj);
+    let journal = PathBuf::from(header.req_str("journal")?);
+    let keys: BTreeSet<String> = header
+        .req_arr("keys")?
+        .iter()
+        .filter_map(|k| k.as_str().map(str::to_string))
+        .collect();
+    let cfg = SweepConfig {
+        // one in-flight job per worker keeps hard-timeout and crash
+        // attribution unambiguous; parallelism comes from --shards
+        threads: 1,
+        // the supervisor enforces the (hard) timeout by killing us
+        job_timeout: None,
+        max_retries: header.opt_usize("retries", 0) as u32,
+        retry_backoff: Duration::from_millis(header.opt_usize("backoff_ms", 50) as u64),
+        backoff_cap: Duration::from_millis(header.opt_usize("backoff_cap_ms", 2000) as u64),
+        max_failures: None,
+        checkpoint: Some(journal),
+        resume: false,
+        isolation: IsolationMode::Thread,
+        shards: 0,
+        task: None,
+        key_filter: Some(keys),
+        progress: Some(stdout_sink()),
+    };
+    match dispatch(&task, &params, &cfg) {
+        Ok(()) => {
+            let mut f = Json::obj();
+            f.set("ev", Json::Str("done".into()));
+            emit_frame(&f);
+            Ok(0)
+        }
+        Err(e) => {
+            let mut f = Json::obj();
+            f.set("ev", Json::Str("fatal".into()));
+            f.set("msg", Json::Str(format!("{e:#}")));
+            emit_frame(&f);
+            Ok(1)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// task registry
+// ---------------------------------------------------------------------
+
+fn ectx_of(p: &Json) -> EvalCtx {
+    let mut sim = SimOptions::default();
+    if let Some(t) = p.get("postproc").and_then(|v| v.as_usize()) {
+        if t > 0 {
+            sim.postproc_throughput = t;
+        }
+    }
+    EvalCtx::new(sim)
+}
+
+fn f64s(p: &Json, key: &str, default: &[f64]) -> Vec<f64> {
+    p.get(key)
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn trio() -> (Network, Network, Network) {
+    (
+        zoo::resnet50(32, 100),
+        zoo::vgg16(32, 100),
+        zoo::mobilenetv2(32, 100),
+    )
+}
+
+/// Re-run the named study sub-sweep under the worker's configuration.
+/// Every sub-sweep the CLI can launch in process mode has an entry
+/// here; the job *keys* double as the contract between both sides, so
+/// a worker rebuilds exactly the job list the supervisor partitioned.
+fn dispatch(task: &str, p: &Json, cfg: &SweepConfig) -> anyhow::Result<()> {
+    use super::{
+        ablation_study, executor, fault_study, input_study, mapping_study, search,
+        sparsity_study,
+    };
+    use crate::cli::{load_arch, load_net};
+    match task {
+        "smoke" => {
+            let points = p.get("points").and_then(|v| v.as_usize());
+            let job_ms = p.opt_usize("job_ms", 0) as u64;
+            executor::smoke_sweep_sized(cfg, points, job_ms)?;
+        }
+        "fig8" => {
+            let net = load_net(p.opt_str("model", "resnet50"))?;
+            let ratios = f64s(p, "ratios", &sparsity_study::RATIOS);
+            sparsity_study::run_fig8_robust(&net, &ratios, &ectx_of(p), cfg)?;
+        }
+        "fig9a" => {
+            let net = load_net(p.opt_str("model", "resnet50"))?;
+            sparsity_study::run_fig9a_robust(&net, &ectx_of(p), cfg)?;
+        }
+        "fig9b" => {
+            let (r50, v16, mb) = trio();
+            sparsity_study::run_fig9b_robust(&[&r50, &v16, &mb], &ectx_of(p), cfg)?;
+        }
+        "fig10-dense" => {
+            let (r50, v16, mb) = trio();
+            let zero_frac = p.opt_f64("zero_frac", 0.55);
+            input_study::run_dense_models_robust(&[&r50, &v16, &mb], zero_frac, &ectx_of(p), cfg)?;
+        }
+        "fig10-pattern" => {
+            let net = load_net(p.opt_str("model", "resnet50"))?;
+            input_study::run_weight_patterns_robust(&net, &ectx_of(p), cfg)?;
+        }
+        "fig10-ratio" => {
+            let net = load_net(p.opt_str("model", "resnet50"))?;
+            let ratios = f64s(p, "ratios", &[0.5, 0.6, 0.7, 0.8, 0.9]);
+            input_study::run_ratio_sweep_robust(&net, &ratios, &ectx_of(p), cfg)?;
+        }
+        "fig11" => {
+            let r50 = zoo::resnet50(32, 100);
+            let v16 = zoo::vgg16(32, 100);
+            mapping_study::run_fig11_robust(&[&r50, &v16], &ectx_of(p), cfg)?;
+        }
+        "fig12" => {
+            let net = load_net(p.opt_str("model", "resnet50"))?;
+            mapping_study::run_fig12_robust(&net, &ectx_of(p), cfg)?;
+        }
+        "ablation" => {
+            let net = load_net(p.opt_str("model", "resnet_mini"))?;
+            ablation_study::run_all_robust(&net, &ectx_of(p), cfg)?;
+        }
+        "faults" => {
+            let arch = load_arch(p.req_str("arch")?)?;
+            let net = load_net(p.opt_str("model", "resnet_mini"))?;
+            let fb = crate::cli::pattern::parse_pattern(
+                p.opt_str("pattern", "dense"),
+                p.opt_f64("ratio", 0.8),
+            )?;
+            let rates = f64s(p, "rates", &fault_study::DEFAULT_RATES);
+            let spatial =
+                crate::hw::faults::FaultSpatial::parse(p.opt_str("spatial", "uniform"))?;
+            let seed = p.opt_usize("seed", 0xC1A0) as u64;
+            let fb_opt = (!fb.is_dense()).then_some(&fb);
+            fault_study::run_resilience_robust(
+                &arch,
+                &net,
+                fb_opt,
+                &rates,
+                spatial,
+                seed,
+                &ectx_of(p),
+                cfg,
+            )?;
+        }
+        "search" => {
+            let net = load_net(p.opt_str("model", "resnet50"))?;
+            let n_macros = p.opt_usize("macros", 16);
+            let cons = search::Constraints {
+                max_sparsity: p.get("max_sparsity").and_then(|v| v.as_f64()),
+                min_utilization: p.get("min_util").and_then(|v| v.as_f64()),
+            };
+            let ratios = f64s(p, "ratios", &[0.5, 0.7, 0.8, 0.9]);
+            search::search_robust(&net, n_macros, &ratios, cons, &ectx_of(p), cfg)?;
+        }
+        other => anyhow::bail!("unknown worker task `{other}`"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut frame = Json::obj();
+        frame.set("ev", Json::Str("ok".into()));
+        frame.set("key", Json::Str("smoke-0".into()));
+        frame.set("val", Json::Num(42.0));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let mut second = Json::obj();
+        second.set("ev", Json::Str("done".into()));
+        write_frame(&mut buf, &second).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        let a = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(a.opt_str("ev", ""), "ok");
+        assert_eq!(a.get("val").and_then(|v| v.as_f64()), Some(42.0));
+        let b = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(b.opt_str("ev", ""), "done");
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn torn_frame_is_an_error() {
+        let mut frame = Json::obj();
+        frame.set("ev", Json::Str("ok".into()));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        buf.truncate(buf.len() - 3); // killed mid-write
+        let mut r = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut r = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn shard_count_bounds() {
+        assert_eq!(shard_count(3, 100), 3);
+        assert_eq!(shard_count(8, 2), 2, "never more shards than jobs");
+        assert_eq!(shard_count(0, 0), 1);
+        assert!(shard_count(0, 100) >= 1);
+    }
+
+    #[test]
+    fn header_carries_task_identity() {
+        let task = TaskSpec::new("smoke", Json::obj());
+        let cfg = SweepConfig::default();
+        let h = header_for(&task, &cfg, 3, Path::new("/tmp/x.jsonl.shard-3"));
+        assert_eq!(h.opt_str("task", ""), "smoke");
+        assert_eq!(h.opt_usize("shard", 99), 3);
+        assert_eq!(h.opt_str("journal", ""), "/tmp/x.jsonl.shard-3");
+    }
+}

@@ -81,6 +81,12 @@ pub struct FaultModel {
     pub dead_column_rate: f64,
     /// Probability that an entire macro is fused off.
     pub dead_macro_rate: f64,
+    /// Per-macro spare-row repair budget: up to this many quarantined
+    /// rows are remapped onto spares instead of shrinking the usable
+    /// geometry. Repaired rows cost repair-write traffic, not capacity.
+    pub spare_rows: usize,
+    /// Per-macro spare-column repair budget (same semantics).
+    pub spare_cols: usize,
 }
 
 impl FaultModel {
@@ -92,6 +98,8 @@ impl FaultModel {
             spatial: FaultSpatial::Uniform,
             dead_column_rate: 0.0,
             dead_macro_rate: 0.0,
+            spare_rows: 0,
+            spare_cols: 0,
         }
     }
 
@@ -105,7 +113,16 @@ impl FaultModel {
             spatial,
             dead_column_rate: rate / 4.0,
             dead_macro_rate: rate / 8.0,
+            spare_rows: 0,
+            spare_cols: 0,
         }
+    }
+
+    /// The same model with per-macro spare-row/column repair budgets.
+    pub fn with_spares(mut self, spare_rows: usize, spare_cols: usize) -> FaultModel {
+        self.spare_rows = spare_rows;
+        self.spare_cols = spare_cols;
+        self
     }
 
     pub fn is_zero(&self) -> bool {
@@ -133,6 +150,8 @@ impl FaultModel {
             spatial: FaultSpatial::parse(j.opt_str("spatial", "uniform"))?,
             dead_column_rate: j.opt_f64("dead_column_rate", 0.0),
             dead_macro_rate: j.opt_f64("dead_macro_rate", 0.0),
+            spare_rows: j.opt_usize("spare_rows", 0),
+            spare_cols: j.opt_usize("spare_cols", 0),
         };
         fm.validate()?;
         Ok(fm)
@@ -144,7 +163,9 @@ impl FaultModel {
             .set("stuck_cell_rate", Json::Num(self.stuck_cell_rate))
             .set("spatial", Json::Str(self.spatial.label().into()))
             .set("dead_column_rate", Json::Num(self.dead_column_rate))
-            .set("dead_macro_rate", Json::Num(self.dead_macro_rate));
+            .set("dead_macro_rate", Json::Num(self.dead_macro_rate))
+            .set("spare_rows", Json::Num(self.spare_rows as f64))
+            .set("spare_cols", Json::Num(self.spare_cols as f64));
         j
     }
 
@@ -203,10 +224,25 @@ impl FaultModel {
                     }
                 }
             }
+            let lost_rows = lost_rows.min(cim.rows);
+            let lost_cols = lost_cols.min(cim.cols);
+            // spares repair damage up to the budget (applied after all
+            // draws, so the draw order — and thus monotonicity in each
+            // rate — is unchanged); a fused-off macro is beyond repair
+            let (repaired_rows, repaired_cols) = if dead {
+                (0, 0)
+            } else {
+                (
+                    lost_rows.min(self.spare_rows),
+                    lost_cols.min(self.spare_cols),
+                )
+            };
             macros.push(MacroHealth {
                 dead,
-                lost_rows: lost_rows.min(cim.rows),
-                lost_cols: lost_cols.min(cim.cols),
+                lost_rows: lost_rows - repaired_rows,
+                lost_cols: lost_cols - repaired_cols,
+                repaired_rows,
+                repaired_cols,
             });
         }
         FaultMap {
@@ -230,15 +266,31 @@ impl Default for FaultModel {
 pub struct MacroHealth {
     /// Whole macro fused off.
     pub dead: bool,
-    /// Rows quarantined by stuck cells (spare-row repair granularity).
+    /// Rows quarantined by stuck cells after spare-row repair
+    /// (spare-row repair granularity).
     pub lost_rows: usize,
-    /// Columns lost to dead ADC/mux paths or column-correlated faults.
+    /// Columns lost to dead ADC/mux paths or column-correlated faults,
+    /// after spare-column repair.
     pub lost_cols: usize,
+    /// Rows remapped onto spares — full geometry kept, but the row's
+    /// weights must be rewritten (repair traffic).
+    pub repaired_rows: usize,
+    /// Columns remapped onto spares (same semantics).
+    pub repaired_cols: usize,
 }
 
 impl MacroHealth {
+    /// No *residual* damage: the usable geometry is the full geometry.
+    /// Repaired rows/columns do not make a macro unhealthy — they cost
+    /// repair writes, not capacity (see [`FaultMap::has_repairs`]).
     pub fn is_healthy(&self) -> bool {
         !self.dead && self.lost_rows == 0 && self.lost_cols == 0
+    }
+
+    /// Cells rewritten onto spare resources for a macro of the given
+    /// full geometry; row/column overlap is counted once.
+    pub fn repaired_cells(&self, rows: usize, cols: usize) -> usize {
+        self.repaired_rows * cols + self.repaired_cols * rows.saturating_sub(self.repaired_rows)
     }
 }
 
@@ -255,9 +307,34 @@ pub struct FaultMap {
 
 impl FaultMap {
     /// No faults at all — guaranteed bit-identical behavior to the
-    /// fault-free path.
+    /// fault-free path. A map whose damage was fully repaired by spares
+    /// is *clean* geometrically but still carries repair traffic; check
+    /// [`FaultMap::has_repairs`] for that.
     pub fn is_clean(&self) -> bool {
         self.macros.iter().all(|h| h.is_healthy())
+    }
+
+    /// Any spare-row/column repairs anywhere on the chip.
+    pub fn has_repairs(&self) -> bool {
+        self.macros
+            .iter()
+            .any(|h| h.repaired_rows > 0 || h.repaired_cols > 0)
+    }
+
+    /// Fraction of total weight capacity remapped onto spare rows and
+    /// columns — data that must be rewritten at deployment (charged as
+    /// repair writes by the planner) even though it costs no capacity.
+    pub fn repair_fraction(&self) -> f64 {
+        let total = (self.rows * self.cols) as f64 * self.macros.len() as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        let repaired: f64 = self
+            .macros
+            .iter()
+            .map(|h| h.repaired_cells(self.rows, self.cols) as f64)
+            .sum();
+        repaired / total
     }
 
     /// One macro's usable geometry, floored to sub-array multiples (the
@@ -392,6 +469,8 @@ mod tests {
             spatial: FaultSpatial::Cluster,
             dead_column_rate: 0.0,
             dead_macro_rate: 0.0,
+            spare_rows: 0,
+            spare_cols: 0,
         }
         .instantiate(&cim, &org);
         for h in &map.macros {
@@ -419,6 +498,8 @@ mod tests {
             spatial: FaultSpatial::Uniform,
             dead_column_rate: 0.0,
             dead_macro_rate: 1.0,
+            spare_rows: 4,
+            spare_cols: 4,
         }
         .instantiate(&cim, &org);
         assert_eq!(map.usable_macros(), 0);
@@ -436,6 +517,125 @@ mod tests {
         assert!(FaultModel::from_json(&bad).is_err());
         let bad_spatial = Json::parse(r#"{"spatial": "diagonal"}"#).unwrap();
         assert!(FaultModel::from_json(&bad_spatial).is_err());
+    }
+
+    #[test]
+    fn spares_repair_damage_and_charge_repair_traffic() {
+        let (cim, org) = geom();
+        let base = FaultModel {
+            seed: 7,
+            stuck_cell_rate: 0.08,
+            spatial: FaultSpatial::Row,
+            dead_column_rate: 0.0,
+            dead_macro_rate: 0.0,
+            spare_rows: 0,
+            spare_cols: 0,
+        };
+        let unrepaired = base.instantiate(&cim, &org);
+        assert!(!unrepaired.is_clean(), "8% row faults damage some macro");
+        assert!(!unrepaired.has_repairs());
+        assert_eq!(unrepaired.repair_fraction(), 0.0);
+        // a budget as large as the macro repairs everything
+        let repaired = base.with_spares(cim.rows, cim.cols).instantiate(&cim, &org);
+        assert!(repaired.is_clean(), "all damage fits the spare budget");
+        assert!(repaired.has_repairs());
+        assert!(repaired.repair_fraction() > 0.0);
+        assert_eq!(repaired.capacity_loss(), 0.0);
+        assert_eq!(repaired.effective_geometry(), (cim.rows, cim.cols));
+        // total damage is conserved: net loss + repairs = raw loss
+        for (u, r) in unrepaired.macros.iter().zip(&repaired.macros) {
+            assert_eq!(u.lost_rows, r.lost_rows + r.repaired_rows);
+            assert_eq!(u.lost_cols, r.lost_cols + r.repaired_cols);
+        }
+    }
+
+    #[test]
+    fn dead_macros_are_beyond_repair() {
+        let (cim, org) = geom();
+        let map = FaultModel {
+            seed: 1,
+            stuck_cell_rate: 0.0,
+            spatial: FaultSpatial::Uniform,
+            dead_column_rate: 0.0,
+            dead_macro_rate: 1.0,
+            spare_rows: cim.rows,
+            spare_cols: cim.cols,
+        }
+        .instantiate(&cim, &org);
+        assert_eq!(map.usable_macros(), 0);
+        assert!(!map.has_repairs(), "spares cannot revive fused-off macros");
+    }
+
+    #[test]
+    fn spares_json_roundtrip() {
+        let m = FaultModel::scaled(0.02, FaultSpatial::Row, 5).with_spares(2, 1);
+        let m2 = FaultModel::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, m2);
+        assert_eq!(m2.spare_rows, 2);
+        assert_eq!(m2.spare_cols, 1);
+    }
+
+    #[test]
+    fn prop_spares_never_increase_loss_and_loss_stays_monotone() {
+        use crate::util::proptest::{check, ensure, Gen};
+        let (cim, org) = geom();
+        check("spare-repair monotonicity", 60, 0xFA75, |g: &mut Gen| {
+            let spatial = *g.choose(&[
+                FaultSpatial::Uniform,
+                FaultSpatial::Row,
+                FaultSpatial::Column,
+                FaultSpatial::Cluster,
+            ]);
+            let seed = g.usize_in(0, 1 << 20) as u64;
+            let spare_rows = g.usize_in(0, cim.rows);
+            let spare_cols = g.usize_in(0, cim.cols);
+            let mut prev_loss = -1.0;
+            let mut prev_repair = -1.0;
+            for rate in [0.0, 0.01, 0.04, 0.12, 0.35] {
+                let base = FaultModel::scaled(rate, spatial, seed);
+                let with = base.with_spares(spare_rows, spare_cols).instantiate(&cim, &org);
+                let without = base.instantiate(&cim, &org);
+                ensure(
+                    with.capacity_loss() <= without.capacity_loss() + 1e-12,
+                    format!(
+                        "spares increased loss at rate {rate} ({} vs {})",
+                        with.capacity_loss(),
+                        without.capacity_loss()
+                    ),
+                )?;
+                ensure(
+                    with.usable_macros() >= without.usable_macros(),
+                    format!("spares lost usable macros at rate {rate}"),
+                )?;
+                let loss = with.capacity_loss();
+                ensure(
+                    loss >= prev_loss - 1e-12,
+                    format!("repaired loss not monotone in rate at {rate}"),
+                )?;
+                prev_loss = loss;
+                for h in &with.macros {
+                    ensure(
+                        h.repaired_rows <= spare_rows && h.repaired_cols <= spare_cols,
+                        "repairs exceeded the spare budget",
+                    )?;
+                }
+                // repair traffic is monotone in rate while macros stay
+                // alive (a fused-off macro forfeits its repairs, so the
+                // global fraction is only monotone without macro death)
+                let nodead = FaultModel {
+                    dead_macro_rate: 0.0,
+                    ..base.with_spares(spare_rows, spare_cols)
+                }
+                .instantiate(&cim, &org);
+                let repair = nodead.repair_fraction();
+                ensure(
+                    repair >= prev_repair - 1e-12,
+                    format!("repair fraction not monotone in rate at {rate}"),
+                )?;
+                prev_repair = repair;
+            }
+            Ok(())
+        });
     }
 
     #[test]

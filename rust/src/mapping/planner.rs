@@ -71,6 +71,9 @@ pub struct FaultPlanSummary {
     pub effective_geometry: (usize, usize),
     /// Exact fraction of weight capacity lost (before alignment).
     pub capacity_loss: f64,
+    /// Fraction of capacity remapped onto spare rows/columns: costs
+    /// repair writes but no capacity (0 without spare budgets).
+    pub repair_fraction: f64,
     /// Total rounds the same (layout, strategy) choices would need on
     /// the fault-free chip.
     pub baseline_rounds: u64,
@@ -144,6 +147,7 @@ struct Degradation {
     arch: Architecture,
     usable_macros: usize,
     capacity_loss: f64,
+    repair_fraction: f64,
     effective_geometry: (usize, usize),
 }
 
@@ -241,7 +245,9 @@ fn plan_with_faults_unchecked(
     faults: Option<&FaultMap>,
 ) -> anyhow::Result<MappingPlan> {
     let deg = match faults {
-        Some(f) if !f.is_clean() => {
+        // spare-repaired damage keeps full geometry but still owes
+        // repair writes, so it takes the degradation path too
+        Some(f) if !f.is_clean() || f.has_repairs() => {
             let (eff_r, eff_c) = f.effective_geometry();
             let usable = f.usable_macros();
             if usable == 0 || eff_r == 0 || eff_c == 0 {
@@ -262,6 +268,7 @@ fn plan_with_faults_unchecked(
                 arch: darch,
                 usable_macros: usable,
                 capacity_loss: f.capacity_loss(),
+                repair_fraction: f.repair_fraction(),
                 effective_geometry: (eff_r, eff_c),
             })
         }
@@ -349,9 +356,11 @@ fn plan_with_faults_unchecked(
             degraded_rounds += tiling.rounds.len() as u64;
             // weights displaced from faulty cells are re-staged through
             // the weight buffer: charge the lost-capacity share of this
-            // op's weight traffic as repair writes
+            // op's weight traffic, plus the share remapped onto spare
+            // rows/columns, as repair writes
             let op_weight_bytes: u64 = tiling.rounds.iter().map(|r| r.weight_bytes).sum();
-            fault_moved = (op_weight_bytes as f64 * d.capacity_loss).ceil() as u64;
+            fault_moved =
+                (op_weight_bytes as f64 * (d.capacity_loss + d.repair_fraction)).ceil() as u64;
             repair_bytes += fault_moved;
         }
         let index = index_storage(&fb, &layout, ctx);
@@ -429,6 +438,7 @@ fn plan_with_faults_unchecked(
             full_geometry: (arch.cim.rows, arch.cim.cols),
             effective_geometry: d.effective_geometry,
             capacity_loss: d.capacity_loss,
+            repair_fraction: d.repair_fraction,
             baseline_rounds,
             degraded_rounds,
             repair_bytes,
@@ -580,6 +590,8 @@ mod tests {
             dead: false,
             lost_rows: 0,
             lost_cols: 0,
+            repaired_rows: 0,
+            repaired_cols: 0,
         };
         let fmap = FaultMap {
             macros: vec![
@@ -628,6 +640,44 @@ mod tests {
     }
 
     #[test]
+    fn repaired_only_damage_keeps_geometry_but_charges_repair_writes() {
+        use crate::hw::faults::MacroHealth;
+        let arch = presets::usecase_arch(4, (2, 2));
+        let net = zoo::resnet_mini();
+        let base = plan(&arch, &net, None, MappingOptions::default()).unwrap();
+        // every lost row fit the spare budget: full geometry survives,
+        // but the remapped weights still owe repair-write traffic
+        let repaired = MacroHealth {
+            dead: false,
+            lost_rows: 0,
+            lost_cols: 0,
+            repaired_rows: 2,
+            repaired_cols: 1,
+        };
+        let fmap = FaultMap {
+            macros: vec![repaired; 4],
+            rows: arch.cim.rows,
+            cols: arch.cim.cols,
+            sub_rows: arch.cim.sub_rows,
+            sub_cols: arch.cim.sub_cols,
+        };
+        assert!(fmap.is_clean() && fmap.has_repairs());
+        let p =
+            plan_with_faults(&arch, &net, None, MappingOptions::default(), Some(&fmap)).unwrap();
+        let f = p.faults.as_ref().expect("repairs recorded in the summary");
+        assert_eq!(f.usable_macros, 4);
+        assert_eq!(f.effective_geometry, f.full_geometry);
+        assert_eq!(f.capacity_loss, 0.0);
+        assert!(f.repair_fraction > 0.0);
+        assert!(f.repair_bytes > 0);
+        assert_eq!(f.extra_rounds(), 0, "no capacity lost, no spilled rounds");
+        let rounds = |p: &MappingPlan| -> usize {
+            p.ops.values().map(|m| m.tiling.rounds.len()).sum()
+        };
+        assert_eq!(rounds(&p), rounds(&base));
+    }
+
+    #[test]
     fn unusable_chip_is_rejected() {
         use crate::hw::faults::{FaultModel, FaultSpatial};
         let mut arch = presets::usecase_arch(4, (2, 2));
@@ -637,6 +687,8 @@ mod tests {
             spatial: FaultSpatial::Uniform,
             dead_column_rate: 0.0,
             dead_macro_rate: 1.0,
+            spare_rows: 0,
+            spare_cols: 0,
         };
         let net = zoo::resnet_mini();
         let err = plan(&arch, &net, None, MappingOptions::default()).unwrap_err();

@@ -22,6 +22,8 @@ fn rows_only(rate: f64, spatial: FaultSpatial, seed: u64) -> FaultModel {
         spatial,
         dead_column_rate: 0.0,
         dead_macro_rate: 0.0,
+        spare_rows: 0,
+        spare_cols: 0,
     }
 }
 

@@ -1,0 +1,190 @@
+//! Integration: process-isolated sweep shards end-to-end, driving the
+//! real `ciminus` binary. Thread-mode isolation cannot survive a job
+//! that calls `std::process::abort()`; these tests prove process mode
+//! does — the sweep completes with a structured `crashed` failure, a
+//! hard-killed hang, partial results in the canonical journal, and a
+//! clean `--resume`. Also covers the offline `journal merge` command.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+const BIN: &str = env!("CARGO_BIN_EXE_ciminus");
+
+struct Run {
+    code: i32,
+    stdout: String,
+    stderr: String,
+}
+
+fn run(args: &[&str]) -> Run {
+    let out = Command::new(BIN)
+        .args(args)
+        .output()
+        .expect("spawning the ciminus binary");
+    Run {
+        code: out.status.code().unwrap_or(-1),
+        stdout: String::from_utf8_lossy(&out.stdout).into_owned(),
+        stderr: String::from_utf8_lossy(&out.stderr).into_owned(),
+    }
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "ciminus-itest-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::create_dir_all(&dir).expect("creating temp dir");
+    dir
+}
+
+fn shard_files(ckpt: &Path) -> Vec<PathBuf> {
+    let parent = ckpt.parent().expect("checkpoint has a parent dir");
+    let prefix = format!(
+        "{}.shard-",
+        ckpt.file_name().and_then(|s| s.to_str()).expect("file name")
+    );
+    std::fs::read_dir(parent)
+        .expect("reading temp dir")
+        .flatten()
+        .filter(|e| e.file_name().to_str().is_some_and(|n| n.starts_with(&prefix)))
+        .map(|e| e.path())
+        .collect()
+}
+
+/// The ISSUE acceptance scenario: under `--isolation=process` the smoke
+/// study grows a ninth point that calls `std::process::abort()`. The
+/// sweep must survive the abort (as a `crashed` failure), hard-kill the
+/// hanging point past `--job-timeout`, journal the six good points, and
+/// replay them all on `--resume`.
+#[test]
+fn process_smoke_survives_abort_and_hang_and_resumes() {
+    let dir = temp_dir("process-smoke");
+    let ckpt = dir.join("smoke.jsonl");
+    let ckpt_s = ckpt.to_str().expect("utf-8 path");
+
+    let first = run(&[
+        "explore", "--study", "smoke", "--isolation", "process", "--shards", "2",
+        "--job-timeout", "1", "--checkpoint", ckpt_s,
+    ]);
+    let log = format!("stdout:\n{}\nstderr:\n{}", first.stdout, first.stderr);
+    assert_eq!(first.code, 3, "partial exit code\n{log}");
+    assert!(
+        first.stderr.contains("crashed"),
+        "the aborting point must surface as a crashed failure\n{log}"
+    );
+    assert!(
+        first.stderr.contains("timeout"),
+        "the hanging point must be hard-killed and reported\n{log}"
+    );
+    assert!(
+        first.stderr.contains("panic"),
+        "the panicking point survives inside the worker\n{log}"
+    );
+    assert!(
+        first.stderr.contains("3 failed"),
+        "exactly panic + timeout + abort fail\n{log}"
+    );
+    let journal = std::fs::read_to_string(&ckpt).expect("canonical journal written");
+    assert_eq!(
+        journal.lines().count(),
+        6,
+        "6 of 9 process-mode smoke points completed and were merged:\n{journal}"
+    );
+    assert!(
+        shard_files(&ckpt).is_empty(),
+        "shard journals are folded into the canonical journal and removed"
+    );
+
+    // resume: the six journaled points replay without recomputation,
+    // the three bad ones fail again
+    let second = run(&[
+        "explore", "--study", "smoke", "--isolation", "process", "--shards", "2",
+        "--job-timeout", "1", "--checkpoint", ckpt_s, "--resume",
+    ]);
+    let log = format!("stdout:\n{}\nstderr:\n{}", second.stdout, second.stderr);
+    assert_eq!(second.code, 3, "{log}");
+    assert!(
+        second.stderr.contains("6 resumed"),
+        "all completed points replay from the journal\n{log}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Same sweep, thread mode, for contrast: thread isolation has no abort
+/// point (it would kill the test process), so the canonical smoke sweep
+/// stays at 8 points with 2 failures. Guards the default path against
+/// regressions from the process-mode plumbing.
+#[test]
+fn thread_smoke_is_unchanged_by_process_plumbing() {
+    let dir = temp_dir("thread-smoke");
+    let ckpt = dir.join("smoke.jsonl");
+    let r = run(&[
+        "explore", "--study", "smoke", "--job-timeout", "0.3",
+        "--checkpoint", ckpt.to_str().expect("utf-8 path"),
+    ]);
+    assert_eq!(r.code, 3, "stderr:\n{}", r.stderr);
+    assert!(r.stdout.contains("6 of 8 points completed"), "{}", r.stdout);
+    assert!(!r.stderr.contains("crashed"), "{}", r.stderr);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A sized, failure-free smoke sweep in process mode: every point
+/// lands, the journal is complete, and a re-run resumes everything.
+#[test]
+fn sized_process_smoke_completes_cleanly() {
+    let dir = temp_dir("sized-smoke");
+    let ckpt = dir.join("clean.jsonl");
+    let ckpt_s = ckpt.to_str().expect("utf-8 path");
+    let r = run(&[
+        "explore", "--study", "smoke", "--isolation", "process", "--shards", "3",
+        "--smoke-points", "12", "--checkpoint", ckpt_s,
+    ]);
+    assert_eq!(r.code, 0, "stderr:\n{}", r.stderr);
+    let journal = std::fs::read_to_string(&ckpt).expect("journal written");
+    assert_eq!(journal.lines().count(), 12, "{journal}");
+    let again = run(&[
+        "explore", "--study", "smoke", "--isolation", "process", "--shards", "3",
+        "--smoke-points", "12", "--checkpoint", ckpt_s, "--resume",
+    ]);
+    assert_eq!(again.code, 0, "stderr:\n{}", again.stderr);
+    assert!(again.stderr.contains("12 resumed"), "{}", again.stderr);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `journal merge` folds shard journals into a canonical checkpoint
+/// with last-writer-wins keys, and is idempotent.
+#[test]
+fn journal_merge_cli_is_last_writer_wins() {
+    let dir = temp_dir("journal-merge");
+    let canon = dir.join("canon.jsonl");
+    let s0 = dir.join("s0.jsonl");
+    let s1 = dir.join("s1.jsonl");
+    std::fs::write(&canon, "{\"key\":\"a\",\"ok\":1}\n").expect("seed canonical");
+    std::fs::write(&s0, "{\"key\":\"a\",\"ok\":1}\n{\"key\":\"b\",\"ok\":2}\n").expect("shard 0");
+    std::fs::write(&s1, "{\"key\":\"b\",\"ok\":3}\n").expect("shard 1");
+    let canon_s = canon.to_str().expect("utf-8 path");
+    let r = run(&[
+        "journal", "merge", "--into", canon_s,
+        s0.to_str().expect("utf-8 path"),
+        s1.to_str().expect("utf-8 path"),
+    ]);
+    assert_eq!(r.code, 0, "stderr:\n{}", r.stderr);
+    assert!(r.stdout.contains("merged 1 new entries"), "{}", r.stdout);
+    let map = ciminus::explore::executor::Journal::load_map(&canon).expect("canonical loads");
+    assert_eq!(map.len(), 2);
+    assert_eq!(
+        map.get("b").and_then(|v| v.as_f64()),
+        Some(3.0),
+        "later shard wins the duplicate key"
+    );
+    // merging the same shards again appends nothing
+    let again = run(&[
+        "journal", "merge", "--into", canon_s,
+        s0.to_str().expect("utf-8 path"),
+        s1.to_str().expect("utf-8 path"),
+    ]);
+    assert_eq!(again.code, 0);
+    assert!(again.stdout.contains("merged 0 new entries"), "{}", again.stdout);
+    let _ = std::fs::remove_dir_all(&dir);
+}
