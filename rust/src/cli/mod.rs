@@ -4,7 +4,8 @@
 pub mod args;
 pub mod pattern;
 
-use crate::eval::{EvalCtx, Evaluator, Scenario};
+use crate::eval::diskcache::DiskStore;
+use crate::eval::{EvalCtx, Scenario};
 use crate::explore::{
     ablation_study, executor, fault_study, input_study, mapping_study, sparsity_study,
 };
@@ -23,6 +24,7 @@ use anyhow::{Context, Result};
 use args::Args;
 use pattern::parse_pattern;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Process exit codes. `1` is reserved for hard errors: `main` prints
@@ -63,6 +65,9 @@ commands:
   journal   merge --into <canonical.jsonl> <shard.jsonl>...
                                    fold shard journals into a canonical
                                    checkpoint (last-writer-wins keys)
+  cache     stats|gc --cache-dir DIR [--cache-bytes N]
+                                   inspect or shrink a persistent
+                                   artifact store
 
 sweep options (explore / faults / search):
   --threads N        worker threads (0 = available parallelism)
@@ -81,6 +86,16 @@ sweep options (explore / faults / search):
 simulation options (simulate / explore / faults / search):
   --postproc-throughput N  elements per cycle per post-processing lane
                            (default 4)
+
+cache options (simulate / explore / faults / search / trace):
+  --cache-dir DIR    persist stage artifacts (prune plans, mappings,
+                     profiles, sim reports) to a content-addressed
+                     on-disk store shared across runs and process
+                     shards; unchanged points restore instead of
+                     recomputing
+  --cache-bytes N    byte bound for the store, K/M/G suffixes accepted
+                     (default 1G); least-recently-used entries are
+                     evicted once the bound is exceeded
 
 exit codes: 0 ok | 1 hard error | 2 usage error | 3 completed with failures
 
@@ -109,6 +124,66 @@ pub(crate) fn load_net(spec: &str) -> Result<Network> {
     }
 }
 
+/// Parse a byte-size flag value with an optional binary K/M/G suffix
+/// (`512M` = 512 MiB).
+pub(crate) fn parse_bytes(s: &str) -> Result<u64> {
+    let t = s.trim();
+    let (digits, mult) = match t.as_bytes().last() {
+        Some(b'k' | b'K') => (&t[..t.len() - 1], 1u64 << 10),
+        Some(b'm' | b'M') => (&t[..t.len() - 1], 1u64 << 20),
+        Some(b'g' | b'G') => (&t[..t.len() - 1], 1u64 << 30),
+        _ => (t, 1),
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .with_context(|| format!("expected a byte count like `64M` or `1G`, got `{s}`"))?;
+    n.checked_mul(mult)
+        .ok_or_else(|| anyhow::anyhow!("byte count `{s}` overflows u64"))
+}
+
+/// Parse the shared `--cache-dir` / `--cache-bytes` pair. Returns the
+/// directory (if any) and the byte bound (0 = the store default).
+fn cache_flags(a: &Args) -> Result<(Option<PathBuf>, u64)> {
+    let dir = a.get("cache-dir").map(PathBuf::from);
+    let bytes = match a.get("cache-bytes") {
+        Some(v) => {
+            let b = parse_bytes(v)?;
+            anyhow::ensure!(b > 0, "--cache-bytes expects a positive size, got `{v}`");
+            anyhow::ensure!(
+                dir.is_some(),
+                "--cache-bytes requires --cache-dir <path>"
+            );
+            b
+        }
+        None => 0,
+    };
+    Ok((dir, bytes))
+}
+
+/// Build the evaluation context for a command: shared in-memory stage
+/// caches, plus the persistent `--cache-dir` disk store when one was
+/// requested.
+fn eval_ctx(a: &Args) -> Result<EvalCtx> {
+    let sim = sim_options(a)?;
+    match cache_flags(a)? {
+        (Some(dir), bytes) => {
+            let store = DiskStore::open(&dir, bytes)
+                .with_context(|| format!("opening artifact cache at {}", dir.display()))?;
+            Ok(EvalCtx::with_disk(sim, Arc::new(store)))
+        }
+        (None, _) => Ok(EvalCtx::new(sim)),
+    }
+}
+
+/// Fold worker-process stage counters back into the supervising
+/// evaluator, so the `artifact cache:` summary printed after a
+/// process-isolated sweep covers work done inside the shards.
+fn hook_worker_stats(cfg: &mut SweepConfig, ectx: &EvalCtx) {
+    let ev = ectx.evaluator.clone();
+    cfg.worker_stats = Some(executor::StatsHook(Arc::new(move |s| ev.absorb(s))));
+}
+
 /// Build the executor configuration from the shared sweep flags.
 fn sweep_config(a: &Args) -> Result<SweepConfig> {
     let mut cfg = SweepConfig::with_threads(a.usize_or("threads", 0)?);
@@ -131,6 +206,9 @@ fn sweep_config(a: &Args) -> Result<SweepConfig> {
         cfg.isolation = IsolationMode::parse(mode)?;
     }
     cfg.shards = a.usize_or("shards", 0)?;
+    let (cache_dir, cache_bytes) = cache_flags(a)?;
+    cfg.cache_dir = cache_dir;
+    cfg.cache_bytes = cache_bytes;
     Ok(cfg)
 }
 
@@ -217,6 +295,7 @@ pub fn run<I: IntoIterator<Item = String>>(raw: I) -> Result<i32> {
         "search" => cmd_search(&a),
         "trace" => cmd_trace(&a),
         "journal" => cmd_journal(&a),
+        "cache" => cmd_cache(&a),
         // hidden mode: this process was re-exec'd by the
         // process-isolation supervisor to run one sweep shard
         "__worker" => crate::explore::worker::worker_main(),
@@ -266,6 +345,7 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
         rearrange_slice: a.usize_or("rearrange-slice", 16)?,
         ..Default::default()
     };
+    let ectx = eval_ctx(a)?;
     let mut s = Scenario::new(arch.clone(), net)
         .with_mapping(opts)
         .synthetic_profiles(arch.input_bits, 0.55, 0xC1A0)
@@ -273,12 +353,15 @@ fn cmd_simulate(a: &Args) -> Result<i32> {
     if !fb.is_dense() {
         s = s.prune_uniform(&fb);
     }
-    let rep = Evaluator::new().evaluate(&s)?;
+    let rep = ectx.evaluator.evaluate(&s)?;
     println!("{}", arch.describe());
     println!("{}", rep.summary());
     if a.bool("detail") {
         println!("{}", rep.op_table().render());
         println!("{}", rep.energy_table().render());
+    }
+    if ectx.evaluator.disk().is_some() {
+        eprintln!("artifact cache: {}", ectx.evaluator.stats());
     }
     Ok(EXIT_OK)
 }
@@ -298,8 +381,9 @@ fn cmd_validate(_a: &Args) -> Result<i32> {
 const STUDIES: &str = "fig8, fig9, fig10, fig11, fig12, ablation, smoke";
 
 fn cmd_explore(a: &Args) -> Result<i32> {
-    let cfg = sweep_config(a)?;
-    let ectx = EvalCtx::new(sim_options(a)?);
+    let mut cfg = sweep_config(a)?;
+    let ectx = eval_ctx(a)?;
+    hook_worker_stats(&mut cfg, &ectx);
     let study = a.str_or("study", "fig8");
     let mut agg = SweepAgg::default();
     match study {
@@ -460,8 +544,9 @@ fn cmd_explore(a: &Args) -> Result<i32> {
 }
 
 fn cmd_faults(a: &Args) -> Result<i32> {
-    let cfg = sweep_config(a)?;
-    let ectx = EvalCtx::new(sim_options(a)?);
+    let mut cfg = sweep_config(a)?;
+    let ectx = eval_ctx(a)?;
+    hook_worker_stats(&mut cfg, &ectx);
     let net = load_net(a.str_or("model", "resnet_mini"))?;
     let ratio = a.f64_or("ratio", 0.8)?;
     let fb = parse_pattern(a.str_or("pattern", "dense"), ratio)?;
@@ -600,8 +685,9 @@ fn cmd_report(a: &Args) -> Result<i32> {
 
 fn cmd_search(a: &Args) -> Result<i32> {
     use crate::explore::search::{candidates, search_robust, Constraints};
-    let cfg = sweep_config(a)?;
-    let ectx = EvalCtx::new(sim_options(a)?);
+    let mut cfg = sweep_config(a)?;
+    let ectx = eval_ctx(a)?;
+    hook_worker_stats(&mut cfg, &ectx);
     let net = load_net(a.str_or("model", "resnet50"))?;
     let n_macros = a.usize_or("macros", 16)?;
     let cons = Constraints {
@@ -679,6 +765,51 @@ fn cmd_journal(a: &Args) -> Result<i32> {
     Ok(EXIT_OK)
 }
 
+/// `ciminus cache stats|gc --cache-dir <dir>`: inspect or shrink a
+/// persistent artifact store without running a simulation.
+fn cmd_cache(a: &Args) -> Result<i32> {
+    const CACHE_USAGE: &str =
+        "usage: ciminus cache stats|gc --cache-dir <dir> [--cache-bytes N[K|M|G]]";
+    let sub = a.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    if sub != "stats" && sub != "gc" {
+        eprintln!("{CACHE_USAGE}");
+        return Ok(EXIT_USAGE);
+    }
+    let (dir, bytes) = cache_flags(a)?;
+    let Some(dir) = dir else {
+        eprintln!("cache {sub}: missing --cache-dir <dir>\n{CACHE_USAGE}");
+        return Ok(EXIT_USAGE);
+    };
+    let store = DiskStore::open(&dir, bytes)
+        .with_context(|| format!("opening artifact cache at {}", dir.display()))?;
+    if sub == "stats" {
+        let st = store.stats();
+        println!("artifact cache at {}", st.root.display());
+        for s in &st.stages {
+            println!(
+                "  {:<9} {:>6} entries  {:>12} bytes",
+                s.stage.dir(),
+                s.entries,
+                s.bytes
+            );
+        }
+        println!(
+            "  total     {:>6} entries  {:>12} bytes (bound {})",
+            st.total_entries, st.total_bytes, st.max_bytes
+        );
+    } else {
+        let before = store.stats().total_bytes;
+        let after = store.gc()?;
+        println!(
+            "gc reclaimed {} bytes, {} bytes remain (bound {})",
+            before.saturating_sub(after),
+            after,
+            store.max_bytes()
+        );
+    }
+    Ok(EXIT_OK)
+}
+
 fn cmd_trace(a: &Args) -> Result<i32> {
     let arch = load_arch(a.str_or("arch", "usecase4"))?;
     let net = load_net(a.str_or("model", "resnet_mini"))?;
@@ -688,7 +819,8 @@ fn cmd_trace(a: &Args) -> Result<i32> {
     if !fb.is_dense() {
         s = s.prune_uniform(&fb);
     }
-    let mapping = Evaluator::new().mapping_for(&s)?;
+    let ectx = eval_ctx(a)?;
+    let mapping = ectx.evaluator.mapping_for(&s)?;
     let t = crate::sim::trace::trace_mapping(&arch, &net, &mapping, arch.input_bits as f64);
     println!("{}", t.render(a.usize_or("limit", 40)?));
     println!("bound histogram:");
@@ -836,6 +968,65 @@ mod tests {
         assert_eq!(sweep_config(&dflt).unwrap().isolation, IsolationMode::Thread);
         let bad = Args::parse(["--isolation", "vm"].iter().map(|s| s.to_string()));
         assert!(sweep_config(&bad).is_err(), "unknown isolation mode rejected");
+    }
+
+    #[test]
+    fn parse_bytes_accepts_suffixes() {
+        assert_eq!(parse_bytes("123").unwrap(), 123);
+        assert_eq!(parse_bytes("4K").unwrap(), 4 << 10);
+        assert_eq!(parse_bytes("64m").unwrap(), 64 << 20);
+        assert_eq!(parse_bytes("2G").unwrap(), 2 << 30);
+        assert_eq!(parse_bytes(" 1 G ").unwrap(), 1 << 30);
+        assert!(parse_bytes("").is_err());
+        assert!(parse_bytes("12Q").is_err());
+        assert!(parse_bytes("-5M").is_err());
+        assert!(parse_bytes("99999999999999999999G").is_err(), "overflow rejected");
+    }
+
+    #[test]
+    fn sweep_config_parses_cache_flags() {
+        let a = Args::parse(
+            ["--cache-dir", "/tmp/cim-cache", "--cache-bytes", "64M"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = sweep_config(&a).unwrap();
+        assert_eq!(cfg.cache_dir.as_deref(), Some(std::path::Path::new("/tmp/cim-cache")));
+        assert_eq!(cfg.cache_bytes, 64 << 20);
+        let dflt = Args::parse(std::iter::empty::<String>());
+        let cfg = sweep_config(&dflt).unwrap();
+        assert_eq!(cfg.cache_dir, None);
+        assert_eq!(cfg.cache_bytes, 0, "0 defers to the store default");
+        let orphan = Args::parse(["--cache-bytes", "1M"].iter().map(|s| s.to_string()));
+        assert!(sweep_config(&orphan).is_err(), "--cache-bytes needs --cache-dir");
+        let zero = Args::parse(
+            ["--cache-dir", "/tmp/x", "--cache-bytes", "0"].iter().map(|s| s.to_string()),
+        );
+        assert!(sweep_config(&zero).is_err(), "zero bound rejected");
+    }
+
+    #[test]
+    fn cache_command_usage_errors() {
+        assert_eq!(run_args(&["cache"]).unwrap(), EXIT_USAGE);
+        assert_eq!(run_args(&["cache", "frobnicate"]).unwrap(), EXIT_USAGE);
+        assert_eq!(run_args(&["cache", "stats"]).unwrap(), EXIT_USAGE, "missing --cache-dir");
+        assert_eq!(run_args(&["cache", "gc"]).unwrap(), EXIT_USAGE, "missing --cache-dir");
+    }
+
+    #[test]
+    fn cache_stats_and_gc_on_empty_store() {
+        let dir = std::env::temp_dir().join(format!(
+            "ciminus-cli-cache-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let dir_s = dir.to_str().unwrap().to_string();
+        assert_eq!(run_args(&["cache", "stats", "--cache-dir", &dir_s]).unwrap(), EXIT_OK);
+        assert_eq!(
+            run_args(&["cache", "gc", "--cache-dir", &dir_s, "--cache-bytes", "1M"]).unwrap(),
+            EXIT_OK
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -14,17 +14,55 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
+/// Where one stage's artifact came from. Ordered by cost: a memory hit
+/// is free, a disk hit pays deserialization, a compute re-runs the
+/// stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StageHit {
+    /// Cache miss — the stage was (re)computed.
+    #[default]
+    Computed,
+    /// Served from this process's in-memory cache.
+    Memory,
+    /// Restored from the shared disk store (`eval::diskcache`).
+    Disk,
+}
+
+impl StageHit {
+    /// True when the stage did not recompute (memory or disk).
+    pub fn hit(self) -> bool {
+        !matches!(self, StageHit::Computed)
+    }
+
+    pub fn from_disk(self) -> bool {
+        matches!(self, StageHit::Disk)
+    }
+}
+
 /// Counters for one pipeline stage's cache.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct StageStats {
+    /// In-memory hits.
     pub hits: u64,
+    /// Artifacts restored from the disk store.
+    pub disk_hits: u64,
+    /// Full recomputes.
     pub misses: u64,
     pub evictions: u64,
 }
 
 impl StageStats {
     pub fn lookups(&self) -> u64 {
-        self.hits + self.misses
+        self.hits + self.disk_hits + self.misses
+    }
+
+    /// Fold another stage's counters into this one (worker → supervisor
+    /// aggregation over the frame protocol).
+    pub fn merge(&mut self, other: &StageStats) {
+        self.hits += other.hits;
+        self.disk_hits += other.disk_hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
     }
 }
 
@@ -41,6 +79,7 @@ struct Inner<T> {
 pub(crate) struct Cache<T> {
     capacity: usize,
     hits: AtomicU64,
+    disk_hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
     inner: Mutex<Inner<T>>,
@@ -51,6 +90,7 @@ impl<T> Cache<T> {
         Self {
             capacity: capacity.max(1),
             hits: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             inner: Mutex::new(Inner {
@@ -108,6 +148,48 @@ impl<T> Cache<T> {
         );
     }
 
+    /// Memory-only probe: counts a hit on success and *nothing* on a
+    /// miss — the caller decides whether the miss becomes a disk
+    /// restore or a recompute, so `lookups()` never double-counts.
+    fn probe(&self, key: u128) -> Option<Arc<T>> {
+        let mut g = self.lock();
+        g.tick += 1;
+        let tick = g.tick;
+        let e = g.entries.get_mut(&key)?;
+        e.last_used = tick;
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(e.value.clone())
+    }
+
+    /// Three-level lookup: memory, then `restore` (the disk store),
+    /// then `build`. A freshly built artifact is handed to `spill` so
+    /// the disk layer can persist it. `restore` and `build` run outside
+    /// the lock; two workers racing on one key may both compute (the
+    /// second insert wins), which is harmless because the pipeline is
+    /// deterministic.
+    pub fn get_or_restore(
+        &self,
+        key: u128,
+        restore: impl FnOnce() -> Option<T>,
+        spill: impl FnOnce(&T),
+        build: impl FnOnce() -> anyhow::Result<T>,
+    ) -> anyhow::Result<(Arc<T>, StageHit)> {
+        if let Some(v) = self.probe(key) {
+            return Ok((v, StageHit::Memory));
+        }
+        if let Some(v) = restore() {
+            self.disk_hits.fetch_add(1, Ordering::Relaxed);
+            let v = Arc::new(v);
+            self.insert(key, v.clone());
+            return Ok((v, StageHit::Disk));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let v = Arc::new(build()?);
+        self.insert(key, v.clone());
+        spill(&v);
+        Ok((v, StageHit::Computed))
+    }
+
     /// Return the cached artifact for `key`, or build, cache, and
     /// return it. The bool is true on a cache hit. `build` runs outside
     /// the lock.
@@ -116,17 +198,23 @@ impl<T> Cache<T> {
         key: u128,
         build: impl FnOnce() -> anyhow::Result<T>,
     ) -> anyhow::Result<(Arc<T>, bool)> {
-        if let Some(v) = self.lookup(key) {
-            return Ok((v, true));
-        }
-        let v = Arc::new(build()?);
-        self.insert(key, v.clone());
-        Ok((v, false))
+        let (v, hit) = self.get_or_restore(key, || None, |_| {}, build)?;
+        Ok((v, hit.hit()))
+    }
+
+    /// Fold a worker process's counters into this cache's totals (the
+    /// supervisor's summary line then reflects the whole sweep).
+    pub fn absorb(&self, s: &StageStats) {
+        self.hits.fetch_add(s.hits, Ordering::Relaxed);
+        self.disk_hits.fetch_add(s.disk_hits, Ordering::Relaxed);
+        self.misses.fetch_add(s.misses, Ordering::Relaxed);
+        self.evictions.fetch_add(s.evictions, Ordering::Relaxed);
     }
 
     pub fn stats(&self) -> StageStats {
         StageStats {
             hits: self.hits.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
         }
@@ -162,6 +250,49 @@ mod tests {
         assert!(c.lookup(1).is_some());
         assert!(c.lookup(3).is_some());
         assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn restore_path_counts_disk_hits_and_spills_fresh_builds() {
+        use std::cell::Cell;
+        let c: Cache<u64> = Cache::new(8);
+        let spilled = Cell::new(0u64);
+        // Miss everywhere: builds, then spills.
+        let (v, how) = c
+            .get_or_restore(1, || None, |v| spilled.set(*v), || Ok(5))
+            .unwrap();
+        assert_eq!((*v, how), (5, StageHit::Computed));
+        assert_eq!(spilled.get(), 5, "fresh build handed to spill");
+        // Memory hit: restore/build untouched.
+        let (_, how) = c
+            .get_or_restore(1, || panic!("no restore"), |_| (), || panic!("no build"))
+            .unwrap();
+        assert_eq!(how, StageHit::Memory);
+        // Disk hit on a cold key: restored value is cached.
+        let (v, how) = c
+            .get_or_restore(2, || Some(9), |_| panic!("no spill"), || panic!("no build"))
+            .unwrap();
+        assert_eq!((*v, how), (9, StageHit::Disk));
+        let (_, how) = c
+            .get_or_restore(2, || None, |_| (), || panic!("no build"))
+            .unwrap();
+        assert_eq!(how, StageHit::Memory, "restored value entered memory");
+        let s = c.stats();
+        assert_eq!((s.hits, s.disk_hits, s.misses), (2, 1, 1));
+        assert_eq!(s.lookups(), 4);
+    }
+
+    #[test]
+    fn absorb_folds_external_counters() {
+        let c: Cache<u64> = Cache::new(2);
+        c.absorb(&StageStats {
+            hits: 3,
+            disk_hits: 2,
+            misses: 1,
+            evictions: 4,
+        });
+        let s = c.stats();
+        assert_eq!((s.hits, s.disk_hits, s.misses, s.evictions), (3, 2, 1, 4));
     }
 
     #[test]

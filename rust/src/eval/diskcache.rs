@@ -1,0 +1,462 @@
+//! Persistent, cross-process artifact store backing the in-memory
+//! stage caches (docs/eval-pipeline.md).
+//!
+//! Layout: `<cache-dir>/v<FORMAT>-s<HASH_SCHEMA_VERSION>/<stage>/<key:032x>`,
+//! one file per artifact, named by the stage's 128-bit content hash.
+//! Bumping either version simply selects a different subdirectory, so
+//! stale entries from an older hashing layout or file format can never
+//! be read back — they just age out of the old subtree.
+//!
+//! Crash safety: writes go to a private `.tmp-<pid>-<seq>` file in the
+//! store root and are published with an atomic `rename`, so readers
+//! never observe a half-written entry under its final name. Each entry
+//! carries a header (magic, versions, stage tag, key, payload length,
+//! payload checksum); any mismatch — torn write, bit rot, truncation —
+//! deletes the entry and reports a miss. The store is best-effort by
+//! design: every I/O failure degrades to "cache miss" or "not spilled",
+//! never to an evaluation error.
+//!
+//! Bounds are byte-based. `used` tracks an estimate maintained on
+//! store; crossing `max_bytes` triggers [`DiskStore::gc`], which
+//! rescans exact sizes and deletes least-recently-used entries (by
+//! mtime — loads touch their entry) until the store fits.
+
+use crate::eval::hash::{StableHasher, HASH_SCHEMA_VERSION};
+use crate::eval::serial::{decode, encode, Persist, Reader};
+use anyhow::{Context, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, SystemTime};
+
+/// The four memoized pipeline stages, each with its own subdirectory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Prune,
+    Mapping,
+    Profiles,
+    Sim,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 4] = [Stage::Prune, Stage::Mapping, Stage::Profiles, Stage::Sim];
+
+    /// Tag byte stored in every entry header (guards against a file
+    /// moved or hard-linked across stage directories).
+    fn tag(self) -> u8 {
+        match self {
+            Stage::Prune => 0,
+            Stage::Mapping => 1,
+            Stage::Profiles => 2,
+            Stage::Sim => 3,
+        }
+    }
+
+    /// Subdirectory name.
+    pub fn dir(self) -> &'static str {
+        match self {
+            Stage::Prune => "prune",
+            Stage::Mapping => "mapping",
+            Stage::Profiles => "profiles",
+            Stage::Sim => "sim",
+        }
+    }
+}
+
+/// Default byte bound when `--cache-bytes` is not given: 1 GiB.
+pub const DEFAULT_CACHE_BYTES: u64 = 1 << 30;
+
+/// On-disk entry format version. Bump when the header or any
+/// [`Persist`] encoding changes shape without a hash-schema bump.
+const FORMAT_VERSION: u32 = 1;
+
+const MAGIC: [u8; 4] = *b"CIMC";
+
+/// magic + format + schema + stage tag + key + payload len + checksum.
+const HEADER_LEN: usize = 4 + 4 + 4 + 1 + 16 + 8 + 16;
+
+/// Orphaned temp files older than this are swept by `gc` (a crashed
+/// writer's leftovers); younger ones may still be mid-write.
+const TMP_MAX_AGE: Duration = Duration::from_secs(15 * 60);
+
+/// A content-addressed, byte-bounded, crash-safe artifact store shared
+/// by every process of a sweep. All methods are safe to call
+/// concurrently from multiple threads and processes.
+pub struct DiskStore {
+    /// Version-qualified root (`<dir>/v1-s<schema>`).
+    root: PathBuf,
+    schema: u32,
+    max_bytes: u64,
+    /// Estimated stored bytes; refreshed exactly by `gc`.
+    used: AtomicU64,
+    /// Per-process temp-file discriminator.
+    seq: AtomicU64,
+}
+
+/// Usage of one stage subdirectory.
+#[derive(Debug, Clone, Copy)]
+pub struct StageUsage {
+    pub stage: Stage,
+    pub entries: u64,
+    pub bytes: u64,
+}
+
+/// Snapshot of the store for `ciminus cache stats`.
+#[derive(Debug, Clone)]
+pub struct DiskCacheStats {
+    pub stages: Vec<StageUsage>,
+    pub total_entries: u64,
+    pub total_bytes: u64,
+    pub max_bytes: u64,
+    pub root: PathBuf,
+}
+
+impl DiskStore {
+    /// Open (creating if needed) the store under `dir` for the crate's
+    /// current hash schema. `max_bytes == 0` selects
+    /// [`DEFAULT_CACHE_BYTES`].
+    pub fn open(dir: &Path, max_bytes: u64) -> Result<Self> {
+        Self::open_with_schema(dir, max_bytes, HASH_SCHEMA_VERSION)
+    }
+
+    /// Schema-parameterized open — lets tests prove that a
+    /// `HASH_SCHEMA_VERSION` bump invalidates every existing entry.
+    pub fn open_with_schema(dir: &Path, max_bytes: u64, schema: u32) -> Result<Self> {
+        let root = dir.join(format!("v{FORMAT_VERSION}-s{schema}"));
+        for stage in Stage::ALL {
+            fs::create_dir_all(root.join(stage.dir()))
+                .with_context(|| format!("creating cache dir under {}", root.display()))?;
+        }
+        let store = Self {
+            root,
+            schema,
+            max_bytes: if max_bytes == 0 {
+                DEFAULT_CACHE_BYTES
+            } else {
+                max_bytes
+            },
+            used: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+        };
+        store.used.store(store.scan().1, Ordering::Relaxed);
+        Ok(store)
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn max_bytes(&self) -> u64 {
+        self.max_bytes
+    }
+
+    fn entry_path(&self, stage: Stage, key: u128) -> PathBuf {
+        self.root.join(stage.dir()).join(format!("{key:032x}"))
+    }
+
+    /// Restore and decode one artifact; `None` on any miss, including a
+    /// torn or corrupted entry (which is deleted so it stops costing
+    /// bytes). Never fails the evaluation.
+    pub fn get<T: Persist>(&self, stage: Stage, key: u128) -> Option<T> {
+        let payload = self.load(stage, key)?;
+        match decode(&payload) {
+            Ok(v) => Some(v),
+            Err(_) => {
+                // Checksum matched but the payload does not parse: a
+                // producer with a different artifact layout wrote it
+                // without bumping FORMAT_VERSION. Drop it.
+                let _ = fs::remove_file(self.entry_path(stage, key));
+                None
+            }
+        }
+    }
+
+    /// Encode and spill one artifact. Best-effort: errors are swallowed
+    /// (a full disk must not fail the sweep).
+    pub fn put<T: Persist>(&self, stage: Stage, key: u128, value: &T) {
+        self.store(stage, key, &encode(value));
+    }
+
+    /// Raw payload restore with full header validation.
+    fn load(&self, stage: Stage, key: u128) -> Option<Vec<u8>> {
+        let path = self.entry_path(stage, key);
+        let raw = fs::read(&path).ok()?;
+        match validate_entry(&raw, self.schema, stage, key) {
+            Ok(payload) => {
+                touch(&path);
+                Some(payload.to_vec())
+            }
+            Err(_) => {
+                let _ = fs::remove_file(&path);
+                None
+            }
+        }
+    }
+
+    /// Raw payload spill: atomic tmp-file + rename publish.
+    fn store(&self, stage: Stage, key: u128, payload: &[u8]) {
+        let path = self.entry_path(stage, key);
+        if path.exists() {
+            touch(&path); // refresh LRU position; contents are equal by key
+            return;
+        }
+        let mut record = Vec::with_capacity(HEADER_LEN + payload.len());
+        record.extend_from_slice(&MAGIC);
+        record.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        record.extend_from_slice(&self.schema.to_le_bytes());
+        record.push(stage.tag());
+        record.extend_from_slice(&key.to_le_bytes());
+        record.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        record.extend_from_slice(&checksum(payload).to_le_bytes());
+        record.extend_from_slice(payload);
+
+        let tmp = self.root.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            self.seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        if fs::write(&tmp, &record).is_err() {
+            let _ = fs::remove_file(&tmp);
+            return;
+        }
+        if fs::rename(&tmp, &path).is_err() {
+            let _ = fs::remove_file(&tmp);
+            return;
+        }
+        let used = self
+            .used
+            .fetch_add(record.len() as u64, Ordering::Relaxed)
+            .saturating_add(record.len() as u64);
+        if used > self.max_bytes {
+            let _ = self.gc();
+        }
+    }
+
+    /// Enumerate live entries and their exact sizes. Returns
+    /// `(entries, total_bytes)`; I/O errors skip the affected entry.
+    fn scan(&self) -> (Vec<(PathBuf, u64, SystemTime)>, u64) {
+        let mut entries = Vec::new();
+        let mut total = 0u64;
+        for stage in Stage::ALL {
+            let Ok(dir) = fs::read_dir(self.root.join(stage.dir())) else {
+                continue;
+            };
+            for ent in dir.flatten() {
+                let Ok(meta) = ent.metadata() else { continue };
+                if !meta.is_file() {
+                    continue;
+                }
+                let mtime = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+                total = total.saturating_add(meta.len());
+                entries.push((ent.path(), meta.len(), mtime));
+            }
+        }
+        (entries, total)
+    }
+
+    /// Garbage-collect: sweep orphaned temp files, then delete
+    /// least-recently-used entries until the store fits `max_bytes`.
+    /// Returns the bytes reclaimed. Safe to race with other processes —
+    /// a concurrent deletion just makes our removal a no-op.
+    pub fn gc(&self) -> Result<u64> {
+        let now = SystemTime::now();
+        if let Ok(dir) = fs::read_dir(&self.root) {
+            for ent in dir.flatten() {
+                let name = ent.file_name();
+                let stale = name.to_string_lossy().starts_with(".tmp-")
+                    && ent
+                        .metadata()
+                        .and_then(|m| m.modified())
+                        .map(|t| now.duration_since(t).unwrap_or_default() > TMP_MAX_AGE)
+                        .unwrap_or(true);
+                if stale {
+                    let _ = fs::remove_file(ent.path());
+                }
+            }
+        }
+        let (mut entries, mut total) = self.scan();
+        entries.sort_by_key(|(_, _, mtime)| *mtime);
+        let mut reclaimed = 0u64;
+        let mut oldest_first = entries.into_iter();
+        while total > self.max_bytes {
+            let Some((path, len, _)) = oldest_first.next() else {
+                break;
+            };
+            if fs::remove_file(&path).is_ok() {
+                reclaimed = reclaimed.saturating_add(len);
+            }
+            // Subtract even on a racing removal: the bytes are gone.
+            total = total.saturating_sub(len);
+        }
+        self.used.store(total, Ordering::Relaxed);
+        Ok(reclaimed)
+    }
+
+    /// Exact usage snapshot (rescans the directory tree).
+    pub fn stats(&self) -> DiskCacheStats {
+        let mut stages = Vec::with_capacity(Stage::ALL.len());
+        let mut total_entries = 0u64;
+        let mut total_bytes = 0u64;
+        for stage in Stage::ALL {
+            let mut entries = 0u64;
+            let mut bytes = 0u64;
+            if let Ok(dir) = fs::read_dir(self.root.join(stage.dir())) {
+                for ent in dir.flatten() {
+                    let Ok(meta) = ent.metadata() else { continue };
+                    if meta.is_file() {
+                        entries += 1;
+                        bytes = bytes.saturating_add(meta.len());
+                    }
+                }
+            }
+            total_entries += entries;
+            total_bytes = total_bytes.saturating_add(bytes);
+            stages.push(StageUsage {
+                stage,
+                entries,
+                bytes,
+            });
+        }
+        DiskCacheStats {
+            stages,
+            total_entries,
+            total_bytes,
+            max_bytes: self.max_bytes,
+            root: self.root.clone(),
+        }
+    }
+}
+
+fn checksum(payload: &[u8]) -> u128 {
+    let mut h = StableHasher::new();
+    h.write_bytes(payload);
+    h.finish()
+}
+
+/// Validate an entry's header against what the reader expects; returns
+/// the payload slice on success.
+fn validate_entry(raw: &[u8], schema: u32, stage: Stage, key: u128) -> Result<&[u8]> {
+    let mut r = Reader::new(raw);
+    let magic = r.take(4)?;
+    anyhow::ensure!(magic == MAGIC, "bad magic");
+    let format = u32::get(&mut r)?;
+    anyhow::ensure!(format == FORMAT_VERSION, "format version {format}");
+    let got_schema = u32::get(&mut r)?;
+    anyhow::ensure!(got_schema == schema, "hash schema {got_schema}");
+    let tag = u8::get(&mut r)?;
+    anyhow::ensure!(tag == stage.tag(), "stage tag {tag}");
+    let got_key = u128::get(&mut r)?;
+    anyhow::ensure!(got_key == key, "key mismatch");
+    let len = u64::get(&mut r)?;
+    let sum = u128::get(&mut r)?;
+    anyhow::ensure!(len == r.remaining() as u64, "payload length mismatch");
+    let payload = r.take(len as usize)?;
+    anyhow::ensure!(checksum(payload) == sum, "checksum mismatch");
+    Ok(payload)
+}
+
+/// Refresh an entry's mtime so GC sees it as recently used. Best
+/// effort; on filesystems without mtime updates LRU degrades to FIFO.
+fn touch(path: &Path) {
+    if let Ok(f) = fs::File::options().write(true).open(path) {
+        let _ = f.set_modified(SystemTime::now());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ciminus-diskcache-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip_and_lru_touch() {
+        let dir = tmp_dir("roundtrip");
+        let store = DiskStore::open(&dir, 0).unwrap();
+        assert_eq!(store.get::<u64>(Stage::Sim, 7), None);
+        store.put(Stage::Sim, 7, &42u64);
+        assert_eq!(store.get::<u64>(Stage::Sim, 7), Some(42));
+        // A second open sees the same entry (cross-process behaviour).
+        let store2 = DiskStore::open(&dir, 0).unwrap();
+        assert_eq!(store2.get::<u64>(Stage::Sim, 7), Some(42));
+        // Same key under a different stage is distinct.
+        assert_eq!(store2.get::<u64>(Stage::Prune, 7), None);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn schema_bump_invalidates_everything() {
+        let dir = tmp_dir("schema");
+        let store = DiskStore::open_with_schema(&dir, 0, 1).unwrap();
+        store.put(Stage::Mapping, 9, &1234u64);
+        assert_eq!(store.get::<u64>(Stage::Mapping, 9), Some(1234));
+        let bumped = DiskStore::open_with_schema(&dir, 0, 2).unwrap();
+        assert_eq!(bumped.get::<u64>(Stage::Mapping, 9), None);
+        assert_eq!(bumped.stats().total_entries, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_entries_are_misses_and_deleted() {
+        let dir = tmp_dir("corrupt");
+        let store = DiskStore::open(&dir, 0).unwrap();
+        store.put(Stage::Profiles, 3, &String::from("payload-bytes"));
+        let path = store.entry_path(Stage::Profiles, 3);
+        // Flip one payload byte.
+        let mut raw = fs::read(&path).unwrap();
+        let last = raw.len() - 1;
+        raw[last] ^= 0x40;
+        fs::write(&path, &raw).unwrap();
+        assert_eq!(store.get::<String>(Stage::Profiles, 3), None);
+        assert!(!path.exists(), "corrupt entry is deleted");
+        // Torn trailing write (truncation).
+        store.put(Stage::Profiles, 3, &String::from("payload-bytes"));
+        let raw = fs::read(&path).unwrap();
+        fs::write(&path, &raw[..raw.len() / 2]).unwrap();
+        assert_eq!(store.get::<String>(Stage::Profiles, 3), None);
+        assert!(!path.exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_enforces_byte_bound() {
+        let dir = tmp_dir("gc");
+        // Tiny bound: every entry is ~100 bytes, so 3 entries overflow.
+        let store = DiskStore::open(&dir, 256).unwrap();
+        for k in 0..6u128 {
+            store.put(Stage::Sim, k, &vec![k as u64; 8]);
+        }
+        let _ = store.gc();
+        let stats = store.stats();
+        assert!(
+            stats.total_bytes <= 256,
+            "gc left {} bytes over the 256-byte bound",
+            stats.total_bytes
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_reports_per_stage_usage() {
+        let dir = tmp_dir("stats");
+        let store = DiskStore::open(&dir, 0).unwrap();
+        store.put(Stage::Prune, 1, &1u64);
+        store.put(Stage::Sim, 1, &2u64);
+        store.put(Stage::Sim, 2, &3u64);
+        let s = store.stats();
+        assert_eq!(s.total_entries, 3);
+        let sim = s.stages.iter().find(|u| u.stage == Stage::Sim).unwrap();
+        assert_eq!(sim.entries, 2);
+        assert!(s.total_bytes > 0 && s.max_bytes == DEFAULT_CACHE_BYTES);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

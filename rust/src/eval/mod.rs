@@ -25,7 +25,9 @@
 #![warn(clippy::unwrap_used)]
 
 pub mod cache;
+pub mod diskcache;
 pub mod hash;
+pub mod serial;
 
 use crate::hw::arch::Architecture;
 use crate::mapping::planner::{plan_prevalidated, MappingOptions, MappingPlan};
@@ -34,8 +36,11 @@ use crate::sim::engine::{simulate, SimOptions};
 use crate::sim::input_sparsity::InputProfiles;
 use crate::sim::report::{CacheNote, SimReport};
 use crate::sparsity::flexblock::FlexBlock;
+use crate::util::json::Json;
 use crate::workload::graph::Network;
-use cache::{Cache, StageStats};
+use cache::{Cache, StageHit, StageStats};
+use diskcache::{DiskStore, Stage};
+use serial::Persist;
 use std::collections::BTreeSet;
 use std::fmt;
 use std::sync::{Arc, Mutex};
@@ -200,6 +205,11 @@ impl EvalStats {
         self.prune.hits + self.mapping.hits + self.profiles.hits + self.sim.hits
     }
 
+    pub fn total_disk_hits(&self) -> u64 {
+        self.prune.disk_hits + self.mapping.disk_hits + self.profiles.disk_hits
+            + self.sim.disk_hits
+    }
+
     pub fn total_misses(&self) -> u64 {
         self.prune.misses + self.mapping.misses + self.profiles.misses + self.sim.misses
     }
@@ -207,21 +217,73 @@ impl EvalStats {
     pub fn total_evictions(&self) -> u64 {
         self.prune.evictions + self.mapping.evictions + self.profiles.evictions + self.sim.evictions
     }
+
+    /// Fold another evaluator's counters into this one (worker →
+    /// supervisor aggregation).
+    pub fn merge(&mut self, other: &EvalStats) {
+        self.prune.merge(&other.prune);
+        self.mapping.merge(&other.mapping);
+        self.profiles.merge(&other.profiles);
+        self.sim.merge(&other.sim);
+    }
+
+    /// JSON shape carried on the worker protocol's `done` frame.
+    pub fn to_json(&self) -> Json {
+        fn stage(s: &StageStats) -> Json {
+            Json::from_pairs(vec![
+                ("hits", Json::Num(s.hits as f64)),
+                ("disk_hits", Json::Num(s.disk_hits as f64)),
+                ("misses", Json::Num(s.misses as f64)),
+                ("evictions", Json::Num(s.evictions as f64)),
+            ])
+        }
+        Json::from_pairs(vec![
+            ("prune", stage(&self.prune)),
+            ("mapping", stage(&self.mapping)),
+            ("profiles", stage(&self.profiles)),
+            ("sim", stage(&self.sim)),
+        ])
+    }
+
+    /// Lenient inverse of [`EvalStats::to_json`]: missing fields read
+    /// as zero, so frames from an older worker still aggregate.
+    pub fn from_json(j: &Json) -> EvalStats {
+        fn stage(j: Option<&Json>) -> StageStats {
+            let Some(j) = j else {
+                return StageStats::default();
+            };
+            StageStats {
+                hits: j.opt_f64("hits", 0.0) as u64,
+                disk_hits: j.opt_f64("disk_hits", 0.0) as u64,
+                misses: j.opt_f64("misses", 0.0) as u64,
+                evictions: j.opt_f64("evictions", 0.0) as u64,
+            }
+        }
+        EvalStats {
+            prune: stage(j.get("prune")),
+            mapping: stage(j.get("mapping")),
+            profiles: stage(j.get("profiles")),
+            sim: stage(j.get("sim")),
+        }
+    }
 }
 
 impl fmt::Display for EvalStats {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "prune {}/{} | mapping {}/{} | profiles {}/{} | sim {}/{} (hits/lookups), {} evicted",
-            self.prune.hits,
+            "prune {}/{} | mapping {}/{} | profiles {}/{} | sim {}/{} (hits/lookups), \
+             {} disk hits, {} replans, {} evicted",
+            self.prune.hits + self.prune.disk_hits,
             self.prune.lookups(),
-            self.mapping.hits,
+            self.mapping.hits + self.mapping.disk_hits,
             self.mapping.lookups(),
-            self.profiles.hits,
+            self.profiles.hits + self.profiles.disk_hits,
             self.profiles.lookups(),
-            self.sim.hits,
+            self.sim.hits + self.sim.disk_hits,
             self.sim.lookups(),
+            self.total_disk_hits(),
+            self.mapping.misses,
             self.total_evictions(),
         )
     }
@@ -240,6 +302,9 @@ pub struct Evaluator {
     mapping: Cache<MappingPlan>,
     profiles: Cache<InputProfiles>,
     sim: Cache<SimReport>,
+    /// Shared cross-process store; stages spill fresh artifacts here
+    /// and restore from it on in-memory misses (docs/eval-pipeline.md).
+    disk: Option<Arc<DiskStore>>,
     /// Content hashes of architectures already validated — the
     /// `arch.validate()` that used to run on every `plan()`/`simulate()`
     /// call is hoisted here and paid once per distinct architecture.
@@ -253,12 +318,45 @@ impl Evaluator {
 
     /// Evaluator with a custom per-stage cache capacity.
     pub fn with_capacity(capacity: usize) -> Self {
+        Self::with_capacity_and_disk(capacity, None)
+    }
+
+    /// Evaluator backed by a persistent disk store (`--cache-dir`).
+    pub fn with_disk(disk: Arc<DiskStore>) -> Self {
+        Self::with_capacity_and_disk(DEFAULT_CACHE_CAPACITY, Some(disk))
+    }
+
+    fn with_capacity_and_disk(capacity: usize, disk: Option<Arc<DiskStore>>) -> Self {
         Self {
             prune: Cache::new(capacity),
             mapping: Cache::new(capacity),
             profiles: Cache::new(capacity),
             sim: Cache::new(capacity),
+            disk,
             validated: Mutex::new(BTreeSet::new()),
+        }
+    }
+
+    /// The disk store backing this evaluator, if any.
+    pub fn disk(&self) -> Option<&Arc<DiskStore>> {
+        self.disk.as_ref()
+    }
+
+    /// Fold a worker process's counters into this evaluator's totals.
+    pub fn absorb(&self, stats: &EvalStats) {
+        self.prune.absorb(&stats.prune);
+        self.mapping.absorb(&stats.mapping);
+        self.profiles.absorb(&stats.profiles);
+        self.sim.absorb(&stats.sim);
+    }
+
+    fn disk_get<T: Persist>(&self, stage: Stage, key: u128) -> Option<T> {
+        self.disk.as_ref().and_then(|d| d.get(stage, key))
+    }
+
+    fn disk_put<T: Persist>(&self, stage: Stage, key: u128, value: &T) {
+        if let Some(d) = &self.disk {
+            d.put(stage, key, value);
         }
     }
 
@@ -279,22 +377,25 @@ impl Evaluator {
     }
 
     /// Prune stage. Returns the plan (None for dense scenarios) and
-    /// whether it came from cache (None when the stage did not run:
-    /// dense, or an externally provided plan).
+    /// where it came from (None when the stage did not run: dense, or
+    /// an externally provided plan).
     fn prune_stage(
         &self,
         s: &Scenario,
         keys: &Keys,
-    ) -> anyhow::Result<(Option<Arc<PrunePlan>>, Option<bool>)> {
+    ) -> anyhow::Result<(Option<Arc<PrunePlan>>, Option<StageHit>)> {
         match &s.prune {
             PruneSpec::None => Ok((None, None)),
             PruneSpec::Provided(p) => Ok((Some(p.clone()), None)),
             PruneSpec::Uniform { fb, workflow } => {
                 let key = keys.prune.unwrap_or(0);
                 let (net, fb, wf) = (s.net.clone(), fb.clone(), workflow.clone());
-                let (v, hit) = self
-                    .prune
-                    .get_or_try(key, move || wf.run_uniform(&net, &fb, None))?;
+                let (v, hit) = self.prune.get_or_restore(
+                    key,
+                    || self.disk_get(Stage::Prune, key),
+                    |p| self.disk_put(Stage::Prune, key, p),
+                    move || wf.run_uniform(&net, &fb, None),
+                )?;
                 Ok((Some(v), Some(hit)))
             }
         }
@@ -307,14 +408,18 @@ impl Evaluator {
         s: &Scenario,
         keys: &Keys,
         prune: Option<Arc<PrunePlan>>,
-    ) -> anyhow::Result<(Arc<MappingPlan>, bool)> {
+    ) -> anyhow::Result<(Arc<MappingPlan>, StageHit)> {
         self.ensure_valid(&s.arch, keys.arch)?;
         let arch = s.arch.clone();
         let net = s.net.clone();
         let opts = s.mapping;
-        self.mapping.get_or_try(keys.mapping, move || {
-            plan_prevalidated(&arch, &net, prune.as_deref(), opts)
-        })
+        let key = keys.mapping;
+        self.mapping.get_or_restore(
+            key,
+            || self.disk_get(Stage::Mapping, key),
+            |p| self.disk_put(Stage::Mapping, key, p),
+            move || plan_prevalidated(&arch, &net, prune.as_deref(), opts),
+        )
     }
 
     /// Profile stage. Hit flag is None when the stage did not run
@@ -323,7 +428,7 @@ impl Evaluator {
         &self,
         s: &Scenario,
         keys: &Keys,
-    ) -> anyhow::Result<(Option<Arc<InputProfiles>>, Option<bool>)> {
+    ) -> anyhow::Result<(Option<Arc<InputProfiles>>, Option<StageHit>)> {
         match &s.profiles {
             ProfileSpec::None => Ok((None, None)),
             ProfileSpec::Provided(p) => Ok((Some(p.clone()), None)),
@@ -334,9 +439,12 @@ impl Evaluator {
             } => {
                 let key = keys.profiles.unwrap_or(0);
                 let (net, bits, zero_frac, seed) = (s.net.clone(), *bits, *zero_frac, *seed);
-                let (v, hit) = self.profiles.get_or_try(key, move || {
-                    Ok(InputProfiles::synthetic(&net, bits, zero_frac, seed))
-                })?;
+                let (v, hit) = self.profiles.get_or_restore(
+                    key,
+                    || self.disk_get(Stage::Profiles, key),
+                    |p| self.disk_put(Stage::Profiles, key, p),
+                    move || Ok(InputProfiles::synthetic(&net, bits, zero_frac, seed)),
+                )?;
                 Ok((Some(v), Some(hit)))
             }
         }
@@ -384,9 +492,12 @@ impl Evaluator {
         let arch = s.arch.clone();
         let net = s.net.clone();
         let opts = s.sim;
-        let (rep, sim_hit) = self.sim.get_or_try(sim_key, move || {
-            simulate(&arch, &net, &mapping, profiles.as_deref(), opts)
-        })?;
+        let (rep, sim_hit) = self.sim.get_or_restore(
+            sim_key,
+            || self.disk_get(Stage::Sim, sim_key),
+            |r| self.disk_put(Stage::Sim, sim_key, r),
+            move || simulate(&arch, &net, &mapping, profiles.as_deref(), opts),
+        )?;
         let mut out = (*rep).clone();
         out.cache = Some(CacheNote {
             prune_hit,
@@ -427,6 +538,15 @@ impl EvalCtx {
     pub fn new(sim: SimOptions) -> Self {
         Self {
             evaluator: Arc::new(Evaluator::new()),
+            sim,
+        }
+    }
+
+    /// Context whose evaluator spills to / restores from a shared
+    /// disk store (`--cache-dir`).
+    pub fn with_disk(sim: SimOptions, disk: Arc<DiskStore>) -> Self {
+        Self {
+            evaluator: Arc::new(Evaluator::with_disk(disk)),
             sim,
         }
     }

@@ -1,0 +1,734 @@
+//! Hand-rolled binary codec for the pipeline's cached artifacts.
+//!
+//! The disk cache (`eval::diskcache`) persists stage outputs — prune
+//! plans, mapping plans, input profiles, sim reports — across
+//! processes. The crate has no serde dependency, so each artifact type
+//! implements [`Persist`]: a flat little-endian encoding with no
+//! self-description. That is safe because entries are only ever read
+//! back under the exact content-hash key that produced them *and* the
+//! store segregates by [`crate::eval::hash::HASH_SCHEMA_VERSION`] and
+//! its own format version; any layout change must bump one of those.
+//! Decoding is paranoid anyway — every length is bounds-checked and
+//! every enum tag validated — because a torn or corrupted file must
+//! surface as an error (→ cache miss), never as a panic or a subtly
+//! wrong artifact.
+
+use crate::hw::units::UnitKind;
+use crate::mapping::duplication::Strategy;
+use crate::mapping::loopnest::{Binding, Loop, LoopAxis, Loopnest};
+use crate::mapping::planner::{FaultPlanSummary, MappingPlan, OpMapping};
+use crate::mapping::tiling::{MacroTile, OpTiling, Round};
+use crate::pruning::workflow::{LayerPrune, PrunePlan};
+use crate::sim::access::Counters;
+use crate::sim::energy::EnergyBreakdown;
+use crate::sim::input_sparsity::{ActivationProfile, InputProfiles};
+use crate::sim::report::{OpReport, SimReport};
+use crate::sparsity::compress::CompressedLayout;
+use crate::sparsity::flexblock::FlexBlock;
+use crate::sparsity::index::IndexStorage;
+use crate::sparsity::mask::LayerCtx;
+use crate::sparsity::pattern::{BlockPattern, Dim, PatternKind};
+use crate::util::bits::{BitMatrix, BitVec};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+
+/// Bounds-checked cursor over a decode buffer.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// The next `n` bytes, or an error on a short (torn) buffer.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "truncated artifact: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Error unless the buffer was consumed exactly.
+    pub fn done(&self) -> Result<()> {
+        ensure!(
+            self.remaining() == 0,
+            "artifact has {} trailing bytes",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+/// Flat binary encoding for one artifact type. `put` is infallible
+/// (appends to a growable buffer); `get` must reject any byte sequence
+/// it did not itself produce.
+pub trait Persist: Sized {
+    fn put(&self, w: &mut Vec<u8>);
+    fn get(r: &mut Reader<'_>) -> Result<Self>;
+}
+
+/// Serialize a value to a standalone byte buffer.
+pub fn encode<T: Persist>(v: &T) -> Vec<u8> {
+    let mut w = Vec::new();
+    v.put(&mut w);
+    w
+}
+
+/// Deserialize a value, requiring the buffer to be consumed exactly.
+pub fn decode<T: Persist>(buf: &[u8]) -> Result<T> {
+    let mut r = Reader::new(buf);
+    let v = T::get(&mut r)?;
+    r.done()?;
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------
+// Primitives
+// ---------------------------------------------------------------------
+
+macro_rules! persist_int {
+    ($($ty:ty),+) => {$(
+        impl Persist for $ty {
+            fn put(&self, w: &mut Vec<u8>) {
+                w.extend_from_slice(&self.to_le_bytes());
+            }
+            fn get(r: &mut Reader<'_>) -> Result<Self> {
+                let n = std::mem::size_of::<$ty>();
+                let mut b = [0u8; std::mem::size_of::<$ty>()];
+                b.copy_from_slice(r.take(n)?);
+                Ok(<$ty>::from_le_bytes(b))
+            }
+        }
+    )+};
+}
+
+persist_int!(u8, u32, u64, u128);
+
+impl Persist for usize {
+    fn put(&self, w: &mut Vec<u8>) {
+        (*self as u64).put(w);
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        let v = u64::get(r)?;
+        usize::try_from(v).context("usize overflow in artifact")
+    }
+}
+
+impl Persist for f64 {
+    // Bit-exact roundtrip (NaN payloads, signed zero): the golden suite
+    // asserts content digests over `Debug` renderings, so the decoded
+    // value must be *the same bits*, not merely numerically close.
+    fn put(&self, w: &mut Vec<u8>) {
+        self.to_bits().put(w);
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(f64::from_bits(u64::get(r)?))
+    }
+}
+
+impl Persist for bool {
+    fn put(&self, w: &mut Vec<u8>) {
+        w.push(u8::from(*self));
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        match u8::get(r)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            t => bail!("invalid bool tag {t}"),
+        }
+    }
+}
+
+impl Persist for String {
+    fn put(&self, w: &mut Vec<u8>) {
+        self.len().put(w);
+        w.extend_from_slice(self.as_bytes());
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        let n = usize::get(r)?;
+        let bytes = r.take(n)?;
+        String::from_utf8(bytes.to_vec()).context("invalid UTF-8 in artifact string")
+    }
+}
+
+impl<T: Persist> Persist for Vec<T> {
+    fn put(&self, w: &mut Vec<u8>) {
+        self.len().put(w);
+        for v in self {
+            v.put(w);
+        }
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        let n = usize::get(r)?;
+        // Every element encodes to >= 1 byte, so a length exceeding the
+        // remaining buffer is corrupt — reject before reserving memory.
+        ensure!(n <= r.remaining(), "vector length {n} exceeds buffer");
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(T::get(r)?);
+        }
+        Ok(out)
+    }
+}
+
+impl<T: Persist> Persist for Option<T> {
+    fn put(&self, w: &mut Vec<u8>) {
+        match self {
+            None => w.push(0),
+            Some(v) => {
+                w.push(1);
+                v.put(w);
+            }
+        }
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        match u8::get(r)? {
+            0 => Ok(None),
+            1 => Ok(Some(T::get(r)?)),
+            t => bail!("invalid option tag {t}"),
+        }
+    }
+}
+
+impl<K: Persist + Ord, V: Persist> Persist for BTreeMap<K, V> {
+    fn put(&self, w: &mut Vec<u8>) {
+        self.len().put(w);
+        for (k, v) in self {
+            k.put(w);
+            v.put(w);
+        }
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        let n = usize::get(r)?;
+        ensure!(n <= r.remaining(), "map length {n} exceeds buffer");
+        let mut out = BTreeMap::new();
+        for _ in 0..n {
+            let k = K::get(r)?;
+            let v = V::get(r)?;
+            ensure!(out.insert(k, v).is_none(), "duplicate map key in artifact");
+        }
+        Ok(out)
+    }
+}
+
+impl<A: Persist, B: Persist> Persist for (A, B) {
+    fn put(&self, w: &mut Vec<u8>) {
+        self.0.put(w);
+        self.1.put(w);
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        Ok((A::get(r)?, B::get(r)?))
+    }
+}
+
+impl<A: Persist, B: Persist, C: Persist> Persist for (A, B, C) {
+    fn put(&self, w: &mut Vec<u8>) {
+        self.0.put(w);
+        self.1.put(w);
+        self.2.put(w);
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        Ok((A::get(r)?, B::get(r)?, C::get(r)?))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bit containers
+// ---------------------------------------------------------------------
+
+impl Persist for BitVec {
+    fn put(&self, w: &mut Vec<u8>) {
+        self.len().put(w);
+        self.words().to_vec().put(w);
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        let len = usize::get(r)?;
+        let words = Vec::<u64>::get(r)?;
+        BitVec::from_raw(len, words)
+    }
+}
+
+impl Persist for BitMatrix {
+    fn put(&self, w: &mut Vec<u8>) {
+        self.rows().put(w);
+        self.cols().put(w);
+        self.bit_vec().put(w);
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        let rows = usize::get(r)?;
+        let cols = usize::get(r)?;
+        let bits = BitVec::get(r)?;
+        BitMatrix::from_raw(rows, cols, bits)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Enums (explicit u8 tags; adding a variant requires a new tag at the
+// end plus a HASH_SCHEMA_VERSION or FORMAT_VERSION bump)
+// ---------------------------------------------------------------------
+
+impl Persist for Dim {
+    fn put(&self, w: &mut Vec<u8>) {
+        match self {
+            Dim::Fixed(n) => {
+                w.push(0);
+                n.put(w);
+            }
+            Dim::Full => w.push(1),
+            Dim::PerChannel => w.push(2),
+        }
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        match u8::get(r)? {
+            0 => Ok(Dim::Fixed(usize::get(r)?)),
+            1 => Ok(Dim::Full),
+            2 => Ok(Dim::PerChannel),
+            t => bail!("invalid Dim tag {t}"),
+        }
+    }
+}
+
+impl Persist for PatternKind {
+    fn put(&self, w: &mut Vec<u8>) {
+        w.push(match self {
+            PatternKind::FullBlock => 0,
+            PatternKind::IntraBlock => 1,
+        });
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        match u8::get(r)? {
+            0 => Ok(PatternKind::FullBlock),
+            1 => Ok(PatternKind::IntraBlock),
+            t => bail!("invalid PatternKind tag {t}"),
+        }
+    }
+}
+
+impl Persist for Strategy {
+    fn put(&self, w: &mut Vec<u8>) {
+        w.push(match self {
+            Strategy::Spatial => 0,
+            Strategy::Duplicate => 1,
+        });
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        match u8::get(r)? {
+            0 => Ok(Strategy::Spatial),
+            1 => Ok(Strategy::Duplicate),
+            t => bail!("invalid Strategy tag {t}"),
+        }
+    }
+}
+
+impl Persist for LoopAxis {
+    fn put(&self, w: &mut Vec<u8>) {
+        w.push(match self {
+            LoopAxis::RowTile => 0,
+            LoopAxis::ColTile => 1,
+            LoopAxis::Vector => 2,
+            LoopAxis::Bit => 3,
+            LoopAxis::Group => 4,
+        });
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        match u8::get(r)? {
+            0 => Ok(LoopAxis::RowTile),
+            1 => Ok(LoopAxis::ColTile),
+            2 => Ok(LoopAxis::Vector),
+            3 => Ok(LoopAxis::Bit),
+            4 => Ok(LoopAxis::Group),
+            t => bail!("invalid LoopAxis tag {t}"),
+        }
+    }
+}
+
+impl Persist for Binding {
+    fn put(&self, w: &mut Vec<u8>) {
+        match self {
+            Binding::Temporal => w.push(0),
+            Binding::Spatial { dim } => {
+                w.push(1);
+                dim.put(w);
+            }
+        }
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        match u8::get(r)? {
+            0 => Ok(Binding::Temporal),
+            1 => Ok(Binding::Spatial {
+                dim: usize::get(r)?,
+            }),
+            t => bail!("invalid Binding tag {t}"),
+        }
+    }
+}
+
+impl Persist for UnitKind {
+    fn put(&self, w: &mut Vec<u8>) {
+        w.push(match self {
+            UnitKind::CimArray => 0,
+            UnitKind::AdderTree => 1,
+            UnitKind::ShiftAdd => 2,
+            UnitKind::Accumulator => 3,
+            UnitKind::PreProc => 4,
+            UnitKind::ZeroDetect => 5,
+            UnitKind::Mux => 6,
+            UnitKind::PostProc => 7,
+            UnitKind::IndexMem => 8,
+            UnitKind::GlobalInBuf => 9,
+            UnitKind::GlobalOutBuf => 10,
+            UnitKind::WeightBuf => 11,
+            UnitKind::LocalBuf => 12,
+        });
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        match u8::get(r)? {
+            0 => Ok(UnitKind::CimArray),
+            1 => Ok(UnitKind::AdderTree),
+            2 => Ok(UnitKind::ShiftAdd),
+            3 => Ok(UnitKind::Accumulator),
+            4 => Ok(UnitKind::PreProc),
+            5 => Ok(UnitKind::ZeroDetect),
+            6 => Ok(UnitKind::Mux),
+            7 => Ok(UnitKind::PostProc),
+            8 => Ok(UnitKind::IndexMem),
+            9 => Ok(UnitKind::GlobalInBuf),
+            10 => Ok(UnitKind::GlobalOutBuf),
+            11 => Ok(UnitKind::WeightBuf),
+            12 => Ok(UnitKind::LocalBuf),
+            t => bail!("invalid UnitKind tag {t}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Artifact structs (field lists must stay exhaustive — a new field
+// silently defaulting would poison cross-process determinism)
+// ---------------------------------------------------------------------
+
+macro_rules! persist_struct {
+    ($ty:ty { $($field:ident),+ $(,)? }) => {
+        impl Persist for $ty {
+            fn put(&self, w: &mut Vec<u8>) {
+                $(self.$field.put(w);)+
+            }
+            fn get(r: &mut Reader<'_>) -> Result<Self> {
+                Ok(Self { $($field: Persist::get(r)?),+ })
+            }
+        }
+    };
+}
+
+persist_struct!(BlockPattern { kind, m, n, ratio, pattern_set });
+persist_struct!(FlexBlock { patterns, name });
+persist_struct!(LayerCtx { per_channel });
+persist_struct!(LayerPrune { fb, mask, ctx });
+persist_struct!(PrunePlan { layers });
+
+persist_struct!(MvmDims { rows, cols, n_vectors, groups });
+persist_struct!(CompressedLayout {
+    orig_rows,
+    orig_cols,
+    comp_rows,
+    comp_cols,
+    row_lengths,
+    broadcast,
+    nnz,
+    block_index_count,
+    elem_index_count,
+    misaligned_cols,
+    routed_rows,
+});
+persist_struct!(IndexStorage {
+    block_index_bits,
+    elem_index_bits,
+    n_block_indices,
+    n_elem_indices,
+});
+persist_struct!(MacroTile { rows_used, cols_used, occupied });
+persist_struct!(Round {
+    tiles,
+    vectors_per_macro,
+    weight_bytes,
+    outputs,
+    input_rows,
+});
+persist_struct!(OpTiling {
+    tiles_r,
+    tiles_c,
+    rounds,
+    utilization,
+    groups_per_tile,
+});
+persist_struct!(Loop { axis, trips, binding });
+persist_struct!(Loopnest { loops });
+persist_struct!(OpMapping {
+    op,
+    name,
+    dims,
+    fb,
+    layout,
+    tiling,
+    strategy,
+    index,
+    rearrange_moved_bytes,
+    fault_moved_bytes,
+    loopnest,
+});
+persist_struct!(FaultPlanSummary {
+    total_macros,
+    usable_macros,
+    full_geometry,
+    effective_geometry,
+    capacity_loss,
+    repair_fraction,
+    baseline_rounds,
+    degraded_rounds,
+    repair_bytes,
+});
+persist_struct!(MappingPlan { arch_name, ops, faults });
+
+persist_struct!(ActivationProfile { bit_zero_prob });
+persist_struct!(InputProfiles { per_layer, fallback });
+
+persist_struct!(EnergyBreakdown {
+    dynamic_pj,
+    static_pj,
+    total_pj,
+});
+persist_struct!(Counters {
+    compute,
+    mem_reads,
+    mem_writes,
+});
+persist_struct!(OpReport {
+    op,
+    name,
+    kind,
+    rounds,
+    cycles,
+    utilization,
+    eff_bits,
+    macs,
+});
+
+impl Persist for SimReport {
+    // The cache-provenance note is deliberately NOT persisted: it
+    // records how *this process* produced the report, which is
+    // meaningless to a different process restoring the artifact.
+    // `Evaluator::evaluate` stamps a fresh note on every returned
+    // clone, and `content_digest` scrubs it, so cached and fresh
+    // evaluations stay bit-identical.
+    fn put(&self, w: &mut Vec<u8>) {
+        self.arch.put(w);
+        self.network.put(w);
+        self.sparsity_label.put(w);
+        self.total_cycles.put(w);
+        self.latency_us.put(w);
+        self.energy.put(w);
+        self.counters.put(w);
+        self.ops.put(w);
+        self.mean_utilization.put(w);
+        self.mean_skip_ratio.put(w);
+        self.index_bytes.put(w);
+        self.stage_totals.put(w);
+        self.faults.put(w);
+    }
+    fn get(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(SimReport {
+            arch: Persist::get(r)?,
+            network: Persist::get(r)?,
+            sparsity_label: Persist::get(r)?,
+            total_cycles: Persist::get(r)?,
+            latency_us: Persist::get(r)?,
+            energy: Persist::get(r)?,
+            counters: Persist::get(r)?,
+            ops: Persist::get(r)?,
+            mean_utilization: Persist::get(r)?,
+            mean_skip_ratio: Persist::get(r)?,
+            index_bytes: Persist::get(r)?,
+            stage_totals: Persist::get(r)?,
+            faults: Persist::get(r)?,
+            cache: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+    use super::*;
+
+    fn roundtrip<T: Persist + std::fmt::Debug + PartialEq>(v: T) {
+        let bytes = encode(&v);
+        let back: T = decode(&bytes).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        roundtrip(0u8);
+        roundtrip(u32::MAX);
+        roundtrip(u64::MAX);
+        roundtrip(u128::MAX);
+        roundtrip(usize::MAX);
+        roundtrip(true);
+        roundtrip(f64::NEG_INFINITY);
+        roundtrip(-0.0f64);
+        roundtrip(String::from("héllo"));
+        roundtrip(vec![1u64, 2, 3]);
+        roundtrip(Option::<u64>::None);
+        roundtrip(Some(7u64));
+        roundtrip((1usize, 2u64, 3.5f64));
+        let mut m = BTreeMap::new();
+        m.insert(3usize, 9u64);
+        m.insert(1usize, 4u64);
+        roundtrip(m);
+    }
+
+    #[test]
+    fn f64_roundtrip_is_bit_exact() {
+        let v = f64::from_bits(0x7ff8_0000_dead_beef); // NaN with payload
+        let back: f64 = decode(&encode(&v)).unwrap();
+        assert_eq!(back.to_bits(), v.to_bits());
+    }
+
+    #[test]
+    fn truncated_buffer_is_an_error() {
+        let bytes = encode(&String::from("abcdef"));
+        for cut in 0..bytes.len() {
+            assert!(
+                decode::<String>(&bytes[..cut]).is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_an_error() {
+        let mut bytes = encode(&42u64);
+        bytes.push(0);
+        assert!(decode::<u64>(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_enum_tags_are_errors_not_panics() {
+        assert!(decode::<bool>(&[2]).is_err());
+        assert!(decode::<Option<u8>>(&[9, 0]).is_err());
+        assert!(decode::<UnitKind>(&[13]).is_err());
+        assert!(decode::<Dim>(&[3]).is_err());
+    }
+
+    #[test]
+    fn absurd_vector_length_is_rejected_without_allocation() {
+        let bytes = encode(&u64::MAX); // "length" far beyond the buffer
+        assert!(decode::<Vec<u64>>(&bytes).is_err());
+    }
+
+    #[test]
+    fn bit_containers_roundtrip_and_validate() {
+        let mut m = BitMatrix::zeros(5, 7);
+        m.set(0, 0, true);
+        m.set(4, 6, true);
+        m.set(2, 3, true);
+        let bytes = encode(&m);
+        let back: BitMatrix = decode(&bytes).unwrap();
+        assert_eq!(back.rows(), 5);
+        assert_eq!(back.cols(), 7);
+        assert_eq!(back.count_ones(), 3);
+        assert!(back.get(4, 6));
+
+        // A stray bit beyond `len` (torn/bit-flipped file) must be
+        // rejected by BitVec::from_raw, not silently accepted.
+        assert!(BitVec::from_raw(3, vec![0b1000]).is_err());
+        assert!(BitVec::from_raw(3, vec![]).is_err());
+        assert!(BitMatrix::from_raw(2, 3, BitVec::zeros(5)).is_err());
+    }
+
+    #[test]
+    fn sim_report_roundtrips_with_identical_content_digest() {
+        let mut dynamic_pj = BTreeMap::new();
+        dynamic_pj.insert(UnitKind::CimArray, 12.5);
+        dynamic_pj.insert(UnitKind::PostProc, 0.125);
+        let energy = EnergyBreakdown {
+            dynamic_pj,
+            static_pj: 3.0,
+            total_pj: 15.625,
+        };
+        let mut counters = Counters::new();
+        counters.compute.insert(UnitKind::CimArray, 1000);
+        counters.mem_reads.insert(UnitKind::WeightBuf, 17);
+        let rep = SimReport {
+            arch: "usecase".into(),
+            network: "net".into(),
+            sparsity_label: "Dense".into(),
+            total_cycles: 123_456,
+            latency_us: 0.625,
+            energy,
+            counters,
+            ops: vec![OpReport {
+                op: 0,
+                name: "conv1".into(),
+                kind: "Conv".into(),
+                rounds: 4,
+                cycles: 999,
+                utilization: 0.75,
+                eff_bits: 5.5,
+                macs: 1 << 20,
+            }],
+            mean_utilization: 0.75,
+            mean_skip_ratio: 0.25,
+            index_bytes: 2048,
+            stage_totals: (10, 20, 30),
+            faults: Some(FaultPlanSummary {
+                total_macros: 4,
+                usable_macros: 3,
+                full_geometry: (128, 128),
+                effective_geometry: (112, 128),
+                capacity_loss: 0.125,
+                repair_fraction: 0.0,
+                baseline_rounds: 10,
+                degraded_rounds: 12,
+                repair_bytes: 256,
+            }),
+            cache: None,
+        };
+        let back: SimReport = decode(&encode(&rep)).unwrap();
+        assert_eq!(back.content_digest(), rep.content_digest());
+        assert_eq!(back.total_cycles, rep.total_cycles);
+        assert!(back.cache.is_none());
+    }
+
+    #[test]
+    fn prune_plan_roundtrips() {
+        let mut mask = BitMatrix::ones(8, 16);
+        mask.set(3, 5, false);
+        let mut layers = BTreeMap::new();
+        layers.insert(
+            2usize,
+            LayerPrune {
+                fb: FlexBlock::hybrid(2, 16, 0.8),
+                mask,
+                ctx: LayerCtx { per_channel: 9 },
+            },
+        );
+        let plan = PrunePlan { layers };
+        let back: PrunePlan = decode(&encode(&plan)).unwrap();
+        assert_eq!(
+            crate::eval::hash::fingerprint("p", &back),
+            crate::eval::hash::fingerprint("p", &plan)
+        );
+    }
+}

@@ -195,6 +195,20 @@ impl fmt::Debug for ProgressHook {
     }
 }
 
+/// Receives the aggregated artifact-cache counters that process-mode
+/// workers report on their `done` frames, so the supervisor's summary
+/// reflects the whole sweep instead of losing them when workers exit.
+/// Wrapped like [`ProgressHook`] so `SweepConfig` keeps deriving
+/// `Debug`/`Clone`.
+#[derive(Clone)]
+pub struct StatsHook(pub Arc<dyn Fn(&crate::eval::EvalStats) + Send + Sync>);
+
+impl fmt::Debug for StatsHook {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("StatsHook(..)")
+    }
+}
+
 /// Execution policy for a sweep. `Default` reproduces the historical
 /// behavior (all cores, no timeout, no retries, no checkpoint) except
 /// that panics are captured instead of aborting the process.
@@ -230,6 +244,15 @@ pub struct SweepConfig {
     pub key_filter: Option<BTreeSet<String>>,
     /// Per-job progress callback (process-mode workers stream frames).
     pub progress: Option<ProgressHook>,
+    /// Shared disk-backed artifact store (`--cache-dir`). Forwarded to
+    /// process-mode workers over the header frame so every shard hits
+    /// one store.
+    pub cache_dir: Option<PathBuf>,
+    /// Byte bound for the disk store; 0 = the store's default.
+    pub cache_bytes: u64,
+    /// Callback invoked by the process-mode supervisor with the merged
+    /// worker cache counters after the shards drain.
+    pub worker_stats: Option<StatsHook>,
 }
 
 impl Default for SweepConfig {
@@ -248,6 +271,9 @@ impl Default for SweepConfig {
             task: None,
             key_filter: None,
             progress: None,
+            cache_dir: None,
+            cache_bytes: 0,
+            worker_stats: None,
         }
     }
 }

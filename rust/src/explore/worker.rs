@@ -30,7 +30,8 @@ use super::executor::{
     lock, Codec, IsolationMode, JobError, JobOutcome, Journal, ProgressEvent, ProgressHook,
     SweepConfig, SweepReport, TaskSpec,
 };
-use crate::eval::EvalCtx;
+use crate::eval::diskcache::DiskStore;
+use crate::eval::{EvalCtx, EvalStats};
 use crate::sim::engine::SimOptions;
 use crate::util::json::Json;
 use crate::workload::{graph::Network, zoo};
@@ -135,6 +136,9 @@ struct ShardState {
     failures: AtomicUsize,
     abort: AtomicBool,
     max_failures: Option<usize>,
+    /// Artifact-cache counters reported by workers on their `done`
+    /// frames, merged across shards and respawns.
+    worker_stats: Mutex<EvalStats>,
 }
 
 impl ShardState {
@@ -181,6 +185,12 @@ fn header_for(task: &TaskSpec, cfg: &SweepConfig, shard: usize, journal: &Path) 
         "backoff_cap_ms",
         Json::Num(cfg.backoff_cap.as_millis() as f64),
     );
+    if let Some(dir) = &cfg.cache_dir {
+        // all shards open the same store: entries are content-addressed
+        // and published atomically, so concurrent writers are safe
+        h.set("cache_dir", Json::Str(dir.display().to_string()));
+        h.set("cache_bytes", Json::Num(cfg.cache_bytes as f64));
+    }
     h
 }
 
@@ -236,6 +246,7 @@ pub(crate) fn supervise<R>(
         failures: AtomicUsize::new(0),
         abort: AtomicBool::new(false),
         max_failures: cfg.max_failures,
+        worker_stats: Mutex::new(EvalStats::default()),
     });
 
     let mut managers = Vec::new();
@@ -255,6 +266,13 @@ pub(crate) fn supervise<R>(
     }
     for m in managers {
         let _ = m.join();
+    }
+
+    // hand the merged worker cache counters back to the caller so the
+    // summary line reflects the whole sweep, not just the supervisor
+    if let Some(hook) = &cfg.worker_stats {
+        let ws = *lock(&state.worker_stats);
+        hook.0(&ws);
     }
 
     // fold the shard journals into the canonical journal so a plain
@@ -459,7 +477,12 @@ fn run_shard(
                             }
                             in_flight = None;
                         }
-                        "done" => got_done = true,
+                        "done" => {
+                            got_done = true;
+                            if let Some(s) = frame.get("stats") {
+                                lock(&state.worker_stats).merge(&EvalStats::from_json(s));
+                            }
+                        }
                         "fatal" => {
                             // the worker could not even build the job
                             // list (bad task/model spec): fail the
@@ -654,11 +677,21 @@ pub fn worker_main() -> anyhow::Result<i32> {
         task: None,
         key_filter: Some(keys),
         progress: Some(stdout_sink()),
+        cache_dir: header
+            .get("cache_dir")
+            .and_then(|v| v.as_str())
+            .map(PathBuf::from),
+        cache_bytes: header.opt_usize("cache_bytes", 0) as u64,
+        worker_stats: None,
     };
-    match dispatch(&task, &params, &cfg) {
+    let ectx = ectx_of(&params, &cfg);
+    match dispatch(&task, &params, &cfg, &ectx) {
         Ok(()) => {
             let mut f = Json::obj();
             f.set("ev", Json::Str("done".into()));
+            // report this process's cache counters so the supervisor
+            // can fold them into the sweep-wide summary
+            f.set("stats", ectx.evaluator.stats().to_json());
             emit_frame(&f);
             Ok(0)
         }
@@ -676,14 +709,25 @@ pub fn worker_main() -> anyhow::Result<i32> {
 // task registry
 // ---------------------------------------------------------------------
 
-fn ectx_of(p: &Json) -> EvalCtx {
+fn ectx_of(p: &Json, cfg: &SweepConfig) -> EvalCtx {
     let mut sim = SimOptions::default();
     if let Some(t) = p.get("postproc").and_then(|v| v.as_usize()) {
         if t > 0 {
             sim.postproc_throughput = t;
         }
     }
-    EvalCtx::new(sim)
+    match &cfg.cache_dir {
+        Some(dir) => match DiskStore::open(dir, cfg.cache_bytes) {
+            Ok(store) => EvalCtx::with_disk(sim, Arc::new(store)),
+            Err(e) => {
+                // an unusable store must not fail the sweep; fall back
+                // to the process-local memory cache
+                eprintln!("warning: disk cache at {} disabled: {e:#}", dir.display());
+                EvalCtx::new(sim)
+            }
+        },
+        None => EvalCtx::new(sim),
+    }
 }
 
 fn f64s(p: &Json, key: &str, default: &[f64]) -> Vec<f64> {
@@ -705,7 +749,7 @@ fn trio() -> (Network, Network, Network) {
 /// Every sub-sweep the CLI can launch in process mode has an entry
 /// here; the job *keys* double as the contract between both sides, so
 /// a worker rebuilds exactly the job list the supervisor partitioned.
-fn dispatch(task: &str, p: &Json, cfg: &SweepConfig) -> anyhow::Result<()> {
+fn dispatch(task: &str, p: &Json, cfg: &SweepConfig, ectx: &EvalCtx) -> anyhow::Result<()> {
     use super::{
         ablation_study, executor, fault_study, input_study, mapping_study, search,
         sparsity_study,
@@ -720,42 +764,42 @@ fn dispatch(task: &str, p: &Json, cfg: &SweepConfig) -> anyhow::Result<()> {
         "fig8" => {
             let net = load_net(p.opt_str("model", "resnet50"))?;
             let ratios = f64s(p, "ratios", &sparsity_study::RATIOS);
-            sparsity_study::run_fig8_robust(&net, &ratios, &ectx_of(p), cfg)?;
+            sparsity_study::run_fig8_robust(&net, &ratios, ectx, cfg)?;
         }
         "fig9a" => {
             let net = load_net(p.opt_str("model", "resnet50"))?;
-            sparsity_study::run_fig9a_robust(&net, &ectx_of(p), cfg)?;
+            sparsity_study::run_fig9a_robust(&net, ectx, cfg)?;
         }
         "fig9b" => {
             let (r50, v16, mb) = trio();
-            sparsity_study::run_fig9b_robust(&[&r50, &v16, &mb], &ectx_of(p), cfg)?;
+            sparsity_study::run_fig9b_robust(&[&r50, &v16, &mb], ectx, cfg)?;
         }
         "fig10-dense" => {
             let (r50, v16, mb) = trio();
             let zero_frac = p.opt_f64("zero_frac", 0.55);
-            input_study::run_dense_models_robust(&[&r50, &v16, &mb], zero_frac, &ectx_of(p), cfg)?;
+            input_study::run_dense_models_robust(&[&r50, &v16, &mb], zero_frac, ectx, cfg)?;
         }
         "fig10-pattern" => {
             let net = load_net(p.opt_str("model", "resnet50"))?;
-            input_study::run_weight_patterns_robust(&net, &ectx_of(p), cfg)?;
+            input_study::run_weight_patterns_robust(&net, ectx, cfg)?;
         }
         "fig10-ratio" => {
             let net = load_net(p.opt_str("model", "resnet50"))?;
             let ratios = f64s(p, "ratios", &[0.5, 0.6, 0.7, 0.8, 0.9]);
-            input_study::run_ratio_sweep_robust(&net, &ratios, &ectx_of(p), cfg)?;
+            input_study::run_ratio_sweep_robust(&net, &ratios, ectx, cfg)?;
         }
         "fig11" => {
             let r50 = zoo::resnet50(32, 100);
             let v16 = zoo::vgg16(32, 100);
-            mapping_study::run_fig11_robust(&[&r50, &v16], &ectx_of(p), cfg)?;
+            mapping_study::run_fig11_robust(&[&r50, &v16], ectx, cfg)?;
         }
         "fig12" => {
             let net = load_net(p.opt_str("model", "resnet50"))?;
-            mapping_study::run_fig12_robust(&net, &ectx_of(p), cfg)?;
+            mapping_study::run_fig12_robust(&net, ectx, cfg)?;
         }
         "ablation" => {
             let net = load_net(p.opt_str("model", "resnet_mini"))?;
-            ablation_study::run_all_robust(&net, &ectx_of(p), cfg)?;
+            ablation_study::run_all_robust(&net, ectx, cfg)?;
         }
         "faults" => {
             let arch = load_arch(p.req_str("arch")?)?;
@@ -776,7 +820,7 @@ fn dispatch(task: &str, p: &Json, cfg: &SweepConfig) -> anyhow::Result<()> {
                 &rates,
                 spatial,
                 seed,
-                &ectx_of(p),
+                ectx,
                 cfg,
             )?;
         }
@@ -788,7 +832,7 @@ fn dispatch(task: &str, p: &Json, cfg: &SweepConfig) -> anyhow::Result<()> {
                 min_utilization: p.get("min_util").and_then(|v| v.as_f64()),
             };
             let ratios = f64s(p, "ratios", &[0.5, 0.7, 0.8, 0.9]);
-            search::search_robust(&net, n_macros, &ratios, cons, &ectx_of(p), cfg)?;
+            search::search_robust(&net, n_macros, &ratios, cons, ectx, cfg)?;
         }
         other => anyhow::bail!("unknown worker task `{other}`"),
     }

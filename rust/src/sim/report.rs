@@ -3,12 +3,13 @@
 
 use super::access::Counters;
 use super::energy::EnergyBreakdown;
+use crate::eval::cache::StageHit;
 use crate::mapping::planner::FaultPlanSummary;
 use crate::util::table::{fmt_cycles, fmt_energy_pj, Table};
 use crate::workload::op::OpId;
 
-/// Which pipeline stages were served from the evaluator's artifact
-/// cache when this report was produced. Stamped by
+/// Where each pipeline stage's artifact came from when this report was
+/// produced (memory cache, disk store, or recomputed). Stamped by
 /// [`crate::eval::Evaluator::evaluate`]; `None` on reports from a
 /// direct `simulate()` call. Provenance only — excluded from
 /// [`SimReport::content_digest`], so cached and fresh evaluations of
@@ -16,11 +17,11 @@ use crate::workload::op::OpId;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct CacheNote {
     /// `None` when the scenario had no prune stage to run.
-    pub prune_hit: Option<bool>,
-    pub mapping_hit: bool,
+    pub prune_hit: Option<StageHit>,
+    pub mapping_hit: StageHit,
     /// `None` when the scenario had no profile stage to run.
-    pub profiles_hit: Option<bool>,
-    pub sim_hit: bool,
+    pub profiles_hit: Option<StageHit>,
+    pub sim_hit: StageHit,
 }
 
 /// Per-op simulation detail.
@@ -211,8 +212,8 @@ mod tests {
         let a = dummy(100, 10.0);
         let mut b = a.clone();
         b.cache = Some(CacheNote {
-            mapping_hit: true,
-            sim_hit: true,
+            mapping_hit: StageHit::Memory,
+            sim_hit: StageHit::Disk,
             ..Default::default()
         });
         assert_eq!(a.content_digest(), b.content_digest());

@@ -167,6 +167,36 @@ impl BitVec {
         bh != 0 && self.words[wh] & tail_mask != 0
     }
 
+    /// The backing `u64` words (tail bits beyond `len` are zero). Raw
+    /// view used by the disk-cache serializer (`eval::serial`).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild a vector from its raw parts, validating the word count
+    /// and that no bit beyond `len` is set (a corrupt serialized entry
+    /// must fail loudly rather than yield a vector whose `count_ones`
+    /// disagrees with its contents).
+    pub fn from_raw(len: usize, words: Vec<u64>) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            words.len() == len.div_ceil(64),
+            "bit vector of length {len} needs {} words, got {}",
+            len.div_ceil(64),
+            words.len()
+        );
+        let tail = len % 64;
+        if tail != 0 {
+            if let Some(&last) = words.last() {
+                anyhow::ensure!(
+                    last & !((1u64 << tail) - 1) == 0,
+                    "bit vector has bits set beyond its length {len}"
+                );
+            }
+        }
+        Ok(Self { len, words })
+    }
+
     /// Iterate over set-bit indices.
     pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
         self.words.iter().enumerate().flat_map(|(wi, &w)| {
@@ -217,6 +247,27 @@ impl BitMatrix {
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
+    }
+
+    /// The row-major backing bit vector. Raw view used by the
+    /// disk-cache serializer (`eval::serial`).
+    #[inline]
+    pub fn bit_vec(&self) -> &BitVec {
+        &self.bits
+    }
+
+    /// Rebuild a matrix from its raw parts, validating that the bit
+    /// vector's length matches the geometry.
+    pub fn from_raw(rows: usize, cols: usize, bits: BitVec) -> anyhow::Result<Self> {
+        let n = rows
+            .checked_mul(cols)
+            .ok_or_else(|| anyhow::anyhow!("bit matrix {rows}x{cols} overflows"))?;
+        anyhow::ensure!(
+            bits.len() == n,
+            "bit matrix {rows}x{cols} needs {n} bits, got {}",
+            bits.len()
+        );
+        Ok(Self { rows, cols, bits })
     }
 
     #[inline]

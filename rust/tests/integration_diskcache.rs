@@ -1,0 +1,191 @@
+//! Integration: the persistent `--cache-dir` artifact store survives
+//! process boundaries — a second evaluator (or a second *process*)
+//! pointed at the same directory restores every unchanged stage from
+//! disk instead of recomputing, a schema bump invalidates everything,
+//! and the store never exceeds its byte bound or serves a corrupted
+//! entry.
+
+use ciminus::eval::diskcache::{DiskStore, Stage};
+use ciminus::eval::hash::HASH_SCHEMA_VERSION;
+use ciminus::eval::{Evaluator, Scenario};
+use ciminus::hw::presets;
+use ciminus::sparsity::flexblock::FlexBlock;
+use ciminus::util::proptest::{check, ensure, ensure_eq};
+use ciminus::workload::zoo;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const BIN: &str = env!("CARGO_BIN_EXE_ciminus");
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "ciminus-diskcache-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn scenario() -> Scenario {
+    let arch = presets::usecase_arch(4, (2, 2));
+    let bits = arch.input_bits;
+    Scenario::new(arch, zoo::resnet_mini())
+        .prune_uniform(&FlexBlock::hybrid(2, 16, 0.8))
+        .synthetic_profiles(bits, 0.55, 0xE7A1)
+}
+
+/// Total bytes of real entries currently on disk under a store root.
+fn disk_usage(root: &Path) -> u64 {
+    let mut total = 0;
+    for stage in Stage::ALL {
+        if let Ok(dir) = std::fs::read_dir(root.join(stage.dir())) {
+            for e in dir.flatten() {
+                total += e.metadata().map(|m| m.len()).unwrap_or(0);
+            }
+        }
+    }
+    total
+}
+
+#[test]
+fn second_evaluator_restores_everything_from_disk() {
+    let dir = tmp_dir("restore");
+    let s = scenario();
+    let first = Evaluator::with_disk(Arc::new(DiskStore::open(&dir, 0).unwrap()));
+    let rep_a = first.evaluate(&s).unwrap();
+    assert!(first.stats().mapping.misses > 0, "first run computes");
+    // a brand-new store handle over the same directory — nothing in
+    // memory, everything restored from disk
+    let second = Evaluator::with_disk(Arc::new(DiskStore::open(&dir, 0).unwrap()));
+    let rep_b = second.evaluate(&s).unwrap();
+    let stats = second.stats();
+    assert_eq!(stats.mapping.misses, 0, "nothing replans: {stats}");
+    assert_eq!(stats.sim.misses, 0, "nothing resimulates: {stats}");
+    assert!(stats.total_disk_hits() > 0, "{stats}");
+    assert_eq!(rep_a.content_digest(), rep_b.content_digest());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn schema_bump_invalidates_the_whole_store() {
+    let dir = tmp_dir("schema");
+    let s = scenario();
+    let old = Evaluator::with_disk(Arc::new(
+        DiskStore::open_with_schema(&dir, 0, HASH_SCHEMA_VERSION).unwrap(),
+    ));
+    old.evaluate(&s).unwrap();
+    // same directory, bumped schema: the store namespaces itself under
+    // a new versioned root, so every lookup is a clean miss
+    let bumped = Evaluator::with_disk(Arc::new(
+        DiskStore::open_with_schema(&dir, 0, HASH_SCHEMA_VERSION + 1).unwrap(),
+    ));
+    bumped.evaluate(&s).unwrap();
+    let stats = bumped.stats();
+    assert_eq!(stats.total_disk_hits(), 0, "no cross-schema restores: {stats}");
+    assert!(stats.mapping.misses > 0, "everything recomputes: {stats}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn prop_gc_never_leaves_store_over_its_byte_bound() {
+    check("gc_byte_bound", 16, 0xD15C, |g| {
+        let bound = *g.choose(&[256u64, 1024, 4096]);
+        let dir = tmp_dir(&format!("bound-{}", g.case));
+        let store = DiskStore::open(&dir, bound).unwrap();
+        let n = g.usize_in(1, 12);
+        for i in 0..n {
+            let payload: Vec<u8> = vec![0xAB; g.usize_in(0, 2000)];
+            store.put(*g.choose(&Stage::ALL), i as u128, &payload);
+        }
+        store.gc().map_err(|e| format!("gc failed: {e:#}"))?;
+        let used = disk_usage(store.root());
+        let _ = std::fs::remove_dir_all(&dir);
+        ensure(
+            used <= bound,
+            format!("{used} bytes on disk exceeds the {bound}-byte bound"),
+        )
+    });
+}
+
+#[test]
+fn prop_corrupted_or_truncated_entries_are_always_misses() {
+    check("corruption_is_a_miss", 32, 0xBADC, |g| {
+        let dir = tmp_dir(&format!("corrupt-{}", g.case));
+        let store = DiskStore::open(&dir, 0).unwrap();
+        let stage = *g.choose(&Stage::ALL);
+        let payload: Vec<u8> = (0..g.usize_in(1, 512)).map(|i| i as u8).collect();
+        store.put(stage, 42, &payload);
+        let path = std::fs::read_dir(store.root().join(stage.dir()))
+            .ok()
+            .and_then(|mut d| d.next())
+            .and_then(|e| e.ok())
+            .map(|e| e.path())
+            .ok_or("entry file not written")?;
+        let mut raw = std::fs::read(&path).map_err(|e| e.to_string())?;
+        if g.bool_with(0.5) {
+            // flip one byte anywhere — header fields and payload alike
+            let at = g.usize_in(0, raw.len() - 1);
+            raw[at] ^= 0xFF;
+        } else {
+            // tear the file at an arbitrary point short of its full length
+            raw.truncate(g.usize_in(0, raw.len() - 1));
+        }
+        std::fs::write(&path, &raw).map_err(|e| e.to_string())?;
+        let got: Option<Vec<u8>> = store.get(stage, 42);
+        let gone = !path.exists();
+        let _ = std::fs::remove_dir_all(&dir);
+        ensure_eq(got, None, "a damaged entry must read as a miss")?;
+        ensure(gone, "a damaged entry must be deleted on first read")
+    });
+}
+
+/// End-to-end: two *process-isolated* sweeps over one shared
+/// `--cache-dir`. The second run restores every stage from disk (zero
+/// replans) and the workers' counters flow back over the frame
+/// protocol into the supervisor's `artifact cache:` summary.
+#[test]
+fn process_sweep_warm_cache_replans_nothing() {
+    let dir = tmp_dir("process");
+    let run = || {
+        std::process::Command::new(BIN)
+            .args([
+                "faults",
+                "--model",
+                "resnet_mini",
+                "--arch",
+                "usecase4",
+                "--rates",
+                "0,0.05",
+                "--isolation",
+                "process",
+                "--shards",
+                "2",
+                "--cache-dir",
+            ])
+            .arg(&dir)
+            .output()
+            .expect("spawning ciminus")
+    };
+    let cold = run();
+    assert!(cold.status.success(), "cold run failed: {cold:?}");
+    let warm = run();
+    assert!(warm.status.success(), "warm run failed: {warm:?}");
+    let stderr = String::from_utf8_lossy(&warm.stderr).into_owned();
+    let line = stderr
+        .lines()
+        .find(|l| l.contains("artifact cache:"))
+        .unwrap_or_else(|| panic!("no artifact-cache summary in stderr:\n{stderr}"));
+    assert!(
+        line.contains(", 0 replans"),
+        "warm run must not replan anything: {line}"
+    );
+    let head = &line[..line.find(" disk hits").unwrap_or_else(|| panic!("no disk-hit count: {line}"))];
+    let hits: u64 = head
+        .rsplit(' ')
+        .next()
+        .and_then(|t| t.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable disk-hit count: {line}"));
+    assert!(hits > 0, "warm run must restore from disk: {line}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -29,8 +29,8 @@ fn cached_and_fresh_evaluations_are_bit_identical() {
     assert_eq!(first.content_digest(), cached.content_digest());
     assert_eq!(first.content_digest(), fresh.content_digest());
     // only the cache-provenance note differs between the runs
-    assert!(!first.cache.unwrap().sim_hit);
-    assert!(cached.cache.unwrap().sim_hit);
+    assert!(!first.cache.unwrap().sim_hit.hit());
+    assert!(cached.cache.unwrap().sim_hit.hit());
     let stats = ev.stats();
     assert_eq!(stats.sim.misses, 1, "{stats}");
     assert_eq!(stats.sim.hits, 1, "{stats}");
@@ -55,8 +55,8 @@ fn sim_only_change_replans_nothing() {
     assert_eq!(stats.prune.misses, 1, "{stats}");
     assert_eq!(stats.sim.misses, 2, "different SimOptions resimulate: {stats}");
     let note = rep.cache.unwrap();
-    assert!(note.mapping_hit);
-    assert!(!note.sim_hit);
+    assert!(note.mapping_hit.hit());
+    assert!(!note.sim_hit.hit());
 }
 
 #[test]

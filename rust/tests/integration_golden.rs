@@ -1,0 +1,125 @@
+//! Golden-report regression suite: [`SimReport::content_digest`]s for a
+//! small dense/sparse × skip/no-skip matrix are snapshotted under
+//! `tests/golden/` and must stay bit-identical across fresh,
+//! warm-memory and warm-disk evaluations.
+//!
+//! Regenerate the snapshot after an intentional model change with
+//! `UPDATE_GOLDEN=1 cargo test --test integration_golden` and commit
+//! the updated `tests/golden/sim_digests.json`.
+
+use ciminus::eval::cache::StageHit;
+use ciminus::eval::diskcache::DiskStore;
+use ciminus::eval::{Evaluator, Scenario};
+use ciminus::hw::presets;
+use ciminus::sparsity::flexblock::FlexBlock;
+use ciminus::util::json::Json;
+use ciminus::workload::zoo;
+use std::path::Path;
+use std::sync::Arc;
+
+const SNAPSHOT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/sim_digests.json");
+
+/// The golden matrix: small enough for tier-1, wide enough to cover
+/// the dense/sparse weight paths × input-skip on/off planning paths.
+const MATRIX: [&str; 4] = ["dense-skip", "dense-noskip", "sparse-skip", "sparse-noskip"];
+
+fn scenario(id: &str) -> Scenario {
+    let mut arch = presets::usecase_arch(4, (2, 2));
+    let bits = arch.input_bits;
+    let skip = !id.ends_with("-noskip");
+    if !skip {
+        arch.sparsity.input_skipping = false;
+    }
+    let mut s = Scenario::new(arch, zoo::resnet_mini());
+    if id.starts_with("sparse") {
+        s = s.prune_uniform(&FlexBlock::hybrid(2, 16, 0.8));
+    }
+    if skip {
+        s = s.synthetic_profiles(bits, 0.55, 0xE7A1);
+    }
+    s
+}
+
+fn digests() -> Vec<(String, String)> {
+    let ev = Evaluator::new();
+    MATRIX
+        .iter()
+        .map(|id| {
+            let rep = ev.evaluate(&scenario(id)).unwrap();
+            (id.to_string(), format!("{:032x}", rep.content_digest()))
+        })
+        .collect()
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "ciminus-golden-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The one test that owns snapshot I/O: bootstraps the snapshot when
+/// it is missing (or `UPDATE_GOLDEN=1`), otherwise asserts the current
+/// digests match it exactly.
+#[test]
+fn digests_match_golden_snapshot() {
+    let fresh = digests();
+    let path = Path::new(SNAPSHOT);
+    let update = std::env::var("UPDATE_GOLDEN").map(|v| v == "1").unwrap_or(false);
+    if update || !path.exists() {
+        let mut j = Json::obj();
+        for (id, d) in &fresh {
+            j.set(id, Json::Str(d.clone()));
+        }
+        std::fs::write(path, format!("{}\n", j.pretty())).unwrap();
+        eprintln!(
+            "golden: wrote {} digest(s) to {} — commit the snapshot",
+            fresh.len(),
+            path.display()
+        );
+        return;
+    }
+    let j = Json::parse_file(path).unwrap();
+    for (id, d) in &fresh {
+        let want = j.get(id).and_then(|v| v.as_str()).unwrap_or_else(|| {
+            panic!("snapshot missing entry `{id}` — regenerate with UPDATE_GOLDEN=1")
+        });
+        assert_eq!(
+            d.as_str(),
+            want,
+            "content digest for `{id}` drifted from tests/golden/sim_digests.json; \
+             if the model change is intentional, regenerate with UPDATE_GOLDEN=1"
+        );
+    }
+}
+
+/// Digests are invariant to *where* each stage artifact came from:
+/// recomputed, memory-cached, or restored from the disk store.
+#[test]
+fn memory_and_disk_cached_reports_are_bit_identical() {
+    let dir = tmp_dir("identity");
+    let store = Arc::new(DiskStore::open(&dir, 0).unwrap());
+    let warm = Evaluator::with_disk(store.clone());
+    for id in MATRIX {
+        let s = scenario(id);
+        let fresh = Evaluator::new().evaluate(&s).unwrap();
+        // computes and spills every stage to the shared store
+        let first = warm.evaluate(&s).unwrap();
+        // same evaluator again: pure memory hits
+        let memory = warm.evaluate(&s).unwrap();
+        // fresh memory caches, shared disk: restores instead of computing
+        let disk = Evaluator::with_disk(store.clone()).evaluate(&s).unwrap();
+        assert_eq!(fresh.content_digest(), first.content_digest(), "{id}: fresh vs spill");
+        assert_eq!(fresh.content_digest(), memory.content_digest(), "{id}: fresh vs memory");
+        assert_eq!(fresh.content_digest(), disk.content_digest(), "{id}: fresh vs disk");
+        // provenance notes record where each report actually came from
+        assert!(!first.cache.unwrap().sim_hit.hit(), "{id}: first run computes");
+        assert_eq!(memory.cache.unwrap().sim_hit, StageHit::Memory, "{id}");
+        assert_eq!(disk.cache.unwrap().sim_hit, StageHit::Disk, "{id}");
+        assert_eq!(disk.cache.unwrap().mapping_hit, StageHit::Disk, "{id}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
